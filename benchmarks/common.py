@@ -1,0 +1,27 @@
+"""Shared helpers for the benchmark suite.
+
+Every benchmark module exposes ``rows() -> list[(name, us_per_call, derived)]``
+where ``us_per_call`` is the measured wall time of producing the quantity and
+``derived`` is the benchmark's headline number (a count, byte volume, ms, …).
+``benchmarks.run`` aggregates all modules into one CSV.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+Row = Tuple[str, float, str]
+
+
+def timed(fn: Callable, repeat: int = 5):
+    """Return (result, mean_us)."""
+    fn()                                    # warmup / trace
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn()
+    us = (time.perf_counter() - t0) / repeat * 1e6
+    return out, us
+
+
+def fmt_bytes(b: float) -> str:
+    return f"{b / 2**20:.2f}MiB"

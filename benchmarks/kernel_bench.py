@@ -1,0 +1,64 @@
+"""Kernel microbenchmarks: jnp reference path wall time on CPU (the Pallas
+kernels target TPU; interpret mode is a correctness tool, not a perf number,
+so the CSV reports the reference path and marks the kernel's target)."""
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import timed
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.rmsnorm.ref import rms_norm_ref
+from repro.kernels.rwkv6_scan.ref import wkv6_ref
+
+
+def rows():
+    rng = np.random.default_rng(0)
+    out = []
+
+    q = jnp.asarray(rng.standard_normal((1, 512, 8, 64)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 512, 2, 64)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 512, 2, 64)), jnp.float32)
+    f = jax.jit(flash_attention_ref)
+    _, us = timed(lambda: jax.block_until_ready(f(q, k, v)))
+    out.append(("kernel/flash_attention_ref/512x8x64", us,
+                "pallas_target=tpu_vmem_blocked"))
+
+    qd = jnp.asarray(rng.standard_normal((8, 8, 64)), jnp.float32)
+    kd = jnp.asarray(rng.standard_normal((8, 4096, 2, 64)), jnp.float32)
+    vd = jnp.asarray(rng.standard_normal((8, 4096, 2, 64)), jnp.float32)
+    valid = jnp.arange(4096) < 3000
+    fd = jax.jit(decode_attention_ref)
+    _, us = timed(lambda: jax.block_until_ready(fd(qd, kd, vd, valid)))
+    out.append(("kernel/decode_attention_ref/b8_w4096", us,
+                "pallas_target=flash_decode_seq_blocks"))
+
+    x = jnp.asarray(rng.standard_normal((4096, 2048)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((2048,)), jnp.float32)
+    fr = jax.jit(rms_norm_ref)
+    _, us = timed(lambda: jax.block_until_ready(fr(x, w)))
+    out.append(("kernel/rmsnorm_ref/4096x2048", us,
+                "pallas_target=row_blocked_fused"))
+
+    r = jnp.asarray(rng.standard_normal((2, 256, 8, 64)) * 0.5, jnp.float32)
+    kk = jnp.asarray(rng.standard_normal((2, 256, 8, 64)) * 0.5, jnp.float32)
+    vv = jnp.asarray(rng.standard_normal((2, 256, 8, 64)) * 0.5, jnp.float32)
+    ww = jnp.asarray(rng.uniform(0.9, 0.999, (2, 256, 8, 64)), jnp.float32)
+    u = jnp.asarray(rng.standard_normal((8, 64)) * 0.3, jnp.float32)
+    st = jnp.zeros((2, 8, 64, 64), jnp.float32)
+    fw = jax.jit(wkv6_ref)
+    _, us = timed(lambda: jax.block_until_ready(fw(r, kk, vv, ww, u, st)[0]))
+    out.append(("kernel/wkv6_ref/b2_s256_h8", us,
+                "pallas_target=vmem_state_chunked_scan"))
+    return out
+
+
+def main():
+    print("Kernel microbenchmarks (CPU reference path)")
+    for r in rows():
+        print(f"  {r[0]:44s} {r[1]:10.1f} us  {r[2]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""§Perf hillclimb results: baseline vs optimized variants per selected pair
+(reads the archived dry-run records; see EXPERIMENTS.md §Perf for the
+hypothesis log)."""
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+PAIRS = [
+    ("rwkv6-7b", "train_4k",
+     ["baseline", "rwkv_chunked", "rwkv_chunked_remat", "remat",
+      "rwkv_chunked_c32", "mesh64x4", "mesh64x4-rwkv_chunked_remat"]),
+    ("mixtral-8x22b", "prefill_32k",
+     ["baseline", "moe_local", "moe_local_fsdp", "moe_local_fsdp_chunked"]),
+    ("granite-8b", "prefill_32k",
+     ["baseline", "chunked_attn", "chunked_attn_c4096"]),
+    ("hymba-1.5b", "prefill_32k",
+     ["baseline", "rwkv_chunked", "ssm_attn_chunked"]),
+    ("hymba-1.5b", "train_4k", ["baseline", "rwkv_chunked"]),
+    ("rwkv6-7b", "prefill_32k", ["baseline", "rwkv_chunked"]),
+    ("deepseek-moe-16b", "prefill_32k",
+     ["baseline", "moe_local_fsdp_chunked"]),
+]
+
+
+def _load(arch, shape, variant):
+    suffix = "" if variant == "baseline" else f"__{variant}"
+    path = os.path.join(RESULTS, f"{arch}__{shape}__pod16x16{suffix}.json")
+    if not os.path.exists(path):
+        return None
+    r = json.load(open(path))
+    return r if r.get("status") == "ok" else None
+
+
+def rows():
+    out = []
+    for arch, shape, variants in PAIRS:
+        base = _load(arch, shape, "baseline")
+        for v in variants:
+            r = _load(arch, shape, v)
+            if r is None:
+                continue
+            rf = r["roofline"]
+            dom_val = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+            speedup = ""
+            if base and v != "baseline":
+                b = base["roofline"]
+                bdom = max(b["compute_s"], b["memory_s"], b["collective_s"])
+                speedup = f";bound_speedup={bdom/dom_val:.2f}x"
+            out.append((f"perf/{arch}/{shape}/{v}", dom_val * 1e6,
+                        f"memory_s={rf['memory_s']:.2f};"
+                        f"collective_s={rf['collective_s']:.2f};"
+                        f"GB_dev={r['bytes_per_device']/2**30:.1f}{speedup}"))
+    return out
+
+
+def main():
+    print("§Perf hillclimbs — roofline bound per variant")
+    for r in rows():
+        print(f"  {r[0]:56s} {r[2]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Benchmark aggregator: one module per paper table/figure + assigned-scope
+benches.  Prints ``name,us_per_call,derived`` CSV."""
+from __future__ import annotations
+
+import sys
+import traceback
+
+MODULES = [
+    "benchmarks.table3_tp",
+    "benchmarks.table4_models",
+    "benchmarks.table5_pp",
+    "benchmarks.table6_hybrid",
+    "benchmarks.fig6_volume",
+    "benchmarks.fig7_scaling",
+    "benchmarks.fig8_9_10_slo",
+    "benchmarks.fig4_validation",
+    "benchmarks.planner_bench",
+    "benchmarks.kernel_bench",
+    "benchmarks.roofline_table",
+    "benchmarks.perf_variants",
+]
+
+
+def main() -> None:
+    import importlib
+    print("name,us_per_call,derived")
+    failures = []
+    for modname in MODULES:
+        try:
+            mod = importlib.import_module(modname)
+            for name, us, derived in mod.rows():
+                print(f"{name},{us:.2f},{derived}")
+        except Exception:
+            failures.append(modname)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        print(f"# FAILED modules: {failures}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""The paper, end-to-end: predict communication for a deployment, compare
+parallelism layouts, and get a recommendation — Sections III + V-C as an API.
+
+    PYTHONPATH=src python examples/comm_study.py --arch llama31-8b --world 8
+"""
+import argparse
+
+from repro.configs import get_config
+from repro.core import commodel as cm
+from repro.core.planner import plan
+from repro.core.slo import predict_slo
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama31-8b")
+    ap.add_argument("--world", type=int, default=8)
+    ap.add_argument("--prefill", type=int, default=128)
+    ap.add_argument("--decode", type=int, default=512)
+    args = ap.parse_args()
+    cfg = get_config(args.arch)
+
+    print(f"=== communication breakdown, {cfg.name}, "
+          f"S_p={args.prefill} S_d={args.decode}")
+    for name, t, p in [("TP", args.world, 1), ("PP", 1, args.world),
+                       ("hybrid", 2, args.world // 2)]:
+        ops = cm.comm_ops_for(cfg, args.prefill, args.decode, t, p)
+        vol = cm.total_volume(ops)
+        print(f"\n{name} (t={t}, p={p}): wire volume {vol/2**20:.1f} MiB")
+        for o in ops:
+            print(f"  {o.phase:8s} {o.collective:10s} count={o.count:7d} "
+                  f"shape={list(o.shape)}")
+
+    print("\n=== SLO predictions (H100-node profile)")
+    for name, t, p in [("TP", args.world, 1), ("PP", 1, args.world),
+                       ("hybrid", 2, args.world // 2)]:
+        r = predict_slo(cfg, args.prefill, args.decode, t=t, p=p)
+        print(f"  {name:7s} {r.row()}")
+
+    print("\n=== planner recommendation (objective=e2e)")
+    for c in plan(cfg, args.world, args.prefill, args.decode)[:3]:
+        print(f"  {c.name:14s} {c.slo.row()}")
+
+
+if __name__ == "__main__":
+    main()

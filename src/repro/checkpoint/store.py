@@ -1,0 +1,60 @@
+"""Sharded-pytree checkpointing without external deps.
+
+Leaves are stored in a single ``.npz`` (path-joined keys) plus a JSON manifest
+carrying the tree structure, dtypes and a step counter.  Arrays are pulled to
+host via jax.device_get (works for sharded global arrays on a live mesh).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Tuple
+
+import numpy as np
+
+import jax
+
+_SEP = "/"
+
+
+def _flatten(tree, prefix=()) -> Dict[str, Any]:
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], prefix + (str(k),)))
+    else:
+        out[_SEP.join(prefix)] = tree
+    return out
+
+
+def _unflatten(flat: Dict[str, Any]):
+    tree: Dict[str, Any] = {}
+    for key, val in flat.items():
+        parts = key.split(_SEP)
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+    return tree
+
+
+def save_checkpoint(path: str, tree, step: int = 0) -> None:
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten(tree)
+    host = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+    np.savez(os.path.join(path, "arrays.npz"), **host)
+    manifest = {"step": step,
+                "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                           for k, v in host.items()}}
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def load_checkpoint(path: str) -> Tuple[Any, int]:
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    with np.load(os.path.join(path, "arrays.npz")) as z:
+        flat = {k: z[k] for k in z.files}
+    for k, meta in manifest["leaves"].items():
+        assert list(flat[k].shape) == meta["shape"], f"shape mismatch at {k}"
+    return _unflatten(flat), manifest["step"]

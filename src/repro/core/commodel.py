@@ -1,0 +1,267 @@
+"""Analytical communication models — the paper's Section III, executable.
+
+Every model returns a list of :class:`CommOp` (collective type, phase, call
+count, per-call message shape, worker count).  Summing wire bytes with the
+paper's NCCL ring correction factors reproduces Eq. 1 (TP), Eq. 2 (PP) and
+Eq. 3–7 (hybrid) exactly; the per-op breakdown reproduces the count/shape
+columns of Tables III–VI.
+
+Accounting conventions (paper Section V):
+  * allreduce wire volume:  2(d-1)/d × message bytes     [ring allreduce]
+  * allgather wire volume:   (d-1)/d × gathered bytes
+  * gather / p2p:            1 × message bytes
+  * "send" and "recv" are both reported (the paper's profiler counts each
+    direction, Table V) but only sends are charged in volume (Eq. 2).
+  * per-link p2p carries TWO tensors per hop (hidden states + residual —
+    the paper's "KV factor", Table V pattern (p-1)·2·…).
+
+Beyond-paper extensions (flagged, OFF for paper-parity):
+  * batch > 1 serving (the paper is single-request),
+  * MoE expert-parallel all-to-all (paper §VII future work),
+  * SSM/RWKV state hand-off between pipeline stages,
+  * gather_mode="allgather" — XLA has no gather-to-root collective, so the
+    TPU engine all-gathers the vocab shards instead (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Tuple
+
+from repro.config.base import ModelConfig
+
+_WIRE_FACTOR = {
+    "allreduce": lambda d: 2.0 * (d - 1) / d,
+    "allgather": lambda d: (d - 1) / d,
+    "reducescatter": lambda d: (d - 1) / d,
+    "gather": lambda d: 1.0,
+    "alltoall": lambda d: (d - 1) / d,
+    "send": lambda d: 1.0,
+    "recv": lambda d: 0.0,   # same bytes as the matching send (not double-charged)
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class CommOp:
+    """One homogeneous class of collective calls."""
+
+    collective: str              # allreduce|allgather|gather|send|recv|alltoall
+    phase: str                   # "prefill" | "decode"
+    count: int                   # number of calls
+    shape: Tuple[int, ...]       # per-call message shape (elements)
+    workers: int                 # participating workers d
+    dtype_bytes: int = 2         # FP16/BF16 throughout the paper
+
+    @property
+    def elements(self) -> int:
+        return math.prod(self.shape)
+
+    @property
+    def msg_bytes(self) -> int:
+        """Raw bytes of one message (the paper's 'Message Size' column)."""
+        return self.elements * self.dtype_bytes
+
+    @property
+    def total_msg_bytes(self) -> int:
+        return self.count * self.msg_bytes
+
+    @property
+    def wire_bytes(self) -> float:
+        """Network volume with the paper's correction factor applied."""
+        return self.total_msg_bytes * _WIRE_FACTOR[self.collective](self.workers)
+
+
+def total_volume(ops: List[CommOp], phase: Optional[str] = None) -> float:
+    return sum(o.wire_bytes for o in ops if phase in (None, o.phase))
+
+
+def by_collective(ops: List[CommOp]):
+    out = {}
+    for o in ops:
+        out.setdefault(o.collective, []).append(o)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Eq. 1 — Tensor parallelism
+# ---------------------------------------------------------------------------
+
+
+def tp_comm_ops(cfg: ModelConfig, s_p: int, s_d: int, t: int, *,
+                b: int = 2, batch: int = 1,
+                gather_mode: str = "gather") -> List[CommOp]:
+    """Pure TP: (2L+1) allreduce per forward pass + per-token logit gather.
+
+    The 2L comes from the two row-parallel linears per layer (attention output
+    projection + MLP down-projection); the +1 from the vocab-parallel
+    embedding.  Message rows scale with the tokens processed per pass.
+    """
+    if t <= 1:
+        return []
+    L, h, v = cfg.num_layers, cfg.d_model, cfg.vocab_size
+    n_ar = 2 * L + 1
+    ops = [
+        CommOp("allreduce", "prefill", n_ar, (batch * s_p, h), t, b),
+        CommOp("gather", "prefill", 1, (batch * (v // t),), t, b),
+    ]
+    if s_d > 1:
+        ops += [
+            CommOp("allreduce", "decode", n_ar * (s_d - 1), (batch * 1, h), t, b),
+            CommOp("gather", "decode", s_d - 1, (batch * (v // t),), t, b),
+        ]
+    if gather_mode == "allgather":
+        ops = [dataclasses.replace(
+                   o, collective="allgather",
+                   shape=tuple(list(o.shape[:-1]) + [o.shape[-1] * t]))
+               if o.collective == "gather" else o for o in ops]
+    return ops
+
+
+def v_tp(cfg: ModelConfig, s_p: int, s_d: int, t: int, b: int = 2) -> float:
+    """Eq. 1 in closed form (bytes)."""
+    L, h, v = cfg.num_layers, cfg.d_model, cfg.vocab_size
+    return ((2 * L + 1) * (s_p + s_d - 1) * h * b * 2 * (t - 1) / t
+            + s_d * (v / t) * b)
+
+
+# ---------------------------------------------------------------------------
+# Eq. 2 — Pipeline parallelism
+# ---------------------------------------------------------------------------
+
+
+def pp_comm_ops(cfg: ModelConfig, s_p: int, s_d: int, p: int, *,
+                b: int = 2, batch: int = 1, h_shard: int = 1) -> List[CommOp]:
+    """Pure PP: 2 tensors per link per pass (hidden states + residual)."""
+    if p <= 1:
+        return []
+    h = cfg.d_model // h_shard
+    links = p - 1
+    ops = []
+    for direction in ("send", "recv"):
+        ops.append(CommOp(direction, "prefill", links * 2,
+                          (batch * s_p, h), p, b))
+        if s_d > 1:
+            ops.append(CommOp(direction, "decode", links * 2 * (s_d - 1),
+                              (batch * 1, h), p, b))
+    return ops
+
+
+def v_pp(cfg: ModelConfig, s_p: int, s_d: int, p: int, b: int = 2) -> float:
+    """Eq. 2 in closed form (bytes)."""
+    return (p - 1) * 2 * (s_p + s_d - 1) * cfg.d_model * b
+
+
+# ---------------------------------------------------------------------------
+# Eq. 3–7 — Hybrid TP × PP
+# ---------------------------------------------------------------------------
+
+
+def hybrid_comm_ops(cfg: ModelConfig, s_p: int, s_d: int, t: int, p: int, *,
+                    b: int = 2, batch: int = 1,
+                    gather_mode: str = "gather") -> List[CommOp]:
+    """Hybrid: per-stage allreduce + inter-stage allgather + p2p + gather."""
+    if p <= 1:
+        return tp_comm_ops(cfg, s_p, s_d, t, b=b, batch=batch,
+                           gather_mode=gather_mode)
+    if t <= 1:
+        return pp_comm_ops(cfg, s_p, s_d, p, b=b, batch=batch)
+    L, h, v = cfg.num_layers, cfg.d_model, cfg.vocab_size
+    n_ar = 2 * L // p + 1   # first stage carries the embedding allreduce
+    ops = [
+        CommOp("allreduce", "prefill", n_ar, (batch * s_p, h), t, b),
+        CommOp("allgather", "prefill", 2 * (p - 1), (batch * s_p, h), t, b),
+        CommOp("gather", "prefill", 1, (batch * (v // t),), t, b),
+        CommOp("send", "prefill", (p - 1) * 2, (batch * s_p, h // t), p, b),
+        CommOp("recv", "prefill", (p - 1) * 2, (batch * s_p, h // t), p, b),
+    ]
+    if s_d > 1:
+        d = s_d - 1
+        ops += [
+            CommOp("allreduce", "decode", n_ar * d, (batch * 1, h), t, b),
+            CommOp("allgather", "decode", 2 * (p - 1) * d, (batch * 1, h), t, b),
+            CommOp("gather", "decode", d, (batch * (v // t),), t, b),
+            CommOp("send", "decode", (p - 1) * 2 * d, (batch * 1, h // t), p, b),
+            CommOp("recv", "decode", (p - 1) * 2 * d, (batch * 1, h // t), p, b),
+        ]
+    if gather_mode == "allgather":
+        ops = [dataclasses.replace(
+                   o, collective="allgather",
+                   shape=tuple(list(o.shape[:-1]) + [o.shape[-1] * t]))
+               if o.collective == "gather" else o for o in ops]
+    return ops
+
+
+def v_hybrid_components(cfg: ModelConfig, s_p: int, s_d: int, t: int, p: int,
+                        b: int = 2, include_embedding: bool = True) -> dict:
+    """Eq. 4–7 in closed form (bytes per component)."""
+    L, h, v = cfg.num_layers, cfg.d_model, cfg.vocab_size
+    steps = s_p + s_d - 1
+    v_ar = (2 * L / p) * steps * h * b * 2 * (t - 1) / t
+    if include_embedding:
+        v_ar += steps * h * b * 2 * (t - 1) / t   # first-rank embedding term
+    return {
+        "allreduce": v_ar,
+        "allgather": 2 * (p - 1) * steps * h * b * (t - 1) / t,
+        "gather": s_d * (v / t) * b,
+        "p2p": (p - 1) * 2 * steps * (h / t) * b,
+    }
+
+
+def v_hybrid(cfg: ModelConfig, s_p: int, s_d: int, t: int, p: int,
+             b: int = 2) -> float:
+    """Eq. 3 in closed form (bytes)."""
+    return sum(v_hybrid_components(cfg, s_p, s_d, t, p, b).values())
+
+
+# ---------------------------------------------------------------------------
+# Beyond-paper extensions
+# ---------------------------------------------------------------------------
+
+
+def moe_comm_ops(cfg: ModelConfig, s_p: int, s_d: int, e: int, *,
+                 b: int = 2, batch: int = 1) -> List[CommOp]:
+    """Expert-parallel all-to-all (paper §VII future work).
+
+    Per MoE layer and forward pass: one dispatch and one combine all-to-all;
+    each token is replicated to its top_k experts, so the message carries
+    tokens × top_k rows of h.
+    """
+    if cfg.moe is None or e <= 1:
+        return []
+    L, h, k = cfg.num_layers, cfg.d_model, cfg.moe.top_k
+    ops = [CommOp("alltoall", "prefill", 2 * L, (batch * s_p * k, h), e, b)]
+    if s_d > 1:
+        ops.append(CommOp("alltoall", "decode", 2 * L * (s_d - 1),
+                          (batch * k, h), e, b))
+    return ops
+
+
+def ssm_pp_state_ops(cfg: ModelConfig, s_d: int, p: int, *, b: int = 2,
+                     batch: int = 1) -> List[CommOp]:
+    """RWKV/SSM pipeline hand-off: the recurrent state never moves (it is
+    layer-local), so PP transfers are identical to dense PP — except that an
+    engine migrating a request between stage replicas must ship the state:
+    [H, hs, hs] per layer.  Exposed for capacity planning; zero by default in
+    steady-state serving."""
+    if cfg.ssm is None or p <= 1:
+        return []
+    H, hs = cfg.num_heads, cfg.ssm.head_size
+    per_stage_layers = cfg.num_layers // p
+    return [CommOp("send", "decode", 1,
+                   (batch * per_stage_layers * H, hs, hs), p, 4)]
+
+
+def comm_ops_for(cfg: ModelConfig, s_p: int, s_d: int, t: int = 1, p: int = 1,
+                 e: int = 1, *, b: int = 2, batch: int = 1,
+                 gather_mode: str = "gather") -> List[CommOp]:
+    """Full per-architecture comm prediction: paper terms + extensions.
+
+    Encoder-only architectures have no decode phase (s_d forced to 1); MoE
+    architectures add expert-parallel all-to-all when e > 1.
+    """
+    if not cfg.is_decoder:
+        s_d = 1
+    ops = hybrid_comm_ops(cfg, s_p, s_d, t, p, b=b, batch=batch,
+                          gather_mode=gather_mode)
+    ops += moe_comm_ops(cfg, s_p, s_d, e, b=b, batch=batch)
+    return ops

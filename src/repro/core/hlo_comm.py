@@ -1,0 +1,204 @@
+"""Structural communication profiler: extract collectives from post-SPMD HLO.
+
+This is the TPU/XLA analogue of the paper's PyTorch-profiler NCCL traces: we
+walk ``compiled.as_text()`` (the partitioned, optimized HLO module) and record
+every collective op with its message bytes and participant count.  Unlike a
+sampled kernel trace this is exact — the compiled module *is* the schedule.
+
+Collectives inside ``while`` bodies (e.g. the layer scan) are expanded by the
+loop's ``known_trip_count``, so per-execution call counts match what a
+runtime trace would show.
+
+Conventions (matching core/commodel.py and the paper §V-B):
+  wire bytes:  all-reduce 2(d-1)/d·size, all-gather (d-1)/d·gathered-size,
+               reduce-scatter (d-1)·output-size, all-to-all (d-1)/d·size,
+               collective-permute 1·size.
+Async pairs (``*-start``/``*-done``) are counted once, on the start op.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, Iterable, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_KINDS = {
+    "all-reduce": "allreduce",
+    "all-gather": "allgather",
+    "reduce-scatter": "reducescatter",
+    "all-to-all": "alltoall",
+    "collective-permute": "collectivepermute",
+}
+
+_SHAPE_RE = re.compile(r"\b(%s)\[([\d,]*)\]" % "|".join(_DTYPE_BYTES))
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{(.*?)\}\}?[,)\s]")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_SRC_TGT_RE = re.compile(r"source_target_pairs=\{(.*?)\}\}")
+_COMP_START_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_WHILE_RE = re.compile(r"\bwhile\(.*body=%?([\w\.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count.*?"n"\s*:\s*"(\d+)"')
+_CALL_RE = re.compile(r"\b(?:call|fusion)\(.*?(?:to_apply|calls)=%?([\w\.\-]+)")
+
+
+@dataclasses.dataclass
+class HLOCollective:
+    kind: str                    # canonical collective name
+    out_bytes: int               # bytes moved by one call (result side)
+    group_size: int              # participants d
+    op_name: str = ""
+    count: int = 1               # executions per module run (trip-expanded)
+
+    @property
+    def total_bytes(self) -> int:
+        return self.out_bytes * self.count
+
+    @property
+    def wire_bytes(self) -> float:
+        d = max(self.group_size, 1)
+        if self.kind == "allreduce":
+            f = 2.0 * (d - 1) / d
+        elif self.kind in ("allgather", "alltoall"):
+            f = (d - 1) / d
+        elif self.kind == "reducescatter":
+            f = float(d - 1)     # (d-1)/d × input == (d-1) × output
+        else:
+            f = 1.0              # collective-permute
+        return self.total_bytes * f
+
+
+def _shapes_in(text: str) -> List[int]:
+    sizes = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        sizes.append(n * _DTYPE_BYTES[dt])
+    return sizes
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        first = m.group(1).split("},{")[0].strip("{}")
+        if first:
+            return len(first.split(","))
+    m = _SRC_TGT_RE.search(line)
+    if m and m.group(1):
+        return 2
+    return 1
+
+
+def _parse_collective_line(lhs: str, rhs: str, line: str) -> Optional[HLOCollective]:
+    for opcode, kind in _KINDS.items():
+        is_sync = f" {opcode}(" in " " + rhs
+        is_start = f" {opcode}-start(" in " " + rhs
+        if not (is_sync or is_start):
+            continue
+        result_type = rhs.split(opcode)[0]
+        sizes = _shapes_in(result_type)
+        if not sizes:
+            return None
+        if is_start:
+            # async start result is a tuple (operands..., results..., ctx...)
+            nbytes = min(sizes) if kind == "reducescatter" else max(sizes)
+        else:
+            nbytes = sum(sizes)
+        op_name = lhs.strip()
+        if op_name.startswith("ROOT "):
+            op_name = op_name[5:]
+        return HLOCollective(kind, nbytes, _group_size(line),
+                             op_name.lstrip("%"))
+    return None
+
+
+def _parse_computations(hlo_text: str):
+    """Split the module into computations with their collectives/whiles/calls."""
+    comps: Dict[str, dict] = {}
+    entry = None
+    cur = None
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        m = _COMP_START_RE.match(line.strip())
+        if m and not line.startswith(" "):
+            name = m.group(2)
+            comps[name] = {"colls": [], "whiles": [], "calls": []}
+            cur = name
+            if m.group(1):
+                entry = name
+            continue
+        if cur is None:
+            continue
+        s = line.strip()
+        if s == "}":
+            cur = None
+            continue
+        if "=" not in s:
+            continue
+        lhs, _, rhs = s.partition(" = ")
+        if "-done(" in rhs:
+            continue                       # counted at the matching start
+        coll = _parse_collective_line(lhs, rhs, s)
+        if coll is not None:
+            comps[cur]["colls"].append(coll)
+            continue
+        wm = _WHILE_RE.search(rhs)
+        if wm:
+            tm = _TRIP_RE.search(rhs)
+            trip = int(tm.group(1)) if tm else 1
+            comps[cur]["whiles"].append((wm.group(1), trip))
+            continue
+        cm = _CALL_RE.search(rhs)
+        if cm:
+            comps[cur]["calls"].append(cm.group(1))
+    return comps, entry
+
+
+def parse_hlo_collectives(hlo_text: str) -> List[HLOCollective]:
+    """All collectives per module *execution* (while bodies trip-expanded)."""
+    comps, entry = _parse_computations(hlo_text)
+    if entry is None:
+        entry = next(iter(comps), None)
+    out: List[HLOCollective] = []
+    seen: set = set()
+
+    def visit(name: str, mult: int, depth: int = 0):
+        if name not in comps or depth > 16:
+            return
+        c = comps[name]
+        for coll in c["colls"]:
+            out.append(dataclasses.replace(coll, count=coll.count * mult))
+        for body, trip in c["whiles"]:
+            visit(body, mult * max(trip, 1), depth + 1)
+        for callee in c["calls"]:
+            visit(callee, mult, depth + 1)
+
+    if entry:
+        visit(entry, 1)
+    return out
+
+
+def summarize(colls: Iterable[HLOCollective]) -> Dict[str, dict]:
+    """Aggregate by kind: calls, message bytes, wire bytes."""
+    agg: Dict[str, dict] = defaultdict(lambda: {"count": 0, "msg_bytes": 0,
+                                                "wire_bytes": 0.0})
+    for c in colls:
+        a = agg[c.kind]
+        a["count"] += c.count
+        a["msg_bytes"] += c.total_bytes
+        a["wire_bytes"] += c.wire_bytes
+    return dict(agg)
+
+
+def collective_wire_bytes(hlo_text: str) -> float:
+    """Total wire bytes of one module execution."""
+    return sum(c.wire_bytes for c in parse_hlo_collectives(hlo_text))

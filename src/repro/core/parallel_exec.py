@@ -1,0 +1,407 @@
+"""Explicit TP / PP / hybrid inference engines (paper-faithful schedule).
+
+The production path (runtime/, launch/) relies on GSPMD to place collectives.
+This module instead reproduces the *exact* collective schedule the paper
+profiles in vLLM/Megatron, using shard_map with hand-placed collectives:
+
+  TP   (Section III-A): vocab-parallel embedding psum (+1), per layer one
+       psum after the attention output projection and one after the MLP
+       down-projection (2L), and a logits gather over the vocab shards.
+  PP   (Section III-B): per stage boundary TWO tensors (vLLM ships
+       hidden_states and residual separately — we split the activation into
+       two summands to reproduce the wire pattern) moved by ppermute.
+  TP×PP (Section III-C): per-stage allreduces (2L/p + 1), boundary p2p of
+       the [tokens, h/t] shard, and 2 allgathers to redistribute the
+       received shard among the stage's TP workers.
+
+XLA adaptation (DESIGN.md §2): the paper's NCCL `Gather` of logit shards has
+no XLA equivalent; we all-gather (commodel gather_mode="allgather").
+
+These engines cover the dense llama-family (the paper's subjects).  Layer
+loops are unrolled so every collective appears as a distinct HLO op — the
+per-op count parity with Tables III–VI is asserted in tests/dist/.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config.base import ModelConfig
+from repro.models.layers import apply_rope, decode_cache_mask, gqa_attention, \
+    make_mask, mlp_apply, rms_norm
+
+
+# ---------------------------------------------------------------------------
+# parameter partition specs (shared with Model.init pytrees)
+# ---------------------------------------------------------------------------
+
+
+def tp_param_specs(cfg: ModelConfig, tp_axis: str = "tp",
+                   stage_axis: str = None) -> dict:
+    """PartitionSpecs for a Model.init(...) pytree under explicit TP (+PP).
+
+    Column-parallel: wq/wk/wv, w1/w3 (output dim sharded).  Row-parallel:
+    wo, w2 (input dim sharded).  Vocab-parallel: embed, lm_head.
+    With ``stage_axis``, block params gain a leading stage dimension.
+    """
+    st = (stage_axis,) if stage_axis else ()
+    blk = {
+        "wq": P(*st, None, None, tp_axis), "wk": P(*st, None, None, tp_axis),
+        "wv": P(*st, None, None, tp_axis), "wo": P(*st, None, tp_axis, None),
+        "w1": P(*st, None, None, tp_axis), "w3": P(*st, None, None, tp_axis),
+        "w2": P(*st, None, tp_axis, None),
+        "ln1": P(*st, None, None), "ln2": P(*st, None, None),
+    }
+    return {
+        "blocks": blk,
+        "embed": P(tp_axis, None),
+        "lm_head": P(None, tp_axis),
+        "final_norm": P(None),
+    }
+
+
+# ---------------------------------------------------------------------------
+# local (per-shard) building blocks
+# ---------------------------------------------------------------------------
+
+
+def _vocab_parallel_embed(embed_local, tokens, axis: str):
+    """Vocab-sharded embedding lookup + psum (the paper's '+1' allreduce)."""
+    t = jax.lax.axis_size(axis)
+    idx = jax.lax.axis_index(axis)
+    vshard = embed_local.shape[0]
+    local = tokens - idx * vshard
+    valid = (local >= 0) & (local < vshard)
+    x = embed_local[jnp.clip(local, 0, vshard - 1)]
+    x = jnp.where(valid[..., None], x, 0)
+    return jax.lax.psum(x, axis)
+
+
+def _tp_layer_full(cfg, pl, x, positions, mask, axis: str, heads_t: int,
+                   kv_t: int, cache_w=None):
+    """One transformer layer under TP over full sequence.  2 psums."""
+    B, S, _ = x.shape
+    D = cfg.head_dim
+    xn = rms_norm(x, pl["ln1"], cfg.norm_eps)
+    q = apply_rope((xn @ pl["wq"]).reshape(B, S, heads_t, D), positions,
+                   cfg.rope_theta)
+    k = apply_rope((xn @ pl["wk"]).reshape(B, S, kv_t, D), positions,
+                   cfg.rope_theta)
+    v = (xn @ pl["wv"]).reshape(B, S, kv_t, D)
+    attn = gqa_attention(q, k, v, mask).reshape(B, S, heads_t * D)
+    x = x + jax.lax.psum(attn @ pl["wo"], axis)                # AR (attn out)
+    xn2 = rms_norm(x, pl["ln2"], cfg.norm_eps)
+    mlp = mlp_apply(pl, xn2, cfg.activation)
+    x = x + jax.lax.psum(mlp, axis)                            # AR (mlp down)
+    cache = None
+    if cache_w is not None:
+        from repro.models.blocks import build_ring_cache
+        cache = build_ring_cache(k, v, cache_w)
+    return x, cache
+
+
+def _tp_layer_step(cfg, pl, x, pos, cache, axis: str, heads_t: int, kv_t: int):
+    """One decode step under TP.  2 psums."""
+    B = x.shape[0]
+    D = cfg.head_dim
+    w = cache["k"].shape[1]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    xn = rms_norm(x, pl["ln1"], cfg.norm_eps)
+    q = apply_rope((xn @ pl["wq"]).reshape(B, 1, heads_t, D), positions,
+                   cfg.rope_theta)
+    k = apply_rope((xn @ pl["wk"]).reshape(B, 1, kv_t, D), positions,
+                   cfg.rope_theta)
+    v = (xn @ pl["wv"]).reshape(B, 1, kv_t, D)
+    slot = pos % w
+    ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+    mask = decode_cache_mask(w, pos + 1, cfg.sliding_window)[None, :]
+    attn = gqa_attention(q, ck, cv, mask).reshape(B, 1, heads_t * D)
+    x = x + jax.lax.psum(attn @ pl["wo"], axis)
+    xn2 = rms_norm(x, pl["ln2"], cfg.norm_eps)
+    x = x + jax.lax.psum(mlp_apply(pl, xn2, cfg.activation), axis)
+    return x, {"k": ck, "v": cv}
+
+
+def _layer_slice(blocks, l):
+    return {k: v[l] for k, v in blocks.items()}
+
+
+def _logits_allgather(params, x_last, axis: str, vocab: int = None):
+    """Vocab-sharded logits + all-gather (paper's Gather, XLA-adapted)."""
+    xn = rms_norm(x_last, params["final_norm"], 1e-5)
+    local = xn @ params["lm_head"]
+    logits = jax.lax.all_gather(local, axis, axis=-1, tiled=True)
+    if vocab is not None and vocab < logits.shape[-1]:
+        col = jnp.arange(logits.shape[-1])
+        logits = jnp.where(col < vocab, logits, jnp.finfo(jnp.float32).min)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# TP engine
+# ---------------------------------------------------------------------------
+
+
+def make_tp_mesh(t: int) -> Mesh:
+    return jax.make_mesh((t,), ("tp",))
+
+
+def tp_prefill(cfg: ModelConfig, mesh: Mesh, cache_w: int = None):
+    """jit'd fn(params, tokens) -> (logits [B,v], cache|None).
+
+    Collectives per call: (2L+1) allreduce + 1 allgather — Eq. 1 / Table III.
+    """
+    t = mesh.shape["tp"]
+    heads_t, kv_t = cfg.num_heads // t, cfg.num_kv_heads // t
+    specs = tp_param_specs(cfg)
+    cache_spec = {"k": P(None, None, None, "tp", None),
+                  "v": P(None, None, None, "tp", None)}
+
+    def fn(params, tokens):
+        B, S = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        mask = make_mask(S, S, window=cfg.sliding_window)
+        x = _vocab_parallel_embed(params["embed"], tokens, "tp")
+        caches = []
+        for l in range(cfg.num_layers):
+            x, c = _tp_layer_full(cfg, _layer_slice(params["blocks"], l), x,
+                                  positions, mask, "tp", heads_t, kv_t,
+                                  cache_w)
+            caches.append(c)
+        logits = _logits_allgather(params, x[:, -1, :], "tp", cfg.vocab_size)
+        cache = None
+        if cache_w is not None:
+            cache = jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+        return logits, cache
+
+    out_cache_spec = None if cache_w is None else cache_spec
+    return jax.jit(shard_map(
+        fn, mesh=mesh, in_specs=(specs, P(None, None)),
+        out_specs=(P(None, None), out_cache_spec),
+        check_rep=False))
+
+
+def tp_decode_step(cfg: ModelConfig, mesh: Mesh):
+    """jit'd fn(params, cache, token [B], pos) -> (logits, cache).
+
+    Collectives per call: (2L+1) allreduce + 1 allgather — Table III decode.
+    """
+    t = mesh.shape["tp"]
+    heads_t, kv_t = cfg.num_heads // t, cfg.num_kv_heads // t
+    specs = tp_param_specs(cfg)
+    cache_spec = {"k": P(None, None, None, "tp", None),
+                  "v": P(None, None, None, "tp", None)}
+
+    def fn(params, cache, token, pos):
+        x = _vocab_parallel_embed(params["embed"], token[:, None], "tp")
+        new_cache = []
+        for l in range(cfg.num_layers):
+            x, c = _tp_layer_step(cfg, _layer_slice(params["blocks"], l), x,
+                                  pos, _layer_slice(cache, l), "tp",
+                                  heads_t, kv_t)
+            new_cache.append(c)
+        logits = _logits_allgather(params, x[:, 0, :], "tp", cfg.vocab_size)
+        return logits, jax.tree.map(lambda *xs: jnp.stack(xs), *new_cache)
+
+    return jax.jit(shard_map(
+        fn, mesh=mesh,
+        in_specs=(specs, cache_spec, P(None), P()),
+        out_specs=(P(None, None), cache_spec),
+        check_rep=False))
+
+
+# ---------------------------------------------------------------------------
+# PP engine — one jitted computation per stage, explicit transfers (vLLM-style)
+# ---------------------------------------------------------------------------
+#
+# Real PP serving (the paper's vLLM setup) runs one process group per stage
+# and moves activations with NCCL send/recv.  The SPMD-lockstep alternative
+# (shard_map over a "pp" axis) would execute every stage's collectives on
+# every rank — inflating per-rank counts p×, which is NOT what the paper's
+# per-rank profile shows.  So the engine mirrors vLLM: each stage is its own
+# jit (optionally TP-sharded over its own device group) and the engine logs
+# every inter-stage transfer — that log is our measured Table V / Eq. 2 side.
+
+
+def _dense_local_layer(cfg, pl, x, positions, mask):
+    """Full-width dense layer (no TP) — used by pure-PP stages."""
+    B, S, _ = x.shape
+    D = cfg.head_dim
+    xn = rms_norm(x, pl["ln1"], cfg.norm_eps)
+    q = apply_rope((xn @ pl["wq"]).reshape(B, S, cfg.num_heads, D), positions,
+                   cfg.rope_theta)
+    k = apply_rope((xn @ pl["wk"]).reshape(B, S, cfg.num_kv_heads, D),
+                   positions, cfg.rope_theta)
+    v = (xn @ pl["wv"]).reshape(B, S, cfg.num_kv_heads, D)
+    attn = gqa_attention(q, k, v, mask).reshape(B, S, cfg.num_heads * D)
+    x = x + attn @ pl["wo"]
+    x = x + mlp_apply(pl, rms_norm(x, pl["ln2"], cfg.norm_eps), cfg.activation)
+    return x
+
+
+@dataclasses.dataclass
+class TransferRecord:
+    phase: str
+    count: int          # individual tensors moved (the paper's Send count)
+    shape: Tuple[int, ...]
+    dtype_bytes: int
+
+    @property
+    def bytes(self) -> int:
+        n = 1
+        for d in self.shape:
+            n *= d
+        return self.count * n * self.dtype_bytes
+
+
+def stage_layer_range(cfg: ModelConfig, p: int, s: int) -> Tuple[int, int]:
+    L = cfg.num_layers
+    per = L // p
+    return s * per, (s + 1) * per
+
+
+class PipelineEngine:
+    """Single-request PP (t=1) or hybrid TP×PP (t>1) inference engine.
+
+    Stage s owns layers [s·L/p, (s+1)·L/p) on its own ``t``-device mesh.
+    Boundary hand-off ships TWO tensors per hop (hidden_states + residual,
+    the vLLM pattern) of shape [S, h/t] per TP worker, logged in
+    ``self.transfers``.  Within a stage the TP collectives (allreduce per
+    row-parallel linear, embedding psum on stage 0, logits all-gather on the
+    last stage) are hand-placed and visible in each stage's HLO.
+    """
+
+    def __init__(self, cfg: ModelConfig, t: int = 1, p: int = 2,
+                 devices=None):
+        self.cfg, self.t, self.p = cfg, t, p
+        devices = devices if devices is not None else jax.devices()
+        assert len(devices) >= t * p, f"need {t * p} devices"
+        self.meshes = [Mesh(np.asarray(devices[s * t:(s + 1) * t]), ("tp",))
+                       for s in range(p)]
+        self.transfers: list = []
+        self._stage_fns = [self._build_stage(s) for s in range(p)]
+
+    # -- per-stage jitted computations -------------------------------------
+    def _build_stage(self, s: int):
+        cfg, t, p = self.cfg, self.t, self.p
+        lo, hi = stage_layer_range(cfg, p, s)
+        heads_t, kv_t = cfg.num_heads // t, cfg.num_kv_heads // t
+        mesh = self.meshes[s]
+        first, last = s == 0, s == p - 1
+
+        def fn(params, x_or_tokens):
+            if first:
+                if t > 1:
+                    x = _vocab_parallel_embed(params["embed"], x_or_tokens,
+                                              "tp")
+                else:
+                    x = params["embed"][x_or_tokens]
+            else:
+                if t > 1:   # redistribute the received h/t shards (2 tensors)
+                    h1, h2 = x_or_tokens
+                    g1 = jax.lax.all_gather(h1, "tp", axis=-1, tiled=True)
+                    g2 = jax.lax.all_gather(h2, "tp", axis=-1, tiled=True)
+                    x = g1 + g2
+                else:
+                    h1, h2 = x_or_tokens
+                    x = h1 + h2
+            B, S = x.shape[:2]
+            positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+            mask = make_mask(S, S, window=cfg.sliding_window)
+            for l in range(lo, hi):
+                pl = _layer_slice(params["blocks"], l)
+                if t > 1:
+                    x, _ = _tp_layer_full(cfg, pl, x, positions, mask, "tp",
+                                          heads_t, kv_t)
+                else:
+                    x = _dense_local_layer(cfg, pl, x, positions, mask)
+            if last:
+                if t > 1:
+                    return _logits_allgather(params, x[:, -1, :], "tp",
+                                             cfg.vocab_size)
+                xn = rms_norm(x[:, -1, :], params["final_norm"], cfg.norm_eps)
+                logits = xn @ params["lm_head"]
+                if cfg.padded_vocab != cfg.vocab_size:
+                    col = jnp.arange(logits.shape[-1])
+                    logits = jnp.where(col < cfg.vocab_size, logits,
+                                       jnp.finfo(jnp.float32).min)
+                return logits
+            # split into (hidden, residual)-like summand pair for the wire
+            tp_idx = jax.lax.axis_index("tp") if t > 1 else 0
+            h = cfg.d_model
+            shard = (jax.lax.dynamic_slice_in_dim(
+                x, tp_idx * (h // t), h // t, axis=-1) if t > 1 else x)
+            return shard * 0.25, shard * 0.75
+
+        specs = tp_param_specs(cfg)
+        in_x_spec = (P(None, None) if first
+                     else (P(None, None, "tp" if t > 1 else None),) * 2)
+        out_spec = (P(None, None) if last
+                    else (P(None, None, "tp" if t > 1 else None),) * 2)
+        if t > 1:
+            mapped = shard_map(fn, mesh=mesh, in_specs=(specs, in_x_spec),
+                               out_specs=out_spec, check_rep=False)
+        else:
+            def mapped(params, x):          # single-device stage
+                return fn(params, x)
+        return jax.jit(mapped), mesh
+
+    # -- driver --------------------------------------------------------------
+    def _shard_params(self, params, mesh):
+        specs = tp_param_specs(self.cfg)
+        if self.t == 1:
+            specs = jax.tree.map(lambda _: P(), specs,
+                                 is_leaf=lambda x: isinstance(x, P))
+        return jax.device_put(
+            params, jax.tree.map(
+                lambda sp: NamedSharding(mesh, sp), specs,
+                is_leaf=lambda x: isinstance(x, P)))
+
+    def prepare(self, params):
+        """Place one param copy per stage (each stage reads its own layers)."""
+        return [self._shard_params(params, m) for m in self.meshes]
+
+    def forward(self, staged_params, tokens, phase: str = "prefill"):
+        """Run one pass; logs (p-1)×2 transfers of [S, h/t] — Eq. 2 / Eq. 7."""
+        x = tokens
+        for s in range(self.p):
+            fn, mesh = self._stage_fns[s]
+            out = fn(staged_params[s], x)
+            if s < self.p - 1:
+                nxt = self.meshes[s + 1]
+                spec = P(None, None, "tp" if self.t > 1 else None)
+                moved = tuple(
+                    jax.device_put(h, NamedSharding(nxt, spec)) for h in out)
+                for h in moved:
+                    self.transfers.append(TransferRecord(
+                        phase, 1, tuple(h.shape[:-1]) + (h.shape[-1] // self.t,),
+                        jnp.dtype(h.dtype).itemsize))
+                x = moved
+            else:
+                return out
+
+    def stage_hlo(self, staged_params, tokens, s: int) -> str:
+        """Compiled HLO of stage s (for collective-count validation)."""
+        x = tokens
+        for i in range(s):
+            fn, _ = self._stage_fns[i]
+            out = fn(staged_params[i], x)
+            nxt = self.meshes[i + 1]
+            spec = P(None, None, "tp" if self.t > 1 else None)
+            x = tuple(jax.device_put(h, NamedSharding(nxt, spec))
+                      for h in out)
+        fn, _ = self._stage_fns[s]
+        return fn.lower(staged_params[s], x).compile().as_text()
+
+    def transfer_summary(self):
+        total = sum(r.bytes for r in self.transfers)
+        return {"count": sum(r.count for r in self.transfers),
+                "bytes": total}

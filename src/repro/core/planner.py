@@ -1,0 +1,73 @@
+"""Automated parallelism selection (the paper's §VII 'future work', built).
+
+Given a model, a serving scenario (S_p, S_d, SLO weights) and a hardware
+profile, enumerate feasible (t, p) layouts, score each with the analytical
+SLO model, and return a ranked plan.  The ranking reproduces the paper's
+§V-C deployment guidance:
+  * short sequences + intra-node ⇒ pure TP (TTFT-optimal),
+  * long-form generation / bandwidth-constrained ⇒ PP (volume-optimal),
+  * moderate workloads ⇒ balanced hybrids; avoid unbalanced ones.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+from repro.config.base import HardwareProfile, H100_NODE, ModelConfig
+from repro.core.commodel import comm_ops_for
+from repro.core.slo import DEFAULT_OVERHEADS, EngineOverheads, SLOReport, \
+    predict_slo
+
+
+@dataclasses.dataclass
+class PlanCandidate:
+    tensor_parallel: int
+    pipeline_parallel: int
+    slo: SLOReport
+    score: float
+
+    @property
+    def name(self) -> str:
+        return f"TP={self.tensor_parallel} PP={self.pipeline_parallel}"
+
+
+def feasible_layouts(cfg: ModelConfig, world: int) -> List[tuple]:
+    outs = []
+    for t in [d for d in range(1, world + 1) if world % d == 0]:
+        p = world // t
+        if cfg.num_kv_heads % t or cfg.num_heads % t:
+            continue
+        if cfg.num_layers % p:
+            continue
+        outs.append((t, p))
+    return outs
+
+
+def plan(cfg: ModelConfig, world: int, s_p: int, s_d: int, *,
+         hw: HardwareProfile = H100_NODE,
+         ov: EngineOverheads = DEFAULT_OVERHEADS,
+         objective: str = "e2e",
+         volume_budget: Optional[float] = None) -> List[PlanCandidate]:
+    """Rank all feasible (t, p) layouts for ``world`` chips.
+
+    objective: "ttft" | "tpot" | "e2e" | "volume".
+    volume_budget: optional cap on comm wire bytes (models a bandwidth-
+    constrained fabric — layouts above the cap are ranked last).
+    """
+    cands = []
+    for t, p in feasible_layouts(cfg, world):
+        slo = predict_slo(cfg, s_p, s_d, t, p, hw=hw, ov=ov)
+        score = {
+            "ttft": slo.ttft, "tpot": slo.tpot, "e2e": slo.e2e,
+            "volume": slo.comm_volume,
+        }[objective]
+        if volume_budget is not None and slo.comm_volume > volume_budget:
+            score = float("inf")
+        cands.append(PlanCandidate(t, p, slo, score))
+    cands.sort(key=lambda c: (c.score, c.slo.e2e))
+    return cands
+
+
+def recommend(cfg: ModelConfig, world: int, s_p: int, s_d: int,
+              **kw) -> PlanCandidate:
+    return plan(cfg, world, s_p, s_d, **kw)[0]

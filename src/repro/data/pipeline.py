@@ -1,0 +1,76 @@
+"""Synthetic token pipeline: seeded, reproducible, mesh-shardable.
+
+A deterministic counter-based generator (splitmix64 over (seed, step, index))
+produces token streams without any host-side RNG state, so every data-parallel
+host can materialize exactly its shard of the global batch — the pattern a
+real distributed loader must follow.  Documents/packing: fixed-length packed
+sequences with BOS resets every ``doc_len`` tokens.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+import numpy as np
+
+try:
+    import jax
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+except Exception:                                  # pragma: no cover
+    jax = None
+
+
+def _splitmix64(x: np.ndarray) -> np.ndarray:
+    x = (x + np.uint64(0x9E3779B97F4A7C15)) & np.uint64(0xFFFFFFFFFFFFFFFF)
+    z = x
+    z = ((z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)) \
+        & np.uint64(0xFFFFFFFFFFFFFFFF)
+    z = ((z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)) \
+        & np.uint64(0xFFFFFFFFFFFFFFFF)
+    return z ^ (z >> np.uint64(31))
+
+
+@dataclasses.dataclass
+class SyntheticTokens:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    bos_id: int = 1
+    doc_len: int = 512
+
+    def batch_at(self, step: int, lo: int = 0, hi: Optional[int] = None) -> np.ndarray:
+        """Rows [lo, hi) of the global batch for ``step`` — any host can ask
+        for exactly its shard."""
+        hi = self.global_batch if hi is None else hi
+        rows = np.arange(lo, hi, dtype=np.uint64)[:, None]
+        cols = np.arange(self.seq_len, dtype=np.uint64)[None, :]
+        key = (np.uint64(self.seed) * np.uint64(0x100000001B3)
+               + np.uint64(step) * np.uint64(0x1000193))
+        raw = _splitmix64(key + rows * np.uint64(self.seq_len * 131) + cols)
+        toks = (raw % np.uint64(max(self.vocab_size - 2, 1))).astype(np.int32) + 2
+        toks[:, ::self.doc_len] = self.bos_id       # packed document resets
+        return toks
+
+    def __iter__(self) -> Iterator[np.ndarray]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+    # ------------------------------------------------------------------
+    def global_array(self, step: int, mesh, spec):
+        """Materialize step's batch as a correctly-sharded global jax.Array,
+        each addressable shard filled host-side (no full-batch broadcast)."""
+        sharding = NamedSharding(mesh, spec)
+        shape = (self.global_batch, self.seq_len)
+
+        def cb(index):
+            rows = index[0]
+            lo = rows.start or 0
+            hi = rows.stop if rows.stop is not None else self.global_batch
+            sl = self.batch_at(step, lo, hi)
+            cols = index[1]
+            return sl[:, cols]
+
+        return jax.make_array_from_callback(shape, sharding, cb)

@@ -1,0 +1,85 @@
+"""Pallas TPU decode-attention (flash-decode) kernel.
+
+One query token per sequence attends to a [W, Hkv, D] KV cache.  The KV length
+is the long dimension, so the grid streams KV blocks sequentially while the
+G = Hq/Hkv query heads for one KV head ride along as the MXU M-dimension:
+scores for a block are a [G, bkv] matmul — small-M but D-deep, which keeps the
+MXU busy for head_dim >= 128 archs.  Online softmax state ([G,1] max/denom and
+[G,D] accumulator) persists in VMEM scratch across KV blocks.
+
+Grid: (B, Hkv, nKV) — nKV minor/sequential.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float(np.finfo(np.float32).min)
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, valid_ref, o_ref, acc, m_i, l_i,
+                   *, scale):
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_i[...] = jnp.full_like(m_i, NEG_INF)
+        l_i[...] = jnp.zeros_like(l_i)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale               # [G, D]
+    k = k_ref[0].astype(jnp.float32)                          # [bkv, D]
+    s = q @ k.T                                               # [G, bkv]
+    mask = valid_ref[...] != 0                                # [1, bkv]
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_i[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+    l_i[...] = l_i[...] * alpha + p.sum(axis=1, keepdims=True)
+    m_i[...] = m_new
+    acc[...] = acc[...] * alpha + p @ v_ref[0].astype(jnp.float32)
+
+    @pl.when(ik == nk - 1)
+    def _flush():
+        o_ref[0, 0] = (acc[...] / jnp.maximum(l_i[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_kv", "interpret"))
+def decode_attention_pallas(q, k, v, valid, *, block_kv: int = 512,
+                            interpret: bool = False):
+    """q: [B,Hq,D]; k,v: [B,W,Hkv,D]; valid: [W] bool -> [B,Hq,D]."""
+    B, Hq, D = q.shape
+    W, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    block_kv = min(block_kv, W)
+    assert W % block_kv == 0
+
+    qt = q.reshape(B, Hkv, G, D)                              # [B,Hkv,G,D]
+    kt = k.transpose(0, 2, 1, 3)                              # [B,Hkv,W,D]
+    vt = v.transpose(0, 2, 1, 3)
+    valid2 = valid.astype(jnp.int32)[None, :]                 # [1, W]
+
+    grid = (B, Hkv, W // block_kv)
+    q_spec = pl.BlockSpec((1, 1, G, D), lambda b, h, ik: (b, h, 0, 0))
+    kv_spec = pl.BlockSpec((None, 1, block_kv, D), lambda b, h, ik: (b, h, ik, 0))
+    valid_spec = pl.BlockSpec((1, block_kv), lambda b, h, ik: (0, ik))
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, scale=1.0 / np.sqrt(D)),
+        grid=grid,
+        in_specs=[q_spec, kv_spec, kv_spec, valid_spec],
+        out_specs=q_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        scratch_shapes=[pltpu.VMEM((G, D), jnp.float32),
+                        pltpu.VMEM((G, 1), jnp.float32),
+                        pltpu.VMEM((G, 1), jnp.float32)],
+        interpret=interpret,
+    )(qt, kt, vt, valid2)
+    return out.reshape(B, Hq, D)

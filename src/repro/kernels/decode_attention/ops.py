@@ -1,0 +1,17 @@
+"""Dispatching wrapper for decode attention."""
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.kernels.decode_attention.decode_kernel import decode_attention_pallas
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+def decode_attention(q, k, v, valid):
+    if jax.default_backend() == "tpu":
+        return decode_attention_pallas(q, k, v, valid)
+    if os.environ.get("REPRO_PALLAS_INTERPRET") == "1":
+        return decode_attention_pallas(q, k, v, valid, interpret=True)
+    return decode_attention_ref(q, k, v, valid)

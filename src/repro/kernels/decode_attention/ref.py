@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for single-token decode attention against a KV cache."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def decode_attention_ref(q, k, v, valid):
+    """q: [B,Hq,D]; k,v: [B,W,Hkv,D]; valid: [W] bool -> [B,Hq,D]."""
+    B, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, D)
+    logits = jnp.einsum("bkgd,btkd->bkgt", qg, k).astype(jnp.float32)
+    logits *= 1.0 / np.sqrt(D)
+    logits = jnp.where(valid[None, None, None, :], logits,
+                       jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgt,btkd->bkgd", probs, v)
+    return out.reshape(B, Hq, D)

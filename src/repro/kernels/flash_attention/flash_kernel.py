@@ -1,0 +1,112 @@
+"""Pallas TPU flash-attention (prefill) kernel: causal + sliding-window GQA.
+
+TPU adaptation of the FlashAttention blocking: the online-softmax running
+max/denominator and the output accumulator live in VMEM scratch that persists
+across the sequential KV-block grid dimension; Q/K/V tiles stream HBM→VMEM
+once per (batch, head, q-block).  Block sizes are MXU-aligned (multiples of
+128 on the contracted/lane dims).  Fully-masked KV blocks (beyond the causal
+frontier or before the sliding window) are skipped with ``pl.when``.
+
+Grid: (B, Hq, nQ, nKV) — nKV minor/sequential.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float(np.finfo(np.float32).min)
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc, m_i, l_i,
+                  *, scale, block_q, block_kv, causal, window, seq_len):
+    iq, ik = pl.program_id(2), pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_i[...] = jnp.full_like(m_i, NEG_INF)
+        l_i[...] = jnp.zeros_like(l_i)
+
+    q_start = iq * block_q
+    k_start = ik * block_kv
+    # Block-level relevance: any (q, k) pair with k <= q and k > q - window?
+    relevant = True
+    if causal:
+        relevant = k_start <= q_start + block_q - 1
+    if window is not None:
+        relevant = jnp.logical_and(
+            relevant, k_start + block_kv - 1 > q_start - window)
+
+    @pl.when(relevant)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # [bq, D]
+        k = k_ref[0, 0].astype(jnp.float32)                  # [bkv, D]
+        s = q @ k.T                                          # [bq, bkv]
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = k_pos < seq_len
+        if causal:
+            mask &= k_pos <= q_pos
+        if window is not None:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_i[...]                                    # [bq, 1]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        l_i[...] = l_i[...] * alpha + p.sum(axis=1, keepdims=True)
+        m_i[...] = m_new
+        v = v_ref[0, 0].astype(jnp.float32)                  # [bkv, D]
+        acc[...] = acc[...] * alpha + p @ v
+
+    @pl.when(ik == nk - 1)
+    def _flush():
+        denom = jnp.maximum(l_i[...], 1e-30)
+        o_ref[0, 0] = (acc[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_kv", "interpret"))
+def flash_attention_pallas(q, k, v, *, causal: bool = True, window=None,
+                           block_q: int = 128, block_kv: int = 128,
+                           interpret: bool = False):
+    """q: [B,S,Hq,D]; k,v: [B,S,Hkv,D] -> [B,S,Hq,D]."""
+    B, S, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    block_q = min(block_q, S)
+    block_kv = min(block_kv, S)
+    assert S % block_q == 0 and S % block_kv == 0
+
+    qt = q.transpose(0, 2, 1, 3)                             # [B,Hq,S,D]
+    kt = k.transpose(0, 2, 1, 3)                             # [B,Hkv,S,D]
+    vt = v.transpose(0, 2, 1, 3)
+
+    grid = (B, Hq, S // block_q, S // block_kv)
+    q_spec = pl.BlockSpec((1, 1, block_q, D), lambda b, h, iq, ik: (b, h, iq, 0))
+    kv_spec = pl.BlockSpec((1, 1, block_kv, D),
+                           lambda b, h, iq, ik: (b, h // G, ik, 0))
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=1.0 / np.sqrt(D),
+                          block_q=block_q, block_kv=block_kv,
+                          causal=causal, window=window, seq_len=S),
+        grid=grid,
+        in_specs=[q_spec, kv_spec, kv_spec],
+        out_specs=q_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hq, S, D), q.dtype),
+        scratch_shapes=[pltpu.VMEM((block_q, D), jnp.float32),
+                        pltpu.VMEM((block_q, 1), jnp.float32),
+                        pltpu.VMEM((block_q, 1), jnp.float32)],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,18 @@
+"""Dispatching wrapper for prefill flash attention."""
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.kernels.flash_attention.flash_kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window=None):
+    if jax.default_backend() == "tpu":
+        return flash_attention_pallas(q, k, v, causal=causal, window=window)
+    if os.environ.get("REPRO_PALLAS_INTERPRET") == "1":
+        return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                      interpret=True)
+    return flash_attention_ref(q, k, v, causal=causal, window=window)

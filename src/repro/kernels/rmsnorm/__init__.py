@@ -1,0 +1,1 @@
+from repro.kernels.rmsnorm.ops import rms_norm  # noqa: F401

@@ -1,0 +1,17 @@
+"""Dispatching wrapper for fused RMSNorm."""
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.kernels.rmsnorm.ref import rms_norm_ref
+from repro.kernels.rmsnorm.rmsnorm_kernel import rms_norm_pallas
+
+
+def rms_norm(x, weight, eps: float = 1e-5):
+    if jax.default_backend() == "tpu":
+        return rms_norm_pallas(x, weight, eps=eps)
+    if os.environ.get("REPRO_PALLAS_INTERPRET") == "1":
+        return rms_norm_pallas(x, weight, eps=eps, interpret=True)
+    return rms_norm_ref(x, weight, eps)

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for fused RMSNorm."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm_ref(x, weight, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + weight.astype(jnp.float32))).astype(x.dtype)

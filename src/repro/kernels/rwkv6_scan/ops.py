@@ -1,0 +1,28 @@
+"""Dispatching wrapper for the WKV6 recurrence.
+
+On TPU the Pallas kernel runs compiled; elsewhere the pure-jnp oracle is used
+(the models import this entry point, so CPU smoke tests and the dry-run see
+clean jnp HLO while TPU deployments get the fused kernel).  Set
+``REPRO_PALLAS_INTERPRET=1`` to force the kernel body through the Pallas
+interpreter (used by the kernel tests).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.kernels.rwkv6_scan.ref import wkv6_ref
+from repro.kernels.rwkv6_scan.wkv6_kernel import wkv6_pallas
+
+
+def _backend() -> str:
+    return jax.default_backend()
+
+
+def wkv6(r, k, v, w, u, state):
+    if _backend() == "tpu":
+        return wkv6_pallas(r, k, v, w, u, state)
+    if os.environ.get("REPRO_PALLAS_INTERPRET") == "1":
+        return wkv6_pallas(r, k, v, w, u, state, interpret=True)
+    return wkv6_ref(r, k, v, w, u, state)

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the RWKV-6 (Finch) WKV recurrence.
+
+Per head with state S ∈ R^{hs×hs} (key-channel i, value-channel j):
+
+    y_t[j]     = Σ_i r_t[i] · (S_t[i,j] + u[i]·k_t[i]·v_t[j])
+    S_{t+1}[i,j] = w_t[i]·S_t[i,j] + k_t[i]·v_t[j]
+
+with data-dependent decay w_t ∈ (0,1)^{hs} [arXiv:2404.05892, Eq. 18-19].
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, w, u, state):
+    """r,k,v,w: [B,S,H,hs]; u: [H,hs]; state: [B,H,hs,hs] (f32).
+
+    Returns (y [B,S,H,hs] in r.dtype, final_state [B,H,hs,hs] f32).
+    """
+    B, S, H, hs = r.shape
+    rf, kf, vf, wf = (t.astype(jnp.float32) for t in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp                                   # [B,H,hs]
+        kv = kt[..., :, None] * vt[..., None, :]               # [B,H,hs,hs]
+        y = jnp.einsum("bhi,bhij->bhj", rt, s + uf[None, :, :, None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (rf, kf, vf, wf))
+    final, ys = jax.lax.scan(step, state.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1).astype(r.dtype), final

@@ -1,0 +1,86 @@
+"""Pallas TPU kernel for the RWKV-6 WKV recurrence.
+
+TPU adaptation of the (GPU-oriented) CUDA wkv6 kernel: one grid cell per
+(batch·head, time-chunk); the [hs, hs] recurrent state lives in a VMEM
+scratch buffer that persists across the sequential time-chunk grid dimension
+(the TPU grid is executed in order, minor-most last), so HBM traffic is the
+r/k/v/w streams once plus one state read/write per (b,h) — the same data-flow
+the paper's GPU kernel achieves with shared memory, re-thought for the
+HBM→VMEM hierarchy.
+
+Grid: (B*H, S // chunk).  Blocks: r/k/v/w [chunk, hs]; y [chunk, hs];
+state in/out [hs, hs].
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref,
+                 y_ref, sout_ref, state):
+    c = pl.program_id(1)
+    nc = pl.num_programs(1)
+
+    @pl.when(c == 0)
+    def _init():
+        state[...] = s0_ref[...].astype(jnp.float32)
+
+    chunk = r_ref.shape[0]
+    u = u_ref[...].astype(jnp.float32)          # [hs]
+
+    def step(t, s):
+        r_t = r_ref[t, :].astype(jnp.float32)   # [hs]
+        k_t = k_ref[t, :].astype(jnp.float32)
+        v_t = v_ref[t, :].astype(jnp.float32)
+        w_t = w_ref[t, :].astype(jnp.float32)
+        kv = k_t[:, None] * v_t[None, :]        # [hs, hs]
+        y = (r_t[None, :] @ (s + u[:, None] * kv))[0]
+        y_ref[t, :] = y.astype(y_ref.dtype)
+        return w_t[:, None] * s + kv
+
+    s = jax.lax.fori_loop(0, chunk, step, state[...])
+    state[...] = s
+
+    @pl.when(c == nc - 1)
+    def _flush():
+        sout_ref[...] = s
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6_pallas(r, k, v, w, u, state, *, chunk: int = 128,
+                interpret: bool = False):
+    """r,k,v,w: [B,S,H,hs]; u: [H,hs]; state: [B,H,hs,hs] f32."""
+    B, S, H, hs = r.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0, f"S={S} not divisible by chunk={chunk}"
+    BH = B * H
+
+    def flat(t):   # [B,S,H,hs] -> [B*H, S, hs]
+        return t.transpose(0, 2, 1, 3).reshape(BH, S, hs)
+
+    rf, kf, vf, wf = map(flat, (r, k, v, w))
+    uf = jnp.broadcast_to(u[None], (B, H, hs)).reshape(BH, hs)
+    sf = state.reshape(BH, hs, hs).astype(jnp.float32)
+
+    seq_spec = pl.BlockSpec((None, chunk, hs), lambda bh, c: (bh, c, 0))
+    bh_spec = pl.BlockSpec((None, hs), lambda bh, c: (bh, 0))
+    st_spec = pl.BlockSpec((None, hs, hs), lambda bh, c: (bh, 0, 0))
+
+    y, s_out = pl.pallas_call(
+        _wkv6_kernel,
+        grid=(BH, S // chunk),
+        in_specs=[seq_spec, seq_spec, seq_spec, seq_spec, bh_spec, st_spec],
+        out_specs=[seq_spec, st_spec],
+        out_shape=[jax.ShapeDtypeStruct((BH, S, hs), r.dtype),
+                   jax.ShapeDtypeStruct((BH, hs, hs), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((hs, hs), jnp.float32)],
+        interpret=interpret,
+    )(rf, kf, vf, wf, uf, sf)
+
+    y = y.reshape(B, H, S, hs).transpose(0, 2, 1, 3)
+    return y, s_out.reshape(B, H, hs, hs)

@@ -1,0 +1,264 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) combination.
+
+For each combination this driver:
+  1. builds the production mesh (16×16 single-pod / 2×16×16 multi-pod),
+  2. lowers the right step function (train_step / prefill / serve_step) on
+     ShapeDtypeStruct stand-ins with full production shardings,
+  3. compiles it (SPMD partitioning for 256/512 host devices),
+  4. records memory_analysis, cost_analysis and the HLO collective schedule
+     into results/dryrun/<arch>__<shape>__<mesh>.json — the data source for
+     EXPERIMENTS.md §Dry-run and §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch granite-8b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --all            # every combo, subprocess each
+"""
+import argparse
+import dataclasses
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+ASSIGNED_ARCHS = [
+    "granite-8b", "rwkv6-7b", "mixtral-8x22b", "internlm2-1.8b",
+    "phi3-mini-3.8b", "hubert-xlarge", "paligemma-3b", "gemma-7b",
+    "deepseek-moe-16b", "hymba-1.5b",
+]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def _record_path(arch: str, shape: str, mesh_name: str) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    return os.path.join(RESULTS_DIR, f"{arch}__{shape}__{mesh_name}.json")
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool,
+            variant: str = "baseline") -> dict:
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.config.base import INPUT_SHAPES, TPU_V5E
+    from repro.configs import get_config
+    from repro.core import hlo_comm, roofline
+    from repro.launch import specs as sp
+    from repro.launch.mesh import make_production_mesh
+    from repro.models.transformer import get_model
+    from repro.optim.adamw import AdamW
+    from repro.runtime import sharding as sh
+    from repro.runtime.engine import make_serve_step
+    from repro.runtime.train import make_train_step
+
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cfg = get_config(arch)
+    if variant != "baseline":
+        cfg = apply_variant(cfg, variant)
+        mesh_name += f"__{variant}"
+    shape = INPUT_SHAPES[shape_name]
+    t0 = time.time()
+    reason = sp.skip_reason(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "variant": variant, "status": "skip", "skip_reason": reason}
+    if reason is not None:
+        return rec
+
+    if variant.startswith("mesh"):
+        # §Perf mesh-rebalance variant, e.g. mesh64x4 or mesh64x4-rwkv_chunked
+        # -> (data=64, model=4) on the same 256 chips (planner-guided)
+        from repro.launch.mesh import make_mesh
+        spec = variant[4:].split("-")[0]
+        d, m = spec.split("x")
+        mesh = make_mesh((int(d), int(m)), ("data", "model"))
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    from repro.runtime import meshctx
+    meshctx.set_mesh(mesh)
+    model = get_model(cfg)
+    params, pspecs = sp.param_sds(cfg, mesh)
+
+    if shape.mode == "train":
+        optimizer = AdamW()
+        opt_shapes = jax.eval_shape(optimizer.init, params)
+        opt_specs = {"m": pspecs, "v": pspecs, "step": P()}
+        opt = jax.tree.map(
+            lambda s, spc: jax.ShapeDtypeStruct(
+                s.shape, s.dtype, sharding=NamedSharding(mesh, spc)),
+            opt_shapes, opt_specs,
+            is_leaf=lambda x: isinstance(x, (jax.ShapeDtypeStruct, P)))
+        batch, bspecs = sp.batch_specs(cfg, shape, mesh)
+        step = make_train_step(model, optimizer)
+        with mesh:
+            lowered = jax.jit(step).lower(params, opt, batch)
+    elif shape.mode == "prefill":
+        batch, bspecs = sp.batch_specs(cfg, shape, mesh)
+
+        def prefill_fn(params, **kw):
+            if cfg.family == "encoder":
+                logits, _ = model.forward(params, features=kw["features"])
+                return logits
+            logits, cache, _ = model.prefill(params, kw["tokens"],
+                                             max_len=shape.seq_len,
+                                             prefix_emb=kw.get("prefix_emb"))
+            return logits, cache
+
+        with mesh:
+            lowered = jax.jit(prefill_fn).lower(params, **batch)
+    else:  # decode
+        tok, pos, cache = sp.decode_specs(cfg, shape, mesh)
+        step = make_serve_step(model)
+        with mesh:
+            lowered = jax.jit(step, donate_argnums=(1,)).lower(
+                params, cache, tok, pos)
+
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis() or {}
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    colls = hlo_comm.parse_hlo_collectives(hlo)
+    rep = roofline.analyze(cfg, shape, mesh_name, n_chips, cost, hlo,
+                           hw=TPU_V5E)
+    mem_rec = {}
+    for field in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+        val = getattr(mem, field, None)
+        if val is not None:
+            mem_rec[field] = int(val)
+
+    rec.update({
+        "status": "ok",
+        "n_chips": n_chips,
+        "seconds_to_compile": round(time.time() - t0, 1),
+        "memory_analysis": mem_rec,
+        "bytes_per_device": mem_rec.get("argument_size_in_bytes", 0)
+        + mem_rec.get("temp_size_in_bytes", 0),
+        "cost_analysis": {k: float(v) for k, v in cost.items()
+                          if isinstance(v, (int, float))},
+        "collectives": hlo_comm.summarize(colls),
+        "roofline": {
+            "flops_per_chip": rep.flops_per_chip,
+            "hbm_bytes_per_chip": rep.hbm_bytes_per_chip,
+            "coll_bytes_per_chip": rep.coll_bytes_per_chip,
+            "compute_s": rep.compute_s,
+            "memory_s": rep.memory_s,
+            "collective_s": rep.collective_s,
+            "dominant": rep.dominant,
+            "model_flops_total": rep.model_flops_total,
+            "useful_ratio": rep.useful_ratio,
+        },
+    })
+    return rec
+
+
+def apply_variant(cfg, variant: str):
+    """Named beyond-baseline configuration variants for §Perf hillclimbs."""
+    import dataclasses as dc
+    if variant.startswith("mesh"):
+        rest = variant.split("-", 1)
+        return apply_variant(cfg, rest[1]) if len(rest) > 1 else cfg
+    if variant == "remat":
+        return dc.replace(cfg, remat="dots")
+    if variant == "remat_full":
+        return dc.replace(cfg, remat="full")
+    if variant == "chunked_attn":
+        return dc.replace(cfg, attention_impl="chunked")
+    if variant.startswith("chunked_attn_c"):
+        return dc.replace(cfg, attention_impl="chunked",
+                          attention_chunk=int(variant.rsplit("c", 1)[1]))
+    if variant == "chunked_attn_remat":
+        return dc.replace(cfg, attention_impl="chunked", remat="dots")
+    if variant == "moe_local":
+        return dc.replace(cfg, moe_dispatch="local")
+    if variant == "moe_local_fsdp":
+        return dc.replace(cfg, moe_dispatch="local", moe_fsdp=True)
+    if variant == "moe_local_chunked":
+        return dc.replace(cfg, moe_dispatch="local", attention_impl="chunked")
+    if variant == "moe_local_fsdp_chunked":
+        return dc.replace(cfg, moe_dispatch="local", moe_fsdp=True,
+                          attention_impl="chunked")
+    if variant == "rwkv_chunked":
+        return dc.replace(cfg, ssm=dc.replace(cfg.ssm, scan_impl="chunked"))
+    if variant.startswith("rwkv_chunked_c"):
+        return dc.replace(cfg, ssm=dc.replace(
+            cfg.ssm, scan_impl="chunked",
+            scan_chunk=int(variant.rsplit("c", 1)[1])))
+    if variant == "ssm_attn_chunked":
+        return dc.replace(cfg, attention_impl="chunked",
+                          ssm=dc.replace(cfg.ssm, scan_impl="chunked"))
+    if variant == "rwkv_chunked_remat":
+        return dc.replace(cfg, remat="dots",
+                          ssm=dc.replace(cfg.ssm, scan_impl="chunked"))
+    raise KeyError(variant)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch, shape, mesh) in subprocesses")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.all:
+        combos = [(a, s, mp) for a in ASSIGNED_ARCHS for s in SHAPES
+                  for mp in (False, True)]
+        failures = []
+        for a, s, mp in combos:
+            mesh_name = "pod2x16x16" if mp else "pod16x16"
+            path = _record_path(a, s, mesh_name)
+            if os.path.exists(path) and not args.force:
+                print(f"[cached] {a} {s} {mesh_name}")
+                continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", a, "--shape", s]
+            if mp:
+                cmd.append("--multi-pod")
+            print(f"[run] {a} {s} {mesh_name} ...", flush=True)
+            r = subprocess.run(cmd, capture_output=True, text=True)
+            if r.returncode != 0:
+                failures.append((a, s, mesh_name, r.stderr[-2000:]))
+                print(f"[FAIL] {a} {s} {mesh_name}\n{r.stderr[-2000:]}")
+        print(f"done; {len(failures)} failures")
+        sys.exit(1 if failures else 0)
+
+    mesh_name = "pod2x16x16" if args.multi_pod else "pod16x16"
+    if args.variant != "baseline":
+        mesh_name += f"__{args.variant}"
+    path = _record_path(args.arch, args.shape, mesh_name)
+    try:
+        rec = run_one(args.arch, args.shape, args.multi_pod, args.variant)
+    except Exception:
+        rec = {"arch": args.arch, "shape": args.shape, "mesh": mesh_name,
+               "status": "error", "error": traceback.format_exc()[-4000:]}
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(json.dumps({k: rec[k] for k in ("arch", "shape", "status")}))
+        raise
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    if rec["status"] == "ok":
+        print(json.dumps({k: rec[k] for k in
+                          ("arch", "shape", "mesh", "status", "n_chips",
+                           "bytes_per_device", "seconds_to_compile")}))
+        print("memory_analysis:", rec["memory_analysis"])
+        print("cost_analysis flops:",
+              rec["cost_analysis"].get("flops"))
+        print("roofline:", json.dumps(rec["roofline"], indent=1))
+    else:
+        print(json.dumps(rec))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Training driver.
+
+CPU-scale example (reduced config):
+  PYTHONPATH=src python -m repro.launch.train --arch granite-8b --reduced \
+      --steps 20 --batch 8 --seq 128
+
+On a real TPU slice, drop --reduced and pass --mesh data,model dims, e.g.
+  python -m repro.launch.train --arch granite-8b --mesh 16,16 --steps 1000
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--mesh", default=None,
+                    help="data,model dims e.g. 16,16 (default: single device)")
+    ap.add_argument("--loss-impl", default="dense", choices=["dense", "fused"])
+    ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    from repro.configs import get_config
+    from repro.data.pipeline import SyntheticTokens
+    from repro.models.transformer import get_model
+    from repro.optim.adamw import AdamW, cosine_schedule
+    from repro.runtime.train import make_train_step
+    from repro.checkpoint import save_checkpoint
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n_params/1e6:.2f}M family={cfg.family}")
+
+    optimizer = AdamW(lr=cosine_schedule(args.lr, 10, args.steps))
+    opt_state = optimizer.init(params)
+    step_fn = jax.jit(make_train_step(model, optimizer, args.loss_impl),
+                      donate_argnums=(0, 1))
+
+    data = SyntheticTokens(cfg.vocab_size, args.seq + 1, args.batch,
+                           seed=args.seed)
+    rng = np.random.default_rng(args.seed)
+    t0 = time.time()
+    for step, tokens in enumerate(data):
+        if step >= args.steps:
+            break
+        batch = {"tokens": jnp.asarray(tokens)}
+        if cfg.family == "vlm":
+            batch["prefix_emb"] = jnp.asarray(
+                rng.standard_normal(
+                    (args.batch, cfg.num_prefix_tokens, cfg.d_model)),
+                jnp.dtype(cfg.dtype)) * 0.02
+        if cfg.family == "encoder":
+            batch = {
+                "features": jnp.asarray(
+                    rng.standard_normal((args.batch, args.seq, cfg.d_model)),
+                    jnp.dtype(cfg.dtype)),
+                "targets": jnp.asarray(tokens[:, :args.seq] % cfg.vocab_size),
+            }
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if step % max(args.steps // 10, 1) == 0 or step == args.steps - 1:
+            print(f"step {step:5d}  loss {float(metrics['loss']):8.4f}  "
+                  f"gnorm {float(metrics['grad_norm']):8.3f}  "
+                  f"lr {float(metrics['lr']):.2e}")
+    dt = time.time() - t0
+    print(f"{args.steps} steps in {dt:.1f}s "
+          f"({args.steps * args.batch * args.seq / dt:.0f} tok/s)")
+    if args.checkpoint:
+        save_checkpoint(args.checkpoint, {"params": params}, args.steps)
+        print(f"saved checkpoint to {args.checkpoint}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""Transformer blocks: dense (GQA) block shared by dense/encoder/vlm families.
+
+Block API (used by the scan trunk in ``transformer.py``):
+
+    init_blocks(rng, cfg, L, dtype)              -> stacked param pytree [L, ...]
+    block_apply(cfg, p_l, x, positions, mask,
+                cache=None, pos=None, build_cache_w=None) -> (y, cache_out, aux)
+
+``cache`` is the per-layer cache slice in decode mode; ``build_cache_w`` asks a
+full-sequence pass to emit a (ring-buffer) cache of width W for the engine.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.models import layers
+from repro.models.layers import (apply_rope, decode_cache_mask, dense_init,
+                                 gqa_attention, mlp_apply, rms_norm)
+
+
+def build_ring_cache(k, v, w: int):
+    """Seed a ring-buffer cache of width W from full-sequence K/V [B,S,Hkv,D].
+
+    Absolute position p lives in slot p % W; for S <= W this is the identity
+    layout (right-padded), for S > W we scatter the last W positions.
+    """
+    B, S, Hkv, D = k.shape
+    if S <= w:
+        pad = [(0, 0), (0, w - S), (0, 0), (0, 0)]
+        return {"k": jnp.pad(k, pad), "v": jnp.pad(v, pad)}
+    slots = jnp.arange(S - w, S) % w
+    ck = jnp.zeros((B, w, Hkv, D), k.dtype).at[:, slots].set(k[:, S - w:])
+    cv = jnp.zeros((B, w, Hkv, D), v.dtype).at[:, slots].set(v[:, S - w:])
+    return {"k": ck, "v": cv}
+
+
+def attention_apply(cfg: ModelConfig, p, xn, positions, mask,
+                    cache=None, pos=None, build_cache_w=None, n_heads=None):
+    """Self-attention over a normalized input xn [B,S,h].
+
+    Returns (attn_out [B,S,n_heads*D], cache_out).
+    """
+    n_heads = n_heads or cfg.num_heads
+    B, S, _ = xn.shape
+    D, Hkv = cfg.head_dim, cfg.num_kv_heads
+    q = (xn @ p["wq"]).reshape(B, S, n_heads, D)
+    k = (xn @ p["wk"]).reshape(B, S, Hkv, D)
+    v = (xn @ p["wv"]).reshape(B, S, Hkv, D)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    if cache is not None:
+        # single-token decode against a ring-buffer cache
+        w = cache["k"].shape[1]
+        slot = pos % w
+        ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+        dmask = decode_cache_mask(w, pos + 1, cfg.sliding_window)[None, :]
+        out = gqa_attention(q, ck, cv, dmask)
+        cache_out = {"k": ck, "v": cv}
+    else:
+        if isinstance(mask, layers.MaskSpec):
+            # flash-style chunked attention (cfg.attention_impl == "chunked")
+            out = layers.chunked_gqa_attention(q, k, v, mask,
+                                               kv_chunk=cfg.attention_chunk)
+        else:
+            out = gqa_attention(q, k, v, mask)
+        cache_out = None
+        if build_cache_w is not None:
+            cache_out = build_ring_cache(k, v, build_cache_w)
+    return out.reshape(B, S, n_heads * D), cache_out
+
+
+def init_dense_blocks(rng, cfg: ModelConfig, L: int, dtype):
+    ka, km, kn = jax.random.split(rng, 3)
+    p = layers.init_attention(ka, cfg, L, dtype=dtype)
+    p.update(layers.init_mlp(km, cfg.d_model, cfg.d_ff, cfg.activation, L, dtype))
+    p["ln1"] = jnp.zeros((L, cfg.d_model), dtype)
+    p["ln2"] = jnp.zeros((L, cfg.d_model), dtype)
+    return p
+
+
+def dense_block_apply(cfg: ModelConfig, p, x, positions, mask,
+                      cache=None, pos=None, build_cache_w=None):
+    attn_out, cache_out = attention_apply(
+        cfg, p, rms_norm(x, p["ln1"], cfg.norm_eps), positions, mask,
+        cache=cache, pos=pos, build_cache_w=build_cache_w)
+    x = x + attn_out @ p["wo"]
+    x = x + mlp_apply(p, rms_norm(x, p["ln2"], cfg.norm_eps), cfg.activation)
+    return x, cache_out, jnp.zeros((), jnp.float32)

@@ -1,0 +1,172 @@
+"""Hymba-style hybrid-head block [arXiv:2411.13676]: within every layer the
+input is processed in parallel by (i) sliding-window GQA attention heads and
+(ii) mamba-style selective-SSM heads; the two normalized outputs are averaged.
+
+Head split: n_attn = floor(num_heads · attn_head_fraction) rounded down to a
+multiple of num_kv_heads (GQA divisibility); the remaining heads form the SSM
+path with d_inner = n_ssm · head_dim.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.models import layers
+from repro.models.blocks import attention_apply
+from repro.models.layers import dense_init, rms_norm
+
+
+def head_split(cfg: ModelConfig):
+    kv = cfg.num_kv_heads
+    n_attn = max(kv, int(cfg.num_heads * cfg.attn_head_fraction) // kv * kv)
+    n_ssm = max(1, cfg.num_heads - n_attn)
+    return n_attn, n_ssm
+
+
+def init_hybrid_blocks(rng, cfg: ModelConfig, L: int, dtype):
+    n_attn, n_ssm = head_split(cfg)
+    h, d = cfg.d_model, cfg.head_dim
+    di, N = n_ssm * d, cfg.ssm.state_size
+    ks = jax.random.split(rng, 8)
+    p = layers.init_attention(ks[0], cfg, L, n_heads=n_attn, dtype=dtype)
+    p.update(layers.init_mlp(ks[1], h, cfg.d_ff, cfg.activation, L, dtype))
+    p.update({
+        "ln1": jnp.zeros((L, h), dtype), "ln2": jnp.zeros((L, h), dtype),
+        "ln_attn": jnp.zeros((L, h), dtype), "ln_ssm": jnp.zeros((L, h), dtype),
+        "in_proj": dense_init(ks[2], (L, h, 2 * di), dtype),
+        "w_dt": dense_init(ks[3], (L, di, di), dtype, scale=0.01),
+        "b_dt": jnp.full((L, di), -4.0, jnp.float32),   # softplus(-4) ~ 0.018
+        "w_B": dense_init(ks[4], (L, di, N), dtype),
+        "w_C": dense_init(ks[5], (L, di, N), dtype),
+        "A_log": jnp.zeros((L, di, N), jnp.float32),    # A = -exp(A_log) = -1
+        "D": jnp.ones((L, di), jnp.float32),
+        "ssm_out": dense_init(ks[6], (L, di, h), dtype),
+    })
+    return p
+
+
+def selective_scan(xm, dt, Bm, Cm, A, D, state):
+    """Selective SSM scan.
+
+    xm, dt: [B,S,di]; Bm, Cm: [B,S,N]; A: [di,N]; D: [di];
+    state: [B,di,N] f32.  Returns (y [B,S,di], new_state).
+    """
+    xf, dtf = xm.astype(jnp.float32), dt.astype(jnp.float32)
+    Bf, Cf = Bm.astype(jnp.float32), Cm.astype(jnp.float32)
+
+    def step(s, inp):
+        x_t, dt_t, b_t, c_t = inp                       # [B,di],[B,di],[B,N],[B,N]
+        decay = jnp.exp(dt_t[..., None] * A)            # [B,di,N]
+        s = decay * s + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", s, c_t) + D * x_t
+        return s, y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (xf, dtf, Bf, Cf))
+    final, ys = jax.lax.scan(step, state.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1).astype(xm.dtype), final
+
+
+def selective_scan_chunked(xm, dt, Bm, Cm, A, D, state, chunk: int = 16):
+    """§Perf chunk-parallel selective scan (exact, pairwise log-domain).
+
+    With T_t = Σ_{τ≤t} dt_τ (per channel d) the recurrence solution is
+      s_t[d,n]  = e^{A[d,n]·T_t} s_0 + Σ_{τ≤t} e^{A[d,n](T_t-T_τ)} dt_τ x_τ B_τ[n]
+      y_t[d]    = Σ_n C_t[n] s_t[d,n] + D x_t .
+    A < 0 and T is increasing, so every exponent is ≤ 0 — stable in fp32.
+    The scan carries state once per chunk (S/C state round-trips instead of
+    S), the same cure applied to WKV6 in kernels/rwkv6_scan/chunked.py.
+    Validated against the per-token scan in tests/test_perf_variants.py.
+    """
+    B, S, di = xm.shape
+    N = Bm.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    n = S // chunk
+
+    def to_chunks(t):
+        return (t.reshape(B, n, chunk, *t.shape[2:])
+                 .transpose(1, 0, 2, *range(3, t.ndim + 1))
+                 .astype(jnp.float32))
+
+    xc, dtc, Bc, Cc = map(to_chunks, (xm, dt, Bm, Cm))
+    Af = A.astype(jnp.float32)                                # [di,N]
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))         # τ ≤ t
+
+    def body(s, inp):
+        x_c, dt_c, b_c, c_c = inp              # [B,C,di],[B,C,di],[B,C,N]
+        T = jnp.cumsum(dt_c, axis=1)           # [B,C,di] inclusive
+        # pairwise ΔT[t,τ,d] = T_t - T_τ  (≥ 0 for τ ≤ t)
+        dT = T[:, :, None, :] - T[:, None, :, :]              # [B,C,C,di]
+        dT = jnp.where(causal[None, :, :, None], dT, jnp.inf)
+        E = jnp.exp(Af[None, None, None] * dT[..., None])     # [B,C,C,di,N]
+        u = (dt_c * x_c)                                      # [B,C,di]
+        y = jnp.einsum("btn,bsn,btsdn,bsd->btd", c_c, b_c, E, u)
+        # inter-chunk: decayed initial state
+        decay0 = jnp.exp(Af[None, None] * T[..., None])       # [B,C,di,N]
+        y += jnp.einsum("btn,btdn,bdn->btd", c_c, decay0, s)
+        y += D * x_c
+        # state update
+        T_end = T[:, -1:, :]                                  # [B,1,di]
+        k_hat = jnp.exp(Af[None, None] * (T_end - T)[..., None])  # [B,C,di,N]
+        s = jnp.exp(Af[None] * T_end[:, 0, :, None]) * s \
+            + jnp.einsum("bsdn,bsd,bsn->bdn", k_hat, u, b_c)
+        return s, y
+
+    final, ys = jax.lax.scan(body, state.astype(jnp.float32),
+                             (xc, dtc, Bc, Cc))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, S, di)
+    return y.astype(xm.dtype), final
+
+
+def mamba_branch(cfg: ModelConfig, p, xn, state=None):
+    """xn [B,S,h] -> (out [B,S,h], new_state [B,di,N])."""
+    B, S, h = xn.shape
+    n_attn, n_ssm = head_split(cfg)
+    di, N = n_ssm * cfg.head_dim, cfg.ssm.state_size
+    if state is None:
+        state = jnp.zeros((B, di, N), jnp.float32)
+    xz = xn @ p["in_proj"]
+    xm, z = xz[..., :di], xz[..., di:]
+    dt = jax.nn.softplus(xm @ p["w_dt"] + p["b_dt"])
+    Bm, Cm = xm @ p["w_B"], xm @ p["w_C"]
+    A = -jnp.exp(p["A_log"])
+    if (cfg.ssm.scan_impl == "chunked" and S > 1
+            and S % cfg.ssm.scan_chunk == 0):
+        y, new_state = selective_scan_chunked(xm, dt, Bm, Cm, A, p["D"],
+                                              state, chunk=cfg.ssm.scan_chunk)
+    else:
+        y, new_state = selective_scan(xm, dt, Bm, Cm, A, p["D"], state)
+    return (y * jax.nn.silu(z)) @ p["ssm_out"], new_state
+
+
+def init_hybrid_cache(cfg: ModelConfig, L: int, batch: int, width: int, dtype):
+    n_attn, n_ssm = head_split(cfg)
+    di, N = n_ssm * cfg.head_dim, cfg.ssm.state_size
+    return {
+        "k": jnp.zeros((L, batch, width, cfg.num_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((L, batch, width, cfg.num_kv_heads, cfg.head_dim), dtype),
+        "ssm_state": jnp.zeros((L, batch, di, N), jnp.float32),
+    }
+
+
+def hybrid_block_apply(cfg: ModelConfig, p, x, positions, mask,
+                       cache=None, pos=None, build_cache_w=None):
+    n_attn, _ = head_split(cfg)
+    xn = rms_norm(x, p["ln1"], cfg.norm_eps)
+    attn_cache = None if cache is None else {"k": cache["k"], "v": cache["v"]}
+    attn_out, attn_cache_out = attention_apply(
+        cfg, p, xn, positions, mask, cache=attn_cache, pos=pos,
+        build_cache_w=build_cache_w, n_heads=n_attn)
+    ssm_state = None if cache is None else cache["ssm_state"]
+    ssm_out, new_state = mamba_branch(cfg, p, xn, ssm_state)
+    y = 0.5 * (rms_norm(attn_out @ p["wo"], p["ln_attn"], cfg.norm_eps)
+               + rms_norm(ssm_out, p["ln_ssm"], cfg.norm_eps))
+    x = x + y
+    x = x + layers.mlp_apply(p, rms_norm(x, p["ln2"], cfg.norm_eps), cfg.activation)
+
+    cache_out = None
+    if attn_cache_out is not None:
+        cache_out = {"k": attn_cache_out["k"], "v": attn_cache_out["v"],
+                     "ssm_state": new_state}
+    return x, cache_out, jnp.zeros((), jnp.float32)

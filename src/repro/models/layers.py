@@ -1,0 +1,244 @@
+"""Shared neural-net layers: norms, RoPE, masks, attention, GLU MLPs.
+
+Everything is pure-functional: ``init_*`` builds param pytrees, ``*_apply``
+consumes them.  Attention dispatches to the Pallas flash kernels on TPU and to
+the pure-jnp reference elsewhere (see ``repro.kernels``).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.base import ModelConfig
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(rng, shape, dtype, scale=None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(rng, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, weight, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + weight.astype(jnp.float32))).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., S, H, D]; positions: [..., S] int32."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = (theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half))
+    # positions [..., S] -> angles [..., S, 1, half] broadcasting over heads
+    angles = positions[..., :, None, None].astype(jnp.float32) * freq
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# masks
+# ---------------------------------------------------------------------------
+
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class MaskSpec:
+    """Lazy attention-mask description — the chunked (flash-style) attention
+    path builds per-KV-block masks on the fly instead of materializing the
+    [S, S] boolean (1 GiB at 32k), which is itself part of the §Perf win."""
+
+    mode: str = "causal"         # causal | bidirectional | prefix
+    window: Optional[int] = None
+    prefix_len: int = 0
+    q_offset: int = 0
+
+    def materialize(self, q_len: int, kv_len: int):
+        return make_mask(q_len, kv_len, mode=self.mode,
+                         q_offset=self.q_offset, window=self.window,
+                         prefix_len=self.prefix_len)
+
+    def block(self, q_pos, kv_pos):
+        """Mask for explicit position vectors: [len(q_pos), len(kv_pos)]."""
+        qp = q_pos[:, None]
+        kp = kv_pos[None, :]
+        if self.mode == "bidirectional":
+            m = jnp.ones((q_pos.shape[0], kv_pos.shape[0]), bool)
+        elif self.mode == "prefix":
+            m = (kp <= qp) | (kp < self.prefix_len)
+        else:
+            m = kp <= qp
+        if self.window is not None:
+            m &= kp > qp - self.window
+        return m
+
+
+def make_mask(q_len: int, kv_len: int, *, mode: str = "causal",
+              q_offset=0, window=None, prefix_len: int = 0):
+    """Boolean [q_len, kv_len] mask (True = attend).
+
+    mode: "causal" | "bidirectional" | "prefix" (bidirectional prefix + causal
+    suffix, PaliGemma-style).  ``window`` adds a sliding-window constraint.
+    """
+    q_pos = q_offset + jnp.arange(q_len)[:, None]
+    kv_pos = jnp.arange(kv_len)[None, :]
+    if mode == "bidirectional":
+        mask = jnp.ones((q_len, kv_len), bool)
+    elif mode == "prefix":
+        mask = (kv_pos <= q_pos) | (kv_pos < prefix_len)
+    else:
+        mask = kv_pos <= q_pos
+    if window is not None:
+        mask &= kv_pos > q_pos - window
+    return mask
+
+
+def decode_cache_mask(cache_len: int, pos, window=None):
+    """Valid-slot mask [cache_len] for a (possibly ring-buffer) KV cache.
+
+    With a ring buffer of width W == window, every slot is valid once pos > W;
+    before that only the first ``pos`` slots are.
+    """
+    idx = jnp.arange(cache_len)
+    mask = idx < pos
+    if window is not None:
+        mask = mask | (pos > cache_len)
+    return mask
+
+
+# ---------------------------------------------------------------------------
+# attention (reference path; kernels/ holds the Pallas TPU versions)
+# ---------------------------------------------------------------------------
+
+
+def gqa_attention(q, k, v, mask, *, softcap=None):
+    """Grouped-query attention.
+
+    q: [B, S, Hq, D]; k, v: [B, T, Hkv, D]; mask broadcastable to
+    [B, Hkv, G, S, T] (usually [S, T]).  Returns [B, S, Hq, D].
+    """
+    B, S, Hq, D = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, S, Hkv, G, D)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32)
+    logits *= 1.0 / np.sqrt(D)
+    if softcap is not None:
+        logits = jnp.tanh(logits / softcap) * softcap
+    logits = jnp.where(mask, logits, jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(B, S, Hq, D)
+
+
+def chunked_gqa_attention(q, k, v, spec: "MaskSpec", *, kv_chunk: int = 1024,
+                          softcap=None):
+    """Flash-style attention: online softmax over KV chunks (lax.scan), no
+    [S, T] score materialization and no [S, T] mask.  Peak activation is
+    [B, Hkv, G, S, kv_chunk] — the jnp counterpart of the Pallas flash
+    kernel, used by the production forward path on shapes where reference
+    attention's S² HBM traffic dominates the roofline (§Perf)."""
+    B, S, Hq, D = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    kv_chunk = min(kv_chunk, T)
+    assert T % kv_chunk == 0, (T, kv_chunk)
+    n = T // kv_chunk
+    qg = q.reshape(B, S, Hkv, G, D)
+    q_pos = spec.q_offset + jnp.arange(S)
+    scale = 1.0 / np.sqrt(D)
+
+    kc = k.reshape(B, n, kv_chunk, Hkv, D).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n, kv_chunk, Hkv, D).transpose(1, 0, 2, 3, 4)
+
+    def body(carry, inp):
+        m_run, l_run, acc = carry
+        ci, k_c, v_c = inp                              # [B,C,Hkv,D]
+        kv_pos = ci * kv_chunk + jnp.arange(kv_chunk)
+        logits = jnp.einsum("bskgd,btkd->bkgst", qg, k_c).astype(jnp.float32)
+        logits *= scale
+        if softcap is not None:
+            logits = jnp.tanh(logits / softcap) * softcap
+        mask = spec.block(q_pos, kv_pos)                # [S, C]
+        logits = jnp.where(mask, logits, jnp.finfo(jnp.float32).min)
+        m_new = jnp.maximum(m_run, logits.max(-1))
+        alpha = jnp.exp(m_run - m_new)
+        p = jnp.exp(logits - m_new[..., None])
+        p = jnp.where(mask, p, 0.0)
+        l_run = l_run * alpha + p.sum(-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bkgst,btkd->bkgsd", p.astype(q.dtype), v_c).astype(jnp.float32)
+        return (m_new, l_run, acc), None
+
+    init = (jnp.full((B, Hkv, G, S), jnp.finfo(jnp.float32).min, jnp.float32),
+            jnp.zeros((B, Hkv, G, S), jnp.float32),
+            jnp.zeros((B, Hkv, G, S, D), jnp.float32))
+    (m_run, l_run, acc), _ = jax.lax.scan(body, init,
+                                          (jnp.arange(n), kc, vc))
+    out = acc / jnp.maximum(l_run, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, S, Hq, D).astype(q.dtype)
+
+
+def init_attention(rng, cfg: ModelConfig, num_layers: int, n_heads=None,
+                   dtype=None):
+    n_heads = n_heads or cfg.num_heads
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    h, d = cfg.d_model, cfg.head_dim
+    kq, kk, kv, ko = jax.random.split(rng, 4)
+    L = num_layers
+    return {
+        "wq": dense_init(kq, (L, h, n_heads * d), dtype),
+        "wk": dense_init(kk, (L, h, cfg.num_kv_heads * d), dtype),
+        "wv": dense_init(kv, (L, h, cfg.num_kv_heads * d), dtype),
+        "wo": dense_init(ko, (L, n_heads * d, h), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# GLU / MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(rng, d_model: int, d_ff: int, activation: str, num_layers: int,
+             dtype) -> dict:
+    k1, k2, k3 = jax.random.split(rng, 3)
+    L = num_layers
+    p = {
+        "w1": dense_init(k1, (L, d_model, d_ff), dtype),
+        "w2": dense_init(k2, (L, d_ff, d_model), dtype),
+    }
+    if activation in ("swiglu", "geglu"):
+        p["w3"] = dense_init(k3, (L, d_model, d_ff), dtype)
+    return p
+
+
+def mlp_apply(p, x, activation: str):
+    up = x @ p["w1"]
+    if activation == "swiglu":
+        act = jax.nn.silu(up) * (x @ p["w3"])
+    elif activation == "geglu":
+        act = jax.nn.gelu(up, approximate=True) * (x @ p["w3"])
+    else:
+        act = jax.nn.gelu(up, approximate=True)
+    return act @ p["w2"]

@@ -1,0 +1,129 @@
+"""RWKV-6 (Finch) block: token-shifted time-mix with data-dependent decay +
+squared-ReLU channel-mix [arXiv:2404.05892].
+
+The WKV recurrence itself is ``repro.kernels.rwkv6_scan`` (Pallas on TPU,
+pure-jnp scan oracle elsewhere).  Attention-free: the per-layer cache is the
+recurrent state + the two token-shift registers — O(1) in sequence length,
+which is what qualifies rwkv6 for the long_500k shape.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.kernels.rwkv6_scan.chunked import wkv6_chunked
+from repro.kernels.rwkv6_scan.ops import wkv6
+from repro.models.layers import dense_init, rms_norm
+
+DECAY_LORA = 64
+
+
+def init_ssm_blocks(rng, cfg: ModelConfig, L: int, dtype):
+    h, ff = cfg.d_model, cfg.d_ff
+    H, hs = cfg.num_heads, cfg.ssm.head_size
+    ks = jax.random.split(rng, 12)
+    p = {
+        "ln1": jnp.zeros((L, h), dtype), "ln2": jnp.zeros((L, h), dtype),
+        # time-mix lerp coefficients (one per projection)
+        "mx_r": jnp.full((L, h), 0.5, dtype), "mx_k": jnp.full((L, h), 0.5, dtype),
+        "mx_v": jnp.full((L, h), 0.5, dtype), "mx_w": jnp.full((L, h), 0.5, dtype),
+        "mx_g": jnp.full((L, h), 0.5, dtype),
+        "wr": dense_init(ks[0], (L, h, h), dtype),
+        "wk": dense_init(ks[1], (L, h, h), dtype),
+        "wv": dense_init(ks[2], (L, h, h), dtype),
+        "wg": dense_init(ks[3], (L, h, h), dtype),
+        "wo": dense_init(ks[4], (L, h, h), dtype),
+        # data-dependent decay: w_t = exp(-exp(w0 + tanh(x @ wa) @ wb))
+        "w0": jnp.full((L, h), -2.0, jnp.float32),
+        "wa": dense_init(ks[5], (L, h, DECAY_LORA), dtype),
+        "wb": dense_init(ks[6], (L, DECAY_LORA, h), dtype, scale=0.01),
+        "u": dense_init(ks[7], (L, H, hs), jnp.float32, scale=0.5),
+        "ln_x": jnp.zeros((L, h), dtype),      # per-head output norm
+        # channel-mix
+        "cmx_k": jnp.full((L, h), 0.5, dtype), "cmx_r": jnp.full((L, h), 0.5, dtype),
+        "cwk": dense_init(ks[8], (L, h, ff), dtype),
+        "cwv": dense_init(ks[9], (L, ff, h), dtype),
+        "cwr": dense_init(ks[10], (L, h, h), dtype),
+    }
+    return p
+
+
+def _shift(x, prev):
+    """Token shift: xs[t] = x[t-1], xs[0] = prev.  x [B,S,h], prev [B,h]."""
+    return jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _head_norm(y, weight, H, hs, eps):
+    B, S = y.shape[:2]
+    yh = y.reshape(B, S, H, hs).astype(jnp.float32)
+    var = jnp.mean(yh * yh, axis=-1, keepdims=True)
+    yh = yh * jax.lax.rsqrt(var + eps)
+    return (yh.reshape(B, S, H * hs) * (1.0 + weight.astype(jnp.float32))).astype(y.dtype)
+
+
+def rwkv_time_mix(cfg: ModelConfig, p, x, prev_x, state):
+    """x [B,S,h]; prev_x [B,h]; state [B,H,hs,hs] -> (y, last_x, new_state)."""
+    B, S, h = x.shape
+    H, hs = cfg.num_heads, cfg.ssm.head_size
+    xs = _shift(x, prev_x)
+
+    def mix(m):
+        return x + (xs - x) * m
+
+    r = (mix(p["mx_r"]) @ p["wr"]).reshape(B, S, H, hs)
+    k = (mix(p["mx_k"]) @ p["wk"]).reshape(B, S, H, hs)
+    v = (mix(p["mx_v"]) @ p["wv"]).reshape(B, S, H, hs)
+    g = jax.nn.silu(mix(p["mx_g"]) @ p["wg"])
+    dw = p["w0"] + jnp.tanh(mix(p["mx_w"]) @ p["wa"]) @ p["wb"]
+    w = jnp.exp(-jnp.exp(dw.astype(jnp.float32))).reshape(B, S, H, hs)
+
+    if (cfg.ssm.scan_impl == "chunked" and S > 1
+            and S % cfg.ssm.scan_chunk == 0):
+        y, new_state = wkv6_chunked(r, k, v, w.astype(r.dtype), p["u"],
+                                    state, chunk=cfg.ssm.scan_chunk)
+    else:
+        y, new_state = wkv6(r, k, v, w.astype(r.dtype), p["u"], state)
+    y = _head_norm(y.reshape(B, S, h), p["ln_x"], H, hs, cfg.norm_eps)
+    return (y * g) @ p["wo"], x[:, -1, :], new_state
+
+
+def rwkv_channel_mix(cfg: ModelConfig, p, x, prev_x):
+    xs = _shift(x, prev_x)
+    xk = x + (xs - x) * p["cmx_k"]
+    xr = x + (xs - x) * p["cmx_r"]
+    k = jnp.square(jax.nn.relu(xk @ p["cwk"]))
+    return jax.nn.sigmoid(xr @ p["cwr"]) * (k @ p["cwv"]), x[:, -1, :]
+
+
+def init_ssm_cache(cfg: ModelConfig, L: int, batch: int, dtype):
+    H, hs, h = cfg.num_heads, cfg.ssm.head_size, cfg.d_model
+    return {
+        "state": jnp.zeros((L, batch, H, hs, hs), jnp.float32),
+        "tm_prev": jnp.zeros((L, batch, h), dtype),
+        "cm_prev": jnp.zeros((L, batch, h), dtype),
+    }
+
+
+def ssm_block_apply(cfg: ModelConfig, p, x, positions, mask,
+                    cache=None, pos=None, build_cache_w=None):
+    B = x.shape[0]
+    H, hs, h = cfg.num_heads, cfg.ssm.head_size, cfg.d_model
+    if cache is None:
+        state = jnp.zeros((B, H, hs, hs), jnp.float32)
+        tm_prev = jnp.zeros((B, h), x.dtype)
+        cm_prev = jnp.zeros((B, h), x.dtype)
+    else:
+        state, tm_prev, cm_prev = cache["state"], cache["tm_prev"], cache["cm_prev"]
+
+    xn = rms_norm(x, p["ln1"], cfg.norm_eps)
+    y, tm_last, new_state = rwkv_time_mix(cfg, p, xn, tm_prev, state)
+    x = x + y
+    xn2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    y2, cm_last = rwkv_channel_mix(cfg, p, xn2, cm_prev)
+    x = x + y2
+
+    cache_out = None
+    if cache is not None or build_cache_w is not None:
+        cache_out = {"state": new_state, "tm_prev": tm_last, "cm_prev": cm_last}
+    return x, cache_out, jnp.zeros((), jnp.float32)

@@ -1,0 +1,65 @@
+"""Inference engine: batched prefill + autoregressive decode (serve path).
+
+Wraps the model's prefill/decode_step into jitted, optionally mesh-sharded
+functions.  ``serve_step`` is the unit the decode-shape dry-runs lower: ONE
+new token for every sequence in the batch against a seq_len-deep KV cache.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.models.transformer import Model, get_model
+
+
+def make_serve_step(model: Model, greedy: bool = True):
+    """(params, cache, token [B], pos) -> (next_token [B], cache)."""
+
+    def serve_step(params, cache, token, pos):
+        logits, cache = model.decode_step(params, cache, token, pos)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return nxt, cache
+
+    return serve_step
+
+
+class InferenceEngine:
+    """Single-host serving loop with greedy sampling and batched requests."""
+
+    def __init__(self, cfg: ModelConfig, params, max_len: int = 2048):
+        self.cfg = cfg
+        self.model = get_model(cfg)
+        self.params = params
+        self.max_len = max_len
+        self._prefill = jax.jit(
+            functools.partial(self.model.prefill, max_len=max_len))
+        self._step = jax.jit(make_serve_step(self.model),
+                             donate_argnums=(1,))
+
+    def generate(self, tokens, max_new_tokens: int = 32,
+                 prefix_emb=None) -> jnp.ndarray:
+        """tokens [B, S_p] -> generated [B, max_new_tokens] (greedy)."""
+        if not self.cfg.is_decoder:
+            raise ValueError(f"{self.cfg.name} is encoder-only: no decode")
+        kwargs = {}
+        if prefix_emb is not None:
+            kwargs["prefix_emb"] = prefix_emb
+        logits, cache, _ = self._prefill(self.params, tokens, **kwargs)
+        npre = 0 if prefix_emb is None else prefix_emb.shape[1]
+        pos = tokens.shape[1] + npre
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        outs = [tok]
+        for _ in range(max_new_tokens - 1):
+            tok, cache = self._step(self.params, cache, tok, jnp.int32(pos))
+            outs.append(tok)
+            pos += 1
+        return jnp.stack(outs, axis=1)
+
+    def encode(self, features):
+        logits, _ = jax.jit(self.model.forward)(self.params,
+                                                features=features)
+        return logits

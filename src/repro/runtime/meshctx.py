@@ -1,0 +1,20 @@
+"""Process-wide mesh context.
+
+Model code is mesh-agnostic except for explicitly-scheduled collectives
+(e.g. the shard_map MoE local-dispatch path).  Drivers that lower for a mesh
+register it here; model code asks for it lazily.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+_MESH = None
+
+
+def set_mesh(mesh) -> None:
+    global _MESH
+    _MESH = mesh
+
+
+def get_mesh():
+    return _MESH

@@ -1,0 +1,158 @@
+"""Production sharding rules for the (data, model[, pod]) mesh.
+
+Megatron-consistent tensor layout (so the GSPMD collective schedule matches
+the paper's TP analysis): column-parallel Q/K/V and GLU-up projections, row-
+parallel output/down projections, vocab-parallel embedding and LM head.  MoE
+expert stacks are sharded on the expert axis ("model") — expert parallelism.
+RWKV/SSM channel projections follow the same column/row pattern.
+
+KV caches: heads are sharded over "model" when divisible, otherwise the cache
+*length* axis is sharded (sequence-parallel decode — a beyond-paper adaptation
+needed for MQA archs like paligemma on a 16-wide model axis).
+
+Optimizer state is additionally sharded like its parameter (ZeRO-style: the
+fp32 m/v copies inherit the param spec, which already spreads them over
+"model"; a further "data"-axis scatter is applied to replicated params).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config.base import ModelConfig
+
+# leaf-name -> which dim gets the "model" axis (negative = from the end)
+_COL = {"wq", "wk", "wv", "w1", "w3", "sw1", "sw3", "in_proj", "wr", "wg",
+        "cwk", "cwr", "w_dt", "lm_head"}          # shard last dim
+_ROW = {"wo", "w2", "sw2", "cwv", "ssm_out"}      # shard second-to-last dim
+_EXPERT = {"we1", "we2", "we3"}                   # shard expert dim (1)
+_HEAD = {"u"}                                     # shard head dim (1)
+_DI = {"w_B", "w_C", "A_log", "b_dt", "D"}        # shard d_inner dim (1)
+_VOCAB0 = {"embed"}                               # shard dim 0 (vocab)
+_REPLICATED = {"router", "w0", "wa", "wb"}        # small / fp32-sensitive
+
+
+def _candidate_dims(name: str, ndim: int):
+    """Preferred 'model'-axis dims per leaf class, in fallback order.
+
+    MoE expert stacks prefer the expert dim (expert parallelism) but fall
+    back to the FFN dim when num_experts < axis size (e.g. mixtral's 8
+    experts on a 16-wide axis become tensor-parallel experts)."""
+    if name in _VOCAB0:
+        return [0, 1]
+    if name in {"we1", "we3"}:
+        return [1, 3]            # experts, then d_ff (column)
+    if name == "we2":
+        return [1, 2]            # experts, then d_ff (row)
+    if name in _COL:
+        return [ndim - 1]
+    if name in _ROW:
+        return [ndim - 2]
+    if name in (_HEAD | _DI):
+        return [1]
+    return []
+
+
+def _spec_for_leaf(name: str, shape, model_axis: str,
+                   axis_size: Optional[int]) -> P:
+    ndim = len(shape)
+    none = [None] * ndim
+    if name in _REPLICATED or ndim <= 1:
+        return P(*none)
+    for dim in _candidate_dims(name, ndim):
+        if axis_size is None or shape[dim] % axis_size == 0:
+            spec = list(none)
+            spec[dim] = model_axis
+            return P(*spec)
+    return P(*none)
+
+
+def param_specs(cfg: ModelConfig, params_shape, model_axis: str = "model",
+                axis_size: Optional[int] = None):
+    """PartitionSpec pytree matching a Model.init shape-tree.
+
+    ``axis_size`` enables divisibility-aware fallbacks; pass the mesh's
+    model-axis size (production: 16)."""
+
+    def walk(tree, name=""):
+        if isinstance(tree, dict):
+            return {k: walk(v, k) for k, v in tree.items()}
+        spec = _spec_for_leaf(name, tree.shape, model_axis, axis_size)
+        if cfg.moe_fsdp and name in ("we1", "we2", "we3"):
+            # §Perf: FSDP-style second-axis sharding of expert weights; the
+            # local-dispatch path all-gathers them just-in-time per layer.
+            data_dim = {"we1": 2, "we3": 2, "we2": 3}[name]
+            if spec[data_dim] is None and tree.shape[data_dim] % 16 == 0:
+                parts = list(spec)
+                parts[data_dim] = "data"
+                spec = P(*parts)
+        return spec
+
+    return walk(params_shape)
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Axes that carry data parallelism ("pod" first in multi-pod meshes)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def data_spec(mesh: Mesh, global_batch: int, extra_dims: int = 1) -> P:
+    """Spec for [B, ...] host data; replicate when batch isn't divisible."""
+    axes = batch_axes(mesh)
+    dp = 1
+    for a in axes:
+        dp *= mesh.shape[a]
+    lead = axes if (global_batch % dp == 0 and global_batch >= dp) else None
+    return P(lead, *([None] * extra_dims))
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, global_batch: int,
+                model_axis: str = "model"):
+    """Specs for Model.init_cache pytrees: [L, B, W, Hkv, D] k/v (+ states)."""
+    m = mesh.shape[model_axis]
+    axes = batch_axes(mesh)
+    dp = 1
+    for a in axes:
+        dp *= mesh.shape[a]
+    bdim = axes if global_batch % dp == 0 and global_batch >= dp else None
+
+    def kv_spec(width: int):
+        if cfg.num_kv_heads % m == 0:
+            return P(None, bdim, None, model_axis, None)
+        if width % m == 0:
+            return P(None, bdim, model_axis, None, None)   # seq-parallel cache
+        return P(None, bdim, None, None, None)
+
+    def walk(name, leaf):
+        if name in ("k", "v"):
+            return kv_spec(leaf.shape[2])
+        if name == "state":        # rwkv [L,B,H,hs,hs]
+            ax = model_axis if leaf.shape[2] % m == 0 else None
+            return P(None, bdim, ax, None, None)
+        if name == "ssm_state":    # hymba [L,B,di,N]
+            ax = model_axis if leaf.shape[2] % m == 0 else None
+            return P(None, bdim, ax, None)
+        if name in ("tm_prev", "cm_prev"):
+            return P(None, bdim, None)
+        return P(*([None] * len(leaf.shape)))
+
+    def tree(t):
+        return {k: walk(k, v) for k, v in t.items()}
+
+    return tree
+
+
+def shardings_from_specs(mesh: Mesh, specs):
+    return jax.tree.map(lambda sp: NamedSharding(mesh, sp), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def logits_spec(mesh: Mesh, global_batch: int, model_axis: str = "model",
+                seq_dim: bool = False) -> P:
+    b = data_spec(mesh, global_batch, 0)
+    lead = b[0] if len(b) else None
+    if seq_dim:
+        return P(lead, None, model_axis)
+    return P(lead, model_axis)

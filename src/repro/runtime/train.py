@@ -1,0 +1,116 @@
+"""Training substrate: loss functions + jit-able train_step per architecture.
+
+Loss variants:
+  * ``dense``   — next-token CE over the full logits (baseline).
+  * ``fused``   — chunked CE that never materializes the [B,S,V] logits in one
+    piece (vocab-chunked logsumexp).  This is a §Perf hillclimb option for the
+    huge-vocab archs (paligemma 257k, gemma 256k); numerically identical.
+
+Encoder (hubert) trains frame classification (no shift); VLM (paligemma)
+computes CE on the text suffix only (prefix patches carry no targets).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.models.transformer import Model
+from repro.optim.adamw import AdamW
+
+
+def _ce(logits, targets, vocab: int):
+    """Mean cross-entropy in fp32.  logits [..., V]; targets [...] int."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def ce_from_hidden_chunked(x, head, targets, chunk: int = 16384,
+                           vocab: int = None):
+    """CE computed from final hidden states with a vocab-chunked logsumexp —
+    peak activation ~[B,S,chunk] instead of [B,S,V].  x: [...,h];
+    head: [h,V]; targets: [...] int.  ``vocab`` masks padded head columns.
+    Numerically identical to _ce."""
+    xf = x.astype(jnp.float32)
+    V = head.shape[-1] if vocab is None else vocab
+    chunk = min(chunk, V)
+    n_chunks = (V + chunk - 1) // chunk
+    pad = n_chunks * chunk - head.shape[-1]
+    head_p = jnp.pad(head, [(0, 0), (0, pad)]) if pad > 0 else head
+
+    def body(carry, i):
+        run_max, run_sum = carry
+        w = jax.lax.dynamic_slice_in_dim(head_p, i * chunk, chunk, axis=-1)
+        lg = xf @ w.astype(jnp.float32)                       # [..., chunk]
+        col = i * chunk + jnp.arange(chunk)
+        lg = jnp.where(col < V, lg, -jnp.inf)
+        m = jnp.maximum(run_max, lg.max(-1))
+        run_sum = (run_sum * jnp.exp(run_max - m)
+                   + jnp.exp(lg - m[..., None]).sum(-1))
+        return (m, run_sum), None
+
+    init = (jnp.full(xf.shape[:-1], -jnp.inf, jnp.float32),
+            jnp.zeros(xf.shape[:-1], jnp.float32))
+    (m, s), _ = jax.lax.scan(body, init, jnp.arange(n_chunks))
+    logz = m + jnp.log(s)
+    gold_w = jnp.take(head, targets, axis=-1)                 # [h, ...]
+    gold_w = jnp.moveaxis(gold_w, 0, -1).astype(jnp.float32)  # [..., h]
+    gold = jnp.sum(xf * gold_w, axis=-1)
+    return jnp.mean(logz - gold)
+
+
+def make_loss_fn(model: Model, loss_impl: str = "dense") -> Callable:
+    cfg = model.cfg
+
+    def loss_fn(params, batch):
+        if cfg.family == "encoder":
+            logits, aux = model.forward(params, features=batch["features"])
+            loss = _ce(logits, batch["targets"], cfg.vocab_size)
+            return loss + aux, {"ce": loss, "aux": aux}
+        prefix = batch.get("prefix_emb")
+        tokens = batch["tokens"]
+        if loss_impl == "fused":
+            hidden, aux = model.forward(params, tokens, prefix_emb=prefix,
+                                        return_hidden=True)
+            if prefix is not None:
+                hidden = hidden[:, prefix.shape[1]:]
+            loss = ce_from_hidden_chunked(hidden[:, :-1],
+                                          model.head_matrix(params),
+                                          tokens[:, 1:],
+                                          vocab=cfg.vocab_size)
+        else:
+            logits, aux = model.forward(params, tokens, prefix_emb=prefix)
+            if prefix is not None:
+                logits = logits[:, prefix.shape[1]:]
+            loss = _ce(logits[:, :-1], tokens[:, 1:], cfg.vocab_size)
+        return loss + aux, {"ce": loss, "aux": aux}
+
+    return loss_fn
+
+
+def make_train_step(model: Model, optimizer: AdamW,
+                    loss_impl: str = "dense") -> Callable:
+    loss_fn = make_loss_fn(model, loss_impl)
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        params, opt_state, om = optimizer.update(grads, opt_state, params)
+        return params, opt_state, {"loss": loss, **metrics, **om}
+
+    return train_step
+
+
+def make_eval_step(model: Model) -> Callable:
+    loss_fn = make_loss_fn(model)
+
+    def eval_step(params, batch):
+        loss, metrics = loss_fn(params, batch)
+        return {"loss": loss, **metrics}
+
+    return eval_step

@@ -1,0 +1,94 @@
+"""Property-based invariants of the analytical comm model (hypothesis)."""
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.configs import get_config
+from repro.core import commodel as cm
+
+CFG = get_config("llama31-8b")
+
+t_strat = st.sampled_from([2, 4, 8])
+p_strat = st.sampled_from([2, 4, 8])
+sp_strat = st.integers(min_value=1, max_value=2048)
+sd_strat = st.integers(min_value=2, max_value=2048)
+
+
+@given(sp=sp_strat, sd=sd_strat, t=t_strat, p=p_strat)
+@settings(max_examples=80, deadline=None)
+def test_hybrid_degenerates_to_tp_and_pp(sp, sd, t, p):
+    """hybrid(t, p=1) == TP(t); hybrid(t=1, p) == PP(p)."""
+    assert cm.total_volume(cm.hybrid_comm_ops(CFG, sp, sd, t, 1)) == \
+        pytest.approx(cm.total_volume(cm.tp_comm_ops(CFG, sp, sd, t)))
+    assert cm.total_volume(cm.hybrid_comm_ops(CFG, sp, sd, 1, p)) == \
+        pytest.approx(cm.total_volume(cm.pp_comm_ops(CFG, sp, sd, p)))
+
+
+@given(sp=sp_strat, sd=sd_strat, t=t_strat)
+@settings(max_examples=60, deadline=None)
+def test_volume_monotone_in_decode_length(sp, sd, t):
+    assert cm.v_tp(CFG, sp, sd + 1, t) > cm.v_tp(CFG, sp, sd, t)
+
+
+@given(sp=sp_strat, sd=sd_strat, t=t_strat)
+@settings(max_examples=60, deadline=None)
+def test_volume_sublinear_in_decode_length(sp, sd, t):
+    """(S_p + S_d - 1) scaling ⇒ doubling S_d at-most-doubles volume, and
+    strictly less whenever there is a prefill to amortize (S_p > 1)."""
+    v1 = cm.v_tp(CFG, sp, sd, t)
+    v2 = cm.v_tp(CFG, sp, 2 * sd, t)
+    assert v2 <= 2 * v1 + 1e-9
+    if sp > 1:
+        assert v2 < 2 * v1
+
+
+@given(sp=sp_strat, sd=sd_strat, t=t_strat, p=p_strat)
+@settings(max_examples=60, deadline=None)
+def test_ops_nonnegative_and_consistent(sp, sd, t, p):
+    for o in cm.hybrid_comm_ops(CFG, sp, sd, t, p):
+        assert o.count >= 0 and o.msg_bytes >= 0
+        assert o.wire_bytes <= o.total_msg_bytes * 2   # AR factor ≤ 2
+        assert o.phase in ("prefill", "decode")
+
+
+@given(sd=sd_strat, t=t_strat)
+@settings(max_examples=40, deadline=None)
+def test_gather_mode_allgather_upper_bounds_gather(sd, t):
+    """XLA all-gather of full logits moves ≥ the NCCL gather's v/t slices."""
+    g = cm.total_volume([o for o in cm.tp_comm_ops(CFG, 128, sd, t)
+                         if o.collective == "gather"])
+    ag = cm.total_volume(
+        [o for o in cm.tp_comm_ops(CFG, 128, sd, t, gather_mode="allgather")
+         if o.collective == "allgather"])
+    assert ag >= g
+
+
+@given(sp=sp_strat, sd=sd_strat, e=st.sampled_from([2, 4, 8, 16]))
+@settings(max_examples=40, deadline=None)
+def test_moe_alltoall_scales_with_topk(sp, sd, e):
+    moe_cfg = get_config("mixtral-8x22b")
+    ops = cm.moe_comm_ops(moe_cfg, sp, sd, e)
+    assert len(ops) == 2
+    total_tokens_moved = sum(o.count * o.shape[0] for o in ops)
+    # dispatch+combine, top-2 copies of every processed token, 2L layers
+    expected = 2 * moe_cfg.num_layers * 2 * (sp + (sd - 1))
+    assert total_tokens_moved == expected
+
+
+@given(sp=sp_strat, t=t_strat, p=p_strat)
+@settings(max_examples=40, deadline=None)
+def test_encoder_has_no_decode_phase(sp, t, p):
+    enc = get_config("hubert-xlarge")
+    ops = cm.comm_ops_for(enc, sp, 4096, t, p)
+    assert all(o.phase == "prefill" for o in ops)
+
+
+@given(b=st.integers(min_value=1, max_value=256), t=t_strat)
+@settings(max_examples=30, deadline=None)
+def test_batch_scales_token_rows(b, t):
+    """Beyond-paper batched serving: rows scale linearly with batch."""
+    one = cm.tp_comm_ops(CFG, 128, 128, t, batch=1)
+    many = cm.tp_comm_ops(CFG, 128, 128, t, batch=b)
+    for o1, ob in zip(one, many):
+        assert ob.elements == o1.elements * b
+        assert ob.count == o1.count

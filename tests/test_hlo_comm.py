@@ -1,0 +1,68 @@
+"""Unit tests for the HLO collective extractor (canned HLO snippets)."""
+from repro.core.hlo_comm import (HLOCollective, collective_wire_bytes,
+                                 parse_hlo_collectives, summarize)
+from repro.core.hlo_cost import analyze_flops_bytes
+
+MODULE = """\
+HloModule jit_f, is_scheduled=true
+
+%body (param: (s32[], f32[8,64])) -> (s32[], f32[8,64]) {
+  %all-gather = f32[8,256]{0,1} all-gather(%copy), channel_id=1, replica_groups=[1,4]<=[4], dimensions={1}
+  %dot = f32[8,64]{1,0} dot(%all-gather, %p), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,64]{1,0} all-reduce(%dot), channel_id=2, replica_groups={{0,1},{2,3}}, to_apply=%add
+}
+
+%cond (param.1: (s32[], f32[8,64])) -> pred[] {
+  ROOT %lt = pred[] compare(%gte, %c), direction=LT
+}
+
+ENTRY %main_spmd (p0: f32[8,64]) -> f32[] {
+  %while.8 = (s32[], f32[8,64]{1,0}) while(%tuple.4), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"5"}}
+  %cp = f32[2,64]{1,0} collective-permute(%slice), channel_id=3, source_target_pairs={{0,1},{1,2},{2,3}}
+  ROOT %all-reduce.9 = f32[] all-reduce(%sum), channel_id=4, replica_groups=[1,4]<=[4], to_apply=%add
+}
+"""
+
+
+def test_trip_count_expansion():
+    colls = parse_hlo_collectives(MODULE)
+    s = summarize(colls)
+    assert s["allgather"]["count"] == 5          # 1 op × trip 5
+    assert s["allreduce"]["count"] == 6          # 5 in body + 1 entry
+    assert s["collectivepermute"]["count"] == 1
+
+
+def test_group_sizes_and_wire_factors():
+    colls = {c.op_name: c for c in parse_hlo_collectives(MODULE)}
+    ag = colls["all-gather"]
+    assert ag.group_size == 4                    # iota [1,4]<=[4]
+    assert ag.out_bytes == 8 * 256 * 4
+    assert ag.wire_bytes == ag.total_bytes * 3 / 4
+    ar = colls["ar"]
+    assert ar.group_size == 2                    # {{0,1},{2,3}}
+    assert ar.wire_bytes == ar.total_bytes * 2 * (2 - 1) / 2
+    cp = colls["cp"]
+    assert cp.wire_bytes == cp.total_bytes       # permute: 1×
+
+
+def test_async_start_counted_once():
+    text = """\
+ENTRY %main (p: f32[4,4]) -> f32[4,4] {
+  %ar-start = (f32[4,4], f32[4,4]) all-reduce-start(%p), replica_groups=[1,2]<=[2]
+  ROOT %ar-done = f32[4,4] all-reduce-done(%ar-start)
+}
+"""
+    colls = parse_hlo_collectives(text)
+    assert len(colls) == 1
+    assert colls[0].out_bytes == 64
+
+
+def test_flops_trip_expansion():
+    flops, hbm = analyze_flops_bytes(MODULE)
+    # dot: 2 · (8·64) · 256 per iteration × trip 5
+    assert flops == 2 * 8 * 64 * 256 * 5
+
+
+def test_empty_module():
+    assert parse_hlo_collectives("HloModule empty") == []
+    assert collective_wire_bytes("HloModule empty") == 0.0

@@ -1,0 +1,164 @@
+"""Pallas kernel validation: interpret-mode execution vs pure-jnp oracles,
+shape/dtype sweeps via hypothesis + parametrized grids."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.kernels.decode_attention.decode_kernel import decode_attention_pallas
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.flash_attention.flash_kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.rmsnorm.rmsnorm_kernel import rms_norm_pallas
+from repro.kernels.rmsnorm.ref import rms_norm_ref
+from repro.kernels.rwkv6_scan.ref import wkv6_ref
+from repro.kernels.rwkv6_scan.wkv6_kernel import wkv6_pallas
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+def _rand(rng, shape, dtype, scale=1.0):
+    return jnp.asarray(rng.standard_normal(shape) * scale, dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash attention (prefill)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("s,hq,hkv,d,bq,bk,window", [
+    (128, 4, 2, 64, 64, 64, None),
+    (256, 8, 8, 32, 128, 64, None),     # MHA
+    (256, 4, 1, 64, 64, 128, None),     # MQA
+    (256, 4, 2, 64, 64, 64, 96),        # sliding window
+    (128, 2, 2, 128, 128, 128, 64),     # single block + window
+])
+def test_flash_attention_sweep(dtype, s, hq, hkv, d, bq, bk, window):
+    rng = np.random.default_rng(0)
+    q = _rand(rng, (2, s, hq, d), dtype)
+    k = _rand(rng, (2, s, hkv, d), dtype)
+    v = _rand(rng, (2, s, hkv, d), dtype)
+    got = flash_attention_pallas(q, k, v, causal=True, window=window,
+                                 block_q=bq, block_kv=bk, interpret=True)
+    want = flash_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+@given(s_blocks=st.integers(1, 4), hkv=st.sampled_from([1, 2, 4]),
+       groups=st.sampled_from([1, 2, 4]), d=st.sampled_from([32, 64]))
+@settings(max_examples=12, deadline=None)
+def test_flash_attention_property(s_blocks, hkv, groups, d):
+    rng = np.random.default_rng(s_blocks * 131 + hkv * 7 + groups * 3 + d)
+    s = 64 * s_blocks
+    q = _rand(rng, (1, s, hkv * groups, d), jnp.float32)
+    k = _rand(rng, (1, s, hkv, d), jnp.float32)
+    v = _rand(rng, (1, s, hkv, d), jnp.float32)
+    got = flash_attention_pallas(q, k, v, block_q=64, block_kv=64,
+                                 interpret=True)
+    want = flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("w,hq,hkv,d,pos,bkv", [
+    (256, 4, 2, 64, 100, 64),
+    (512, 8, 1, 64, 512, 128),          # MQA, full cache
+    (128, 4, 4, 32, 1, 128),            # single valid slot
+])
+def test_decode_attention_sweep(dtype, w, hq, hkv, d, pos, bkv):
+    rng = np.random.default_rng(1)
+    q = _rand(rng, (2, hq, d), dtype)
+    k = _rand(rng, (2, w, hkv, d), dtype)
+    v = _rand(rng, (2, w, hkv, d), dtype)
+    valid = jnp.arange(w) < pos
+    got = decode_attention_pallas(q, k, v, valid, block_kv=bkv, interpret=True)
+    want = decode_attention_ref(q, k, v, valid)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+def test_decode_attention_masks_invalid_slots():
+    """Changing masked-out cache entries must not change the output."""
+    rng = np.random.default_rng(2)
+    q = _rand(rng, (1, 4, 32), jnp.float32)
+    k = _rand(rng, (1, 128, 2, 32), jnp.float32)
+    v = _rand(rng, (1, 128, 2, 32), jnp.float32)
+    valid = jnp.arange(128) < 40
+    out1 = decode_attention_pallas(q, k, v, valid, block_kv=64, interpret=True)
+    k2 = k.at[:, 40:].set(99.0)
+    out2 = decode_attention_pallas(q, k2, v, valid, block_kv=64,
+                                   interpret=True)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2))
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape,h", [((4, 100), 512), ((2, 7, 33), 256),
+                                     ((1,), 128)])
+def test_rmsnorm_sweep(dtype, shape, h):
+    rng = np.random.default_rng(3)
+    x = _rand(rng, shape + (h,), dtype)
+    w = _rand(rng, (h,), dtype, scale=0.1)
+    got = rms_norm_pallas(x, w, interpret=True, block_rows=64)
+    want = rms_norm_ref(x, w)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+# ---------------------------------------------------------------------------
+# wkv6 recurrence
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,s,h,hs,chunk", [
+    (2, 64, 3, 32, 16), (1, 128, 2, 64, 128), (3, 32, 1, 16, 8)])
+def test_wkv6_sweep(dtype, b, s, h, hs, chunk):
+    rng = np.random.default_rng(4)
+    r = _rand(rng, (b, s, h, hs), dtype, 0.5)
+    k = _rand(rng, (b, s, h, hs), dtype, 0.5)
+    v = _rand(rng, (b, s, h, hs), dtype, 0.5)
+    w = jnp.asarray(rng.uniform(0.8, 0.999, (b, s, h, hs)), dtype)
+    u = _rand(rng, (h, hs), jnp.float32, 0.3)
+    st0 = _rand(rng, (b, h, hs, hs), jnp.float32, 0.1)
+    got_y, got_s = wkv6_pallas(r, k, v, w, u, st0, chunk=chunk, interpret=True)
+    want_y, want_s = wkv6_ref(r, k, v, w, u, st0)
+    np.testing.assert_allclose(np.asarray(got_y, np.float32),
+                               np.asarray(want_y, np.float32),
+                               atol=TOL[dtype] * 4, rtol=TOL[dtype] * 4)
+    np.testing.assert_allclose(np.asarray(got_s), np.asarray(want_s),
+                               atol=TOL[dtype] * 4, rtol=TOL[dtype] * 4)
+
+
+def test_wkv6_chunk_invariance():
+    """Chunked streaming must equal one-shot processing (state hand-off)."""
+    rng = np.random.default_rng(5)
+    b, s, h, hs = 1, 64, 2, 32
+    args = [_rand(rng, (b, s, h, hs), jnp.float32, 0.5) for _ in range(3)]
+    w = jnp.asarray(rng.uniform(0.9, 0.999, (b, s, h, hs)), jnp.float32)
+    u = _rand(rng, (h, hs), jnp.float32, 0.3)
+    st0 = jnp.zeros((b, h, hs, hs), jnp.float32)
+    y_full, s_full = wkv6_ref(*args, w, u, st0)
+    y1, s_mid = wkv6_ref(*[a[:, :32] for a in args], w[:, :32], u, st0)
+    y2, s_end = wkv6_ref(*[a[:, 32:] for a in args], w[:, 32:], u, s_mid)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s_end), np.asarray(s_full),
+                               atol=1e-5)

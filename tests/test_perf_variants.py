@@ -1,0 +1,143 @@
+"""§Perf variant equivalence: every optimization must be numerically
+indistinguishable from the paper-faithful baseline it replaces."""
+import dataclasses
+
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.kernels.rwkv6_scan.chunked import wkv6_chunked
+from repro.kernels.rwkv6_scan.ref import wkv6_ref
+from repro.models.layers import (MaskSpec, chunked_gqa_attention,
+                                 gqa_attention)
+from repro.models.transformer import get_model
+
+
+class TestChunkedAttention:
+    @pytest.mark.parametrize("spec", [
+        MaskSpec(), MaskSpec(window=40),
+        MaskSpec(mode="prefix", prefix_len=16),
+        MaskSpec(mode="bidirectional")])
+    @pytest.mark.parametrize("kv_chunk", [16, 64])
+    def test_matches_reference(self, spec, kv_chunk):
+        rng = np.random.default_rng(0)
+        B, S, Hq, Hkv, D = 2, 128, 4, 2, 32
+        q = jnp.asarray(rng.standard_normal((B, S, Hq, D)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((B, S, Hkv, D)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((B, S, Hkv, D)), jnp.float32)
+        want = gqa_attention(q, k, v, spec.materialize(S, S))
+        got = chunked_gqa_attention(q, k, v, spec, kv_chunk=kv_chunk)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-5)
+
+    @pytest.mark.parametrize("arch", ["granite-8b", "mixtral-8x22b",
+                                      "paligemma-3b", "hubert-xlarge"])
+    def test_model_level_equivalence(self, arch):
+        cfg = get_config(arch).reduced()
+        cfg2 = dataclasses.replace(cfg, attention_impl="chunked",
+                                   attention_chunk=16)
+        m1, m2 = get_model(cfg), get_model(cfg2)
+        params = m1.init(jax.random.PRNGKey(0))
+        rng = np.random.default_rng(1)
+        kw = {}
+        if cfg.family == "encoder":
+            kw["features"] = jnp.asarray(
+                rng.standard_normal((2, 32, cfg.d_model)), jnp.float32)
+            l1, _ = m1.forward(params, **kw)
+            l2, _ = m2.forward(params, **kw)
+        else:
+            toks = jnp.asarray(rng.integers(2, cfg.vocab_size, (2, 32)),
+                               jnp.int32)
+            if cfg.family == "vlm":
+                kw["prefix_emb"] = jnp.asarray(rng.standard_normal(
+                    (2, cfg.num_prefix_tokens, cfg.d_model)),
+                    jnp.float32) * 0.02
+            l1, _ = m1.forward(params, toks, **kw)
+            l2, _ = m2.forward(params, toks, **kw)
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                                   atol=5e-4)
+
+
+class TestChunkedWKV6:
+    @given(chunk=st.sampled_from([8, 16, 32]),
+           seed=st.integers(0, 10))
+    @settings(max_examples=10, deadline=None)
+    def test_matches_oracle_with_extreme_decays(self, chunk, seed):
+        rng = np.random.default_rng(seed)
+        B, S, H, hs = 2, 64, 2, 16
+        r, k, v = (jnp.asarray(rng.standard_normal((B, S, H, hs)) * 0.5,
+                               jnp.float32) for _ in range(3))
+        dw = rng.uniform(-3, 2.5, (B, S, H, hs))   # decay w ∈ (~1e-5, 0.95)
+        w = jnp.asarray(np.exp(-np.exp(dw)), jnp.float32)
+        u = jnp.asarray(rng.standard_normal((H, hs)) * 0.3, jnp.float32)
+        s0 = jnp.asarray(rng.standard_normal((B, H, hs, hs)) * 0.1,
+                         jnp.float32)
+        wy, ws = wkv6_ref(r, k, v, w, u, s0)
+        gy, gs = wkv6_chunked(r, k, v, w, u, s0, chunk=chunk)
+        np.testing.assert_allclose(np.asarray(gy), np.asarray(wy), atol=1e-4)
+        np.testing.assert_allclose(np.asarray(gs), np.asarray(ws), atol=1e-4)
+
+    def test_model_level_equivalence(self):
+        cfg = get_config("rwkv6-7b").reduced()
+        cfg2 = dataclasses.replace(
+            cfg, ssm=dataclasses.replace(cfg.ssm, scan_impl="chunked",
+                                         scan_chunk=16))
+        m1, m2 = get_model(cfg), get_model(cfg2)
+        params = m1.init(jax.random.PRNGKey(0))
+        toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 2,
+                                  cfg.vocab_size)
+        l1, _ = m1.forward(params, toks)
+        l2, _ = m2.forward(params, toks)
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), atol=5e-4)
+
+
+class TestChunkedSelectiveScan:
+    @given(chunk=st.sampled_from([8, 16, 32]), seed=st.integers(0, 5))
+    @settings(max_examples=8, deadline=None)
+    def test_matches_oracle(self, chunk, seed):
+        from repro.models.hybrid import selective_scan, selective_scan_chunked
+        rng = np.random.default_rng(seed)
+        B, S, di, N = 2, 64, 12, 8
+        xm = jnp.asarray(rng.standard_normal((B, S, di)), jnp.float32)
+        dt = jnp.asarray(rng.uniform(0.001, 0.5, (B, S, di)), jnp.float32)
+        Bm = jnp.asarray(rng.standard_normal((B, S, N)), jnp.float32)
+        Cm = jnp.asarray(rng.standard_normal((B, S, N)), jnp.float32)
+        A = -jnp.exp(jnp.asarray(rng.uniform(-2, 2, (di, N)), jnp.float32))
+        D = jnp.ones((di,), jnp.float32)
+        s0 = jnp.asarray(rng.standard_normal((B, di, N)) * 0.1, jnp.float32)
+        wy, ws = selective_scan(xm, dt, Bm, Cm, A, D, s0)
+        gy, gs = selective_scan_chunked(xm, dt, Bm, Cm, A, D, s0, chunk=chunk)
+        np.testing.assert_allclose(np.asarray(gy), np.asarray(wy), atol=1e-4)
+        np.testing.assert_allclose(np.asarray(gs), np.asarray(ws), atol=1e-4)
+
+    def test_model_level_equivalence(self):
+        cfg = get_config("hymba-1.5b").reduced()
+        cfg2 = dataclasses.replace(
+            cfg, ssm=dataclasses.replace(cfg.ssm, scan_impl="chunked",
+                                         scan_chunk=16))
+        m1, m2 = get_model(cfg), get_model(cfg2)
+        params = m1.init(jax.random.PRNGKey(0))
+        toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 2,
+                                  cfg.vocab_size)
+        l1, _ = m1.forward(params, toks)
+        l2, _ = m2.forward(params, toks)
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), atol=5e-4)
+
+
+class TestMaskSpec:
+    @given(q_len=st.integers(1, 40), kv_len=st.integers(1, 40),
+           window=st.one_of(st.none(), st.integers(1, 32)),
+           prefix=st.integers(0, 16),
+           mode=st.sampled_from(["causal", "bidirectional", "prefix"]))
+    @settings(max_examples=60, deadline=None)
+    def test_block_matches_materialized(self, q_len, kv_len, window, prefix,
+                                        mode):
+        spec = MaskSpec(mode=mode, window=window, prefix_len=prefix)
+        full = spec.materialize(q_len, kv_len)
+        block = spec.block(jnp.arange(q_len), jnp.arange(kv_len))
+        np.testing.assert_array_equal(np.asarray(full), np.asarray(block))

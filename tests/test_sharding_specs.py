@@ -1,0 +1,104 @@
+"""Structural sharding-rule checks for every assigned architecture on the
+production mesh shape — catches divisibility bugs without compiling."""
+import pytest
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.config.base import INPUT_SHAPES
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.specs import skip_reason
+from repro.models.transformer import get_model
+from repro.runtime import sharding as sh
+
+ASSIGNED = [a for a in ARCH_IDS if not a.startswith("llama")]
+MODEL_AXIS_SIZE = 16
+
+
+def _check_divisible(shapes, specs, where):
+    def walk(s_tree, p_tree, path=""):
+        if isinstance(s_tree, dict):
+            for k in s_tree:
+                walk(s_tree[k], p_tree[k], path + "/" + k)
+            return
+        for dim, ax in zip(s_tree.shape, tuple(p_tree)):
+            if ax == "model":
+                assert dim % MODEL_AXIS_SIZE == 0, \
+                    f"{where}{path}: dim {dim} not divisible by 16 ({p_tree})"
+    walk(shapes, specs)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_param_specs_divisible_on_16way_model_axis(arch):
+    cfg = get_config(arch)
+    model = get_model(cfg)
+    shapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    specs = sh.param_specs(cfg, shapes, axis_size=MODEL_AXIS_SIZE)
+    _check_divisible(shapes, specs, arch)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_every_param_leaf_has_a_spec(arch):
+    cfg = get_config(arch)
+    model = get_model(cfg)
+    shapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    specs = sh.param_specs(cfg, shapes)
+    n_shapes = len(jax.tree.leaves(shapes))
+    n_specs = len(jax.tree.leaves(
+        specs, is_leaf=lambda x: isinstance(x, P)))
+    assert n_shapes == n_specs
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_big_weights_are_sharded(arch):
+    """No ≥64 MiB (bf16) weight may be fully replicated across the mesh."""
+    cfg = get_config(arch)
+    model = get_model(cfg)
+    shapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    specs = sh.param_specs(cfg, shapes)
+
+    def walk(s_tree, p_tree, path=""):
+        if isinstance(s_tree, dict):
+            for k in s_tree:
+                walk(s_tree[k], p_tree[k], path + "/" + k)
+            return
+        nbytes = 2
+        for d in s_tree.shape:
+            nbytes *= d
+        if nbytes >= 64 * 2**20:
+            assert any(ax == "model" for ax in tuple(p_tree)), \
+                f"{arch}{path}: {s_tree.shape} ({nbytes/2**20:.0f} MiB) replicated"
+    walk(shapes, specs)
+
+
+def test_skip_matrix_matches_design():
+    """The documented (arch × shape) skip set — DESIGN.md §4."""
+    live, skipped = [], []
+    for a in ASSIGNED:
+        cfg = get_config(a)
+        for s in INPUT_SHAPES.values():
+            (skipped if skip_reason(cfg, s) else live).append((a, s.name))
+    assert len(live) == 32
+    assert ("hubert-xlarge", "decode_32k") in skipped
+    assert ("hubert-xlarge", "long_500k") in skipped
+    assert ("granite-8b", "long_500k") in skipped
+    assert ("rwkv6-7b", "long_500k") in live
+    assert ("hymba-1.5b", "long_500k") in live
+    assert ("mixtral-8x22b", "long_500k") in live       # SWA
+    assert len(skipped) == 8
+
+
+def test_cache_specs_mqa_falls_back_to_seq_sharding():
+    """paligemma kv=1 can't shard heads 16-way: the cache length axis is
+    sharded instead (sequence-parallel decode)."""
+    import jax.numpy as jnp
+    cfg = get_config("paligemma-3b")
+    model = get_model(cfg)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+    cache_shapes = jax.eval_shape(lambda: model.init_cache(128, 32768))
+    specs = sh.cache_specs(cfg, FakeMesh(), 128)(cache_shapes)
+    assert specs["k"] == P(None, ("data",), "model", None, None) or \
+        specs["k"][2] == "model"

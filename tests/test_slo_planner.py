@@ -1,0 +1,103 @@
+"""SLO-model reproduction of the paper's Figs 8–10 orderings + planner
+recommendations (§V-C deployment guidance)."""
+import pytest
+
+from repro.config.base import H100_NODE
+from repro.configs import get_config
+from repro.core.planner import feasible_layouts, plan, recommend
+from repro.core.slo import predict_slo
+
+L3 = get_config("llama32-3b")
+L13 = get_config("llama2-13b")
+
+
+class TestFig8TPScaling:
+    def test_ttft_improves_with_tp(self):
+        """Prefill is compute-bound: TTFT decreases TP2 → TP4 → TP8."""
+        t2 = predict_slo(L3, 128, 128, t=2).ttft
+        t4 = predict_slo(L3, 128, 128, t=4).ttft
+        t8 = predict_slo(L3, 128, 128, t=8).ttft
+        assert t2 > t4 > t8
+
+    def test_tpot_degrades_cross_node(self):
+        """TP=8 spans two nodes: decode becomes communication-bound."""
+        t4 = predict_slo(L3, 128, 128, t=4)
+        t8 = predict_slo(L3, 128, 128, t=8)
+        assert t8.tpot > 3 * t4.tpot
+        assert t8.e2e > t4.e2e
+
+    def test_intra_node_scaling_helps(self):
+        t2 = predict_slo(L3, 128, 128, t=2)
+        t4 = predict_slo(L3, 128, 128, t=4)
+        assert t4.tpot < t2.tpot and t4.e2e < t2.e2e
+
+
+class TestFig9PPScaling:
+    def test_ttft_grows_with_depth(self):
+        vals = [predict_slo(L3, 128, 128, t=1, p=p).ttft for p in (2, 4, 8)]
+        assert vals[0] < vals[1] < vals[2]
+
+    def test_tpot_jumps_cross_node(self):
+        p4 = predict_slo(L3, 128, 128, t=1, p=4)
+        p8 = predict_slo(L3, 128, 128, t=1, p=8)
+        assert p8.tpot > 2 * p4.tpot
+
+    def test_pp_volume_beats_tp(self):
+        tp = predict_slo(L3, 128, 128, t=4).comm_volume
+        pp = predict_slo(L3, 128, 128, t=1, p=4).comm_volume
+        assert pp < tp / 10
+
+
+class TestFig10Hybrid:
+    def test_tp8_optimal_for_13b(self):
+        rows = {(t, p): predict_slo(L13, 128, 128, t=t, p=p)
+                for t, p in ((8, 1), (1, 8), (2, 4), (4, 2))}
+        best = min(rows, key=lambda k: rows[k].e2e)
+        assert best == (8, 1)
+        assert rows[(8, 1)].ttft < min(r.ttft for k, r in rows.items()
+                                       if k != (8, 1)) / 3
+
+    def test_pp8_moderate(self):
+        pp8 = predict_slo(L13, 128, 128, t=1, p=8)
+        tp8 = predict_slo(L13, 128, 128, t=8, p=1)
+        assert pp8.comm_volume < tp8.comm_volume / 5
+        assert pp8.ttft > tp8.ttft
+
+
+class TestPlanner:
+    def test_feasible_layouts_respect_divisibility(self):
+        for t, p in feasible_layouts(L3, 8):
+            assert L3.num_kv_heads % t == 0
+            assert L3.num_layers % p == 0
+
+    def test_short_sequence_prefers_tp(self):
+        """Paper §V-C: interactive short-seq workloads ⇒ pure TP."""
+        best = recommend(L13, 8, 128, 128, objective="ttft")
+        assert best.pipeline_parallel == 1
+        assert best.tensor_parallel == 8
+
+    def test_volume_objective_prefers_pp(self):
+        """Paper §V-C: bandwidth-constrained fabric ⇒ PP."""
+        best = recommend(L13, 8, 128, 2048, objective="volume")
+        assert best.tensor_parallel == 1
+        assert best.pipeline_parallel == 8
+
+    def test_volume_budget_excludes_tp(self):
+        cands = plan(L13, 8, 128, 512, objective="e2e",
+                     volume_budget=50 * 2**20)
+        feasible = [c for c in cands if c.score != float("inf")]
+        assert all(c.slo.comm_volume <= 50 * 2**20 for c in feasible)
+
+
+class TestSLOSanity:
+    @pytest.mark.parametrize("arch", ["llama32-3b", "llama2-13b",
+                                      "granite-8b", "mixtral-8x22b"])
+    def test_positive_and_ordered(self, arch):
+        cfg = get_config(arch)
+        r = predict_slo(cfg, 128, 128, t=4)
+        assert 0 < r.ttft < 100 and 0 < r.tpot < 10
+        assert r.e2e >= r.ttft
+
+    def test_e2e_composition(self):
+        r = predict_slo(L3, 128, 128, t=2)
+        assert r.e2e == pytest.approx(r.ttft + 127 * r.tpot)

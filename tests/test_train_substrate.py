@@ -1,0 +1,115 @@
+"""Training substrate: loss descent, fused-CE equivalence, optimizer,
+checkpoint roundtrip, data pipeline determinism."""
+import dataclasses
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.configs import get_config
+from repro.data.pipeline import SyntheticTokens
+from repro.models.transformer import get_model
+from repro.optim.adamw import AdamW, cosine_schedule
+from repro.runtime.train import (_ce, ce_from_hidden_chunked, make_loss_fn,
+                                 make_train_step)
+
+
+def test_loss_decreases_on_fixed_batch():
+    cfg = get_config("internlm2-1.8b").reduced()
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = AdamW(lr=cosine_schedule(1e-3, 2, 100))
+    state = opt.init(params)
+    step = jax.jit(make_train_step(model, opt))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (4, 64), 2,
+                                          cfg.vocab_size)}
+    losses = []
+    for _ in range(15):
+        params, state, m = step(params, state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.5, losses
+
+
+def test_fused_ce_matches_dense():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((2, 9, 32)), jnp.float32)
+    head = jnp.asarray(rng.standard_normal((32, 77)), jnp.float32)
+    tgt = jnp.asarray(rng.integers(0, 77, (2, 9)), jnp.int32)
+    dense = _ce(x @ head, tgt, 77)
+    fused = ce_from_hidden_chunked(x, head, tgt, chunk=13)  # uneven chunks
+    assert float(jnp.abs(dense - fused)) < 1e-5
+
+
+def test_fused_loss_fn_matches_dense_loss_fn():
+    cfg = get_config("gemma-7b").reduced()      # tied embeddings path
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 32), 2,
+                                          cfg.vocab_size)}
+    dense, _ = make_loss_fn(model, "dense")(params, batch)
+    fused, _ = make_loss_fn(model, "fused")(params, batch)
+    assert float(jnp.abs(dense - fused)) < 1e-4
+
+
+def test_grad_clip_bounds_update():
+    opt = AdamW(grad_clip=1.0)
+    params = {"w": jnp.ones((4,))}
+    state = opt.init(params)
+    huge = {"w": jnp.full((4,), 1e6)}
+    _, _, metrics = opt.update(huge, state, params)
+    assert float(metrics["grad_norm"]) > 1e5       # raw norm reported
+    # post-clip first moment bounded by (1-b1)·clip
+    new_p, new_s, _ = opt.update(huge, state, params)
+    assert float(jnp.abs(new_s["m"]["w"]).max()) <= 0.1 + 1e-6
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1e-3, 10, 100)
+    assert float(lr(0)) == 0.0
+    assert float(lr(10)) == pytest.approx(1e-3, rel=1e-5)
+    assert float(lr(100)) == pytest.approx(0.0, abs=1e-9)
+    assert float(lr(55)) < float(lr(20))
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": {"b": jnp.arange(6, dtype=jnp.float32).reshape(2, 3)},
+            "c": jnp.asarray([1, 2], jnp.int32)}
+    save_checkpoint(str(tmp_path / "ck"), tree, step=7)
+    loaded, step = load_checkpoint(str(tmp_path / "ck"))
+    assert step == 7
+    np.testing.assert_array_equal(np.asarray(tree["a"]["b"]), loaded["a"]["b"])
+    np.testing.assert_array_equal(np.asarray(tree["c"]), loaded["c"])
+
+
+def test_data_pipeline_determinism_and_sharding():
+    ds = SyntheticTokens(vocab_size=1000, seq_len=32, global_batch=8, seed=3)
+    full = ds.batch_at(5)
+    # any host slice matches the corresponding rows of the global batch
+    np.testing.assert_array_equal(full[2:5], ds.batch_at(5, 2, 5))
+    # deterministic across calls, different across steps/seeds
+    np.testing.assert_array_equal(full, ds.batch_at(5))
+    assert not np.array_equal(full, ds.batch_at(6))
+    assert not np.array_equal(
+        full, SyntheticTokens(1000, 32, 8, seed=4).batch_at(5))
+    # BOS resets + vocab range
+    assert (full[:, 0] == ds.bos_id).all()
+    assert full.min() >= 1 and full.max() < 1000
+
+
+def test_train_step_with_remat_matches_no_remat():
+    cfg = dataclasses.replace(get_config("granite-8b").reduced())
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 2,
+                              cfg.vocab_size)
+    loss_fn = make_loss_fn(model)
+    g1 = jax.grad(lambda p: loss_fn(p, {"tokens": toks})[0])(params)
+    cfg2 = dataclasses.replace(cfg, remat="full")
+    model2 = get_model(cfg2)
+    g2 = jax.grad(lambda p: make_loss_fn(model2)(p, {"tokens": toks})[0])(params)
+    leaves1, leaves2 = jax.tree.leaves(g1), jax.tree.leaves(g2)
+    for a, b in zip(leaves1, leaves2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-5, rtol=1e-4)
