@@ -1,0 +1,149 @@
+"""Decode hot-path benchmark: unrolled vs scanned vs fused multi-token TP.
+
+Times three decode strategies of the explicit TP engine on a 4-device
+host-platform mesh (reduced configs, CPU-sized):
+
+  unrolled   seed behaviour — one jit dispatch per token, Python-unrolled
+             layer loop, cache re-stacked every step (paper-parity mode)
+  scanned    one dispatch per token, lax.scan layers + donated cache
+  fused      ``tp_generate`` — N tokens per dispatch (lax.fori_loop)
+
+Emits ``BENCH_decode.json`` at the repo root (tokens/sec and ms/token per
+arch × variant) so the perf trajectory is tracked across PRs.  Runs in a
+subprocess so the device-count flag stays contained.
+"""
+import json
+import os
+import subprocess
+import sys
+import time
+
+MODELS = ["llama32-3b", "llama31-8b", "internlm2-1.8b"]
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+OUT_PATH = os.path.join(REPO, "BENCH_decode.json")
+
+N_TOKENS = 32
+BATCH = 4
+PREFILL = 16
+REPEAT = 3
+
+
+def _measure():
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + " --xla_force_host_platform_device_count=4").strip()
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.core import parallel_exec as px
+    from repro.models.transformer import get_model
+
+    def time_loop(step_fn, params, cache, tok, pos):
+        """Per-token dispatch loop; returns (seconds, final cache)."""
+        t0 = time.perf_counter()
+        for i in range(N_TOKENS):
+            logits, cache = step_fn(params, cache, tok, jnp.int32(pos + i))
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        tok.block_until_ready()
+        return time.perf_counter() - t0, cache
+
+    results = []
+    for arch in MODELS:
+        cfg = get_config(arch).reduced(num_layers=4)
+        mesh = px.make_tp_mesh(4)
+        model = get_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        toks = jax.random.randint(jax.random.PRNGKey(1), (BATCH, PREFILL), 2,
+                                  cfg.vocab_size)
+        prefill = px.tp_prefill(cfg, mesh, cache_w=PREFILL + N_TOKENS,
+                                unroll=True)
+        logits, cache0 = prefill(params, toks)
+        tok0 = jnp.argmax(logits, -1).astype(jnp.int32)
+        pos = PREFILL
+
+        variants = {}
+        step_u = px.tp_decode_step(cfg, mesh, unroll=True)
+        step_s = px.tp_decode_step(cfg, mesh, unroll=False)
+        gen = px.tp_generate(cfg, mesh, N_TOKENS)
+
+        def fresh():
+            return jax.tree.map(jnp.copy, cache0)
+
+        # warmup (compile) once per variant, then best-of-REPEAT
+        time_loop(step_u, params, fresh(), tok0, pos)
+        variants["unrolled"] = min(
+            time_loop(step_u, params, fresh(), tok0, pos)[0]
+            for _ in range(REPEAT))
+        time_loop(step_s, params, fresh(), tok0, pos)
+        variants["scanned"] = min(
+            time_loop(step_s, params, fresh(), tok0, pos)[0]
+            for _ in range(REPEAT))
+        gen(params, fresh(), tok0, jnp.int32(pos))[0].block_until_ready()
+
+        def fused_once():
+            c = fresh()
+            t0 = time.perf_counter()
+            out, _ = gen(params, c, tok0, jnp.int32(pos))
+            out.block_until_ready()
+            return time.perf_counter() - t0
+        variants["fused"] = min(fused_once() for _ in range(REPEAT))
+
+        for name, sec in variants.items():
+            results.append({
+                "arch": arch, "variant": name, "tp": 4,
+                "batch": BATCH, "n_tokens": N_TOKENS,
+                "tokens_per_s": N_TOKENS * BATCH / sec,
+                "ms_per_token": sec / N_TOKENS * 1e3,
+                "speedup_vs_unrolled": variants["unrolled"] / sec,
+            })
+    print("DECODEJSON:" + json.dumps(results))
+
+
+def _run_subprocess():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep + REPO
+    try:
+        r = subprocess.run(
+            [sys.executable, "-m", "benchmarks.decode_bench", "--measure"],
+            capture_output=True, text=True, env=env, cwd=REPO, timeout=1200)
+    except subprocess.TimeoutExpired:
+        return None, "timeout after 1200s"
+    for line in r.stdout.splitlines():
+        if line.startswith("DECODEJSON:"):
+            return json.loads(line[len("DECODEJSON:"):]), None
+    return None, r.stderr[-300:]
+
+
+def rows():
+    recs, err = _run_subprocess()
+    if recs is None:
+        return [("decode/bench", 0.0, f"subprocess_failed;stderr={err}")]
+    with open(OUT_PATH, "w") as f:
+        json.dump(recs, f, indent=2, sort_keys=True)
+    out = []
+    for r in recs:
+        out.append((f"decode/{r['arch']}/tp{r['tp']}/{r['variant']}",
+                    r["ms_per_token"] * 1e3,
+                    f"tok_per_s={r['tokens_per_s']:.1f};"
+                    f"ms_per_token={r['ms_per_token']:.2f};"
+                    f"speedup_vs_unrolled={r['speedup_vs_unrolled']:.2f}x"))
+    return out
+
+
+def main():
+    print(f"Decode fast path — unrolled vs scanned vs fused×{N_TOKENS} "
+          f"(TP=4 host mesh, B={BATCH})")
+    for r in rows():
+        print(f"  {r[0]:42s} {r[2]}")
+    if os.path.exists(OUT_PATH):
+        print(f"  wrote {OUT_PATH}")
+
+
+if __name__ == "__main__":
+    if "--measure" in sys.argv:
+        _measure()
+    else:
+        main()

@@ -1,7 +1,7 @@
 """§Perf hillclimb results: baseline vs optimized variants per selected pair
 (reads the archived dry-run records; see EXPERIMENTS.md §Perf for the
-hypothesis log)."""
-import glob
+hypothesis log).  Degrades to a single informational row when the
+``results/dryrun`` archive is absent (fresh checkout)."""
 import json
 import os
 
@@ -29,11 +29,19 @@ def _load(arch, shape, variant):
     path = os.path.join(RESULTS, f"{arch}__{shape}__pod16x16{suffix}.json")
     if not os.path.exists(path):
         return None
-    r = json.load(open(path))
+    try:
+        with open(path) as f:
+            r = json.load(f)
+    except (OSError, ValueError):
+        return None
     return r if r.get("status") == "ok" else None
 
 
 def rows():
+    if not os.path.isdir(RESULTS):
+        return [("perf/variants", 0.0,
+                 "no_dryrun_archive;run launch/dryrun.py to populate "
+                 "results/dryrun")]
     out = []
     for arch, shape, variants in PAIRS:
         base = _load(arch, shape, "baseline")

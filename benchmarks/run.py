@@ -18,6 +18,7 @@ MODULES = [
     "benchmarks.kernel_bench",
     "benchmarks.roofline_table",
     "benchmarks.perf_variants",
+    "benchmarks.decode_bench",
 ]
 
 

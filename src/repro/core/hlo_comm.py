@@ -5,9 +5,13 @@ walk ``compiled.as_text()`` (the partitioned, optimized HLO module) and record
 every collective op with its message bytes and participant count.  Unlike a
 sampled kernel trace this is exact — the compiled module *is* the schedule.
 
-Collectives inside ``while`` bodies (e.g. the layer scan) are expanded by the
-loop's ``known_trip_count``, so per-execution call counts match what a
-runtime trace would show.
+Collectives inside ``while`` bodies (e.g. the scanned-layer fast path of
+core/parallel_exec.py, or the fused ``tp_generate`` token loop) are expanded
+by the loop's ``known_trip_count``, so per-execution call counts match what a
+runtime trace would show — an L-layer scan with 2 allreduces per iteration
+reports 2L calls, identical to the unrolled paper-parity module.
+``conditional`` ops are charged at their heaviest branch (wire-byte upper
+bound for one execution, since the predicate is runtime data).
 
 Conventions (matching core/commodel.py and the paper §V-B):
   wire bytes:  all-reduce 2(d-1)/d·size, all-gather (d-1)/d·gathered-size,
@@ -44,6 +48,9 @@ _COMP_START_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{\s*$")
 _WHILE_RE = re.compile(r"\bwhile\(.*body=%?([\w\.\-]+)")
 _TRIP_RE = re.compile(r'known_trip_count.*?"n"\s*:\s*"(\d+)"')
 _CALL_RE = re.compile(r"\b(?:call|fusion)\(.*?(?:to_apply|calls)=%?([\w\.\-]+)")
+_COND_BRANCH_RE = re.compile(
+    r"(?:true_computation|false_computation)=%?([\w\.\-]+)")
+_COND_LIST_RE = re.compile(r"branch_computations=\{(.*?)\}")
 
 
 @dataclasses.dataclass
@@ -131,7 +138,8 @@ def _parse_computations(hlo_text: str):
         m = _COMP_START_RE.match(line.strip())
         if m and not line.startswith(" "):
             name = m.group(2)
-            comps[name] = {"colls": [], "whiles": [], "calls": []}
+            comps[name] = {"colls": [], "whiles": [], "calls": [],
+                           "conds": []}
             cur = name
             if m.group(1):
                 entry = name
@@ -157,6 +165,13 @@ def _parse_computations(hlo_text: str):
             trip = int(tm.group(1)) if tm else 1
             comps[cur]["whiles"].append((wm.group(1), trip))
             continue
+        if " conditional(" in " " + rhs:
+            lm = _COND_LIST_RE.search(rhs)
+            branches = (lm.group(1).replace("%", "").replace(" ", "")
+                        .split(",") if lm else _COND_BRANCH_RE.findall(rhs))
+            if branches:
+                comps[cur]["conds"].append(tuple(branches))
+            continue
         cm = _CALL_RE.search(rhs)
         if cm:
             comps[cur]["calls"].append(cm.group(1))
@@ -168,23 +183,24 @@ def parse_hlo_collectives(hlo_text: str) -> List[HLOCollective]:
     comps, entry = _parse_computations(hlo_text)
     if entry is None:
         entry = next(iter(comps), None)
-    out: List[HLOCollective] = []
-    seen: set = set()
 
-    def visit(name: str, mult: int, depth: int = 0):
+    def visit(name: str, mult: int, depth: int = 0) -> List[HLOCollective]:
         if name not in comps or depth > 16:
-            return
+            return []
         c = comps[name]
-        for coll in c["colls"]:
-            out.append(dataclasses.replace(coll, count=coll.count * mult))
+        out = [dataclasses.replace(coll, count=coll.count * mult)
+               for coll in c["colls"]]
         for body, trip in c["whiles"]:
-            visit(body, mult * max(trip, 1), depth + 1)
+            out.extend(visit(body, mult * max(trip, 1), depth + 1))
         for callee in c["calls"]:
-            visit(callee, mult, depth + 1)
+            out.extend(visit(callee, mult, depth + 1))
+        for branches in c["conds"]:
+            out.extend(max(
+                (visit(b, mult, depth + 1) for b in branches),
+                key=lambda lst: sum(x.wire_bytes for x in lst), default=[]))
+        return out
 
-    if entry:
-        visit(entry, 1)
-    return out
+    return visit(entry, 1) if entry else []
 
 
 def summarize(colls: Iterable[HLOCollective]) -> Dict[str, dict]:

@@ -17,9 +17,23 @@ profiles in vLLM/Megatron, using shard_map with hand-placed collectives:
 XLA adaptation (DESIGN.md §2): the paper's NCCL `Gather` of logit shards has
 no XLA equivalent; we all-gather (commodel gather_mode="allgather").
 
-These engines cover the dense llama-family (the paper's subjects).  Layer
-loops are unrolled so every collective appears as a distinct HLO op — the
-per-op count parity with Tables III–VI is asserted in tests/dist/.
+These engines cover the dense llama-family (the paper's subjects).
+
+Two execution modes (DESIGN.md §5):
+
+  unroll=True   paper-parity mode.  Layer loops are unrolled so every
+                collective appears as a distinct HLO op — the per-op count
+                parity with Tables III–VI is asserted against the compiled
+                module.
+  unroll=False  fast path (default for benchmarks/ and runtime/).  Block
+                params keep their stacked [L, ...] leading axis and the layer
+                loop runs under ``jax.lax.scan`` inside one shard_map, so the
+                module stays O(1) in depth; decode jits donate the KV cache
+                so XLA updates the [L, B, W, kv, D] buffers in place; and
+                ``tp_generate`` fuses N greedy decode steps into a single
+                dispatch with ``lax.fori_loop``.  Collective *counts* are
+                unchanged — core/hlo_comm.py expands scan trip counts, so
+                both modes report identical schedules.
 """
 from __future__ import annotations
 
@@ -36,6 +50,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.config.base import ModelConfig
 from repro.models.layers import apply_rope, decode_cache_mask, gqa_attention, \
     make_mask, mlp_apply, rms_norm
+from repro.models.transformer import greedy_decode_loop
 
 
 # ---------------------------------------------------------------------------
@@ -74,7 +89,6 @@ def tp_param_specs(cfg: ModelConfig, tp_axis: str = "tp",
 
 def _vocab_parallel_embed(embed_local, tokens, axis: str):
     """Vocab-sharded embedding lookup + psum (the paper's '+1' allreduce)."""
-    t = jax.lax.axis_size(axis)
     idx = jax.lax.axis_index(axis)
     vshard = embed_local.shape[0]
     local = tokens - idx * vshard
@@ -134,9 +148,10 @@ def _layer_slice(blocks, l):
     return {k: v[l] for k, v in blocks.items()}
 
 
-def _logits_allgather(params, x_last, axis: str, vocab: int = None):
+def _logits_allgather(params, x_last, axis: str, vocab: int = None,
+                      eps: float = 1e-5):
     """Vocab-sharded logits + all-gather (paper's Gather, XLA-adapted)."""
-    xn = rms_norm(x_last, params["final_norm"], 1e-5)
+    xn = rms_norm(x_last, params["final_norm"], eps)
     local = xn @ params["lm_head"]
     logits = jax.lax.all_gather(local, axis, axis=-1, tiled=True)
     if vocab is not None and vocab < logits.shape[-1]:
@@ -154,68 +169,146 @@ def make_tp_mesh(t: int) -> Mesh:
     return jax.make_mesh((t,), ("tp",))
 
 
-def tp_prefill(cfg: ModelConfig, mesh: Mesh, cache_w: int = None):
-    """jit'd fn(params, tokens) -> (logits [B,v], cache|None).
-
-    Collectives per call: (2L+1) allreduce + 1 allgather — Eq. 1 / Table III.
-    """
-    t = mesh.shape["tp"]
-    heads_t, kv_t = cfg.num_heads // t, cfg.num_kv_heads // t
-    specs = tp_param_specs(cfg)
-    cache_spec = {"k": P(None, None, None, "tp", None),
+_TP_CACHE_SPEC = {"k": P(None, None, None, "tp", None),
                   "v": P(None, None, None, "tp", None)}
 
-    def fn(params, tokens):
-        B, S = tokens.shape
-        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
-        mask = make_mask(S, S, window=cfg.sliding_window)
-        x = _vocab_parallel_embed(params["embed"], tokens, "tp")
+
+def _tp_layers_full(cfg, params, x, positions, mask, heads_t, kv_t,
+                    cache_w, unroll: bool):
+    """All layers over a full sequence: unrolled (paper parity) or scanned."""
+    if unroll:
         caches = []
         for l in range(cfg.num_layers):
             x, c = _tp_layer_full(cfg, _layer_slice(params["blocks"], l), x,
                                   positions, mask, "tp", heads_t, kv_t,
                                   cache_w)
             caches.append(c)
-        logits = _logits_allgather(params, x[:, -1, :], "tp", cfg.vocab_size)
         cache = None
         if cache_w is not None:
             cache = jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
-        return logits, cache
+        return x, cache
 
-    out_cache_spec = None if cache_w is None else cache_spec
-    return jax.jit(shard_map(
-        fn, mesh=mesh, in_specs=(specs, P(None, None)),
-        out_specs=(P(None, None), out_cache_spec),
-        check_rep=False))
+    def body(h, pl):
+        h, c = _tp_layer_full(cfg, pl, h, positions, mask, "tp",
+                              heads_t, kv_t, cache_w)
+        return h, c
+
+    return jax.lax.scan(body, x, params["blocks"])
 
 
-def tp_decode_step(cfg: ModelConfig, mesh: Mesh):
-    """jit'd fn(params, cache, token [B], pos) -> (logits, cache).
-
-    Collectives per call: (2L+1) allreduce + 1 allgather — Table III decode.
-    """
-    t = mesh.shape["tp"]
-    heads_t, kv_t = cfg.num_heads // t, cfg.num_kv_heads // t
-    specs = tp_param_specs(cfg)
-    cache_spec = {"k": P(None, None, None, "tp", None),
-                  "v": P(None, None, None, "tp", None)}
-
-    def fn(params, cache, token, pos):
-        x = _vocab_parallel_embed(params["embed"], token[:, None], "tp")
+def _tp_layers_step(cfg, params, x, pos, cache, heads_t, kv_t, unroll: bool):
+    """All layers for one decode token against the stacked [L,...] cache."""
+    if unroll:
         new_cache = []
         for l in range(cfg.num_layers):
             x, c = _tp_layer_step(cfg, _layer_slice(params["blocks"], l), x,
                                   pos, _layer_slice(cache, l), "tp",
                                   heads_t, kv_t)
             new_cache.append(c)
-        logits = _logits_allgather(params, x[:, 0, :], "tp", cfg.vocab_size)
-        return logits, jax.tree.map(lambda *xs: jnp.stack(xs), *new_cache)
+        return x, jax.tree.map(lambda *xs: jnp.stack(xs), *new_cache)
+
+    def body(h, inp):
+        pl, cl = inp
+        h, c = _tp_layer_step(cfg, pl, h, pos, cl, "tp", heads_t, kv_t)
+        return h, c
+
+    return jax.lax.scan(body, x, (params["blocks"], cache))
+
+
+def _tp_single_step(cfg, params, cache, token, pos, heads_t, kv_t,
+                    unroll: bool):
+    """One full decode step: embed psum + all layers + logits all-gather."""
+    x = _vocab_parallel_embed(params["embed"], token[:, None], "tp")
+    x, cache = _tp_layers_step(cfg, params, x, pos, cache, heads_t, kv_t,
+                               unroll)
+    logits = _logits_allgather(params, x[:, 0, :], "tp", cfg.vocab_size,
+                               cfg.norm_eps)
+    return logits, cache
+
+
+def tp_prefill(cfg: ModelConfig, mesh: Mesh, cache_w: int = None,
+               unroll: bool = True):
+    """jit'd fn(params, tokens) -> (logits [B,v], cache|None).
+
+    Collectives per call: (2L+1) allreduce + 1 allgather — Eq. 1 / Table III.
+    ``unroll=False`` scans the layer stack (same schedule, O(1)-depth HLO).
+    """
+    t = mesh.shape["tp"]
+    heads_t, kv_t = cfg.num_heads // t, cfg.num_kv_heads // t
+    specs = tp_param_specs(cfg)
+
+    def fn(params, tokens):
+        B, S = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        mask = make_mask(S, S, window=cfg.sliding_window)
+        x = _vocab_parallel_embed(params["embed"], tokens, "tp")
+        x, cache = _tp_layers_full(cfg, params, x, positions, mask,
+                                   heads_t, kv_t, cache_w, unroll)
+        logits = _logits_allgather(params, x[:, -1, :], "tp", cfg.vocab_size,
+                                   cfg.norm_eps)
+        return logits, cache
+
+    out_cache_spec = None if cache_w is None else _TP_CACHE_SPEC
+    return jax.jit(shard_map(
+        fn, mesh=mesh, in_specs=(specs, P(None, None)),
+        out_specs=(P(None, None), out_cache_spec),
+        check_rep=False))
+
+
+def tp_decode_step(cfg: ModelConfig, mesh: Mesh, unroll: bool = True,
+                   donate: bool = None):
+    """jit'd fn(params, cache, token [B], pos) -> (logits, cache).
+
+    Collectives per call: (2L+1) allreduce + 1 allgather — Table III decode.
+    The fast path (``unroll=False``) scans the stacked [L, B, W, kv, D] cache
+    and donates it, so XLA aliases the update in place instead of the
+    per-layer slice/re-stack copy; ``donate`` overrides that default (the
+    paper-parity mode keeps the cache alive for step-by-step comparisons).
+    """
+    t = mesh.shape["tp"]
+    heads_t, kv_t = cfg.num_heads // t, cfg.num_kv_heads // t
+    specs = tp_param_specs(cfg)
+    donate = (not unroll) if donate is None else donate
+
+    def fn(params, cache, token, pos):
+        return _tp_single_step(cfg, params, cache, token, pos,
+                               heads_t, kv_t, unroll)
 
     return jax.jit(shard_map(
         fn, mesh=mesh,
-        in_specs=(specs, cache_spec, P(None), P()),
-        out_specs=(P(None, None), cache_spec),
-        check_rep=False))
+        in_specs=(specs, _TP_CACHE_SPEC, P(None), P()),
+        out_specs=(P(None, None), _TP_CACHE_SPEC),
+        check_rep=False),
+        donate_argnums=(1,) if donate else ())
+
+
+def tp_generate(cfg: ModelConfig, mesh: Mesh, num_tokens: int,
+                unroll: bool = False):
+    """jit'd fn(params, cache, token [B], pos) -> (tokens [B, N], cache).
+
+    Fused greedy multi-token decode: N scanned decode steps run inside ONE
+    dispatch via ``lax.fori_loop`` with argmax feedback.  ``tokens[:, i]`` is
+    exactly the token a step-by-step ``tp_decode_step`` chain would produce
+    after feeding ``token`` at ``pos`` and its successors at ``pos+1 ...``.
+    The cache is donated: the [L, B, W, kv, D] buffers are updated in place
+    across all N steps without ever being re-materialized on the host.
+    """
+    t = mesh.shape["tp"]
+    heads_t, kv_t = cfg.num_heads // t, cfg.num_kv_heads // t
+    specs = tp_param_specs(cfg)
+
+    def fn(params, cache, token, pos):
+        return greedy_decode_loop(
+            lambda c, tok, p: _tp_single_step(cfg, params, c, tok, p,
+                                              heads_t, kv_t, unroll),
+            token, cache, pos, num_tokens)
+
+    return jax.jit(shard_map(
+        fn, mesh=mesh,
+        in_specs=(specs, _TP_CACHE_SPEC, P(None), P()),
+        out_specs=(P(None, None), _TP_CACHE_SPEC),
+        check_rep=False),
+        donate_argnums=(1,))
 
 
 # ---------------------------------------------------------------------------
@@ -277,11 +370,15 @@ class PipelineEngine:
     ``self.transfers``.  Within a stage the TP collectives (allreduce per
     row-parallel linear, embedding psum on stage 0, logits all-gather on the
     last stage) are hand-placed and visible in each stage's HLO.
+
+    ``unroll=False`` scans each stage's layer slice instead of unrolling it
+    (same collective schedule, trip-counted in the stage HLO — DESIGN.md §5).
     """
 
     def __init__(self, cfg: ModelConfig, t: int = 1, p: int = 2,
-                 devices=None):
+                 devices=None, unroll: bool = True):
         self.cfg, self.t, self.p = cfg, t, p
+        self.unroll = unroll
         devices = devices if devices is not None else jax.devices()
         assert len(devices) >= t * p, f"need {t * p} devices"
         self.meshes = [Mesh(np.asarray(devices[s * t:(s + 1) * t]), ("tp",))
@@ -316,17 +413,32 @@ class PipelineEngine:
             B, S = x.shape[:2]
             positions = jnp.broadcast_to(jnp.arange(S), (B, S))
             mask = make_mask(S, S, window=cfg.sliding_window)
-            for l in range(lo, hi):
-                pl = _layer_slice(params["blocks"], l)
-                if t > 1:
-                    x, _ = _tp_layer_full(cfg, pl, x, positions, mask, "tp",
-                                          heads_t, kv_t)
-                else:
-                    x = _dense_local_layer(cfg, pl, x, positions, mask)
+            if self.unroll:
+                for l in range(lo, hi):
+                    pl = _layer_slice(params["blocks"], l)
+                    if t > 1:
+                        x, _ = _tp_layer_full(cfg, pl, x, positions, mask,
+                                              "tp", heads_t, kv_t)
+                    else:
+                        x = _dense_local_layer(cfg, pl, x, positions, mask)
+            else:
+                stage_blocks = jax.tree.map(
+                    lambda a: jax.lax.slice_in_dim(a, lo, hi, axis=0),
+                    params["blocks"])
+
+                def body(h, pl):
+                    if t > 1:
+                        h, _ = _tp_layer_full(cfg, pl, h, positions, mask,
+                                              "tp", heads_t, kv_t)
+                    else:
+                        h = _dense_local_layer(cfg, pl, h, positions, mask)
+                    return h, None
+
+                x, _ = jax.lax.scan(body, x, stage_blocks)
             if last:
                 if t > 1:
                     return _logits_allgather(params, x[:, -1, :], "tp",
-                                             cfg.vocab_size)
+                                             cfg.vocab_size, cfg.norm_eps)
                 xn = rms_norm(x[:, -1, :], params["final_norm"], cfg.norm_eps)
                 logits = xn @ params["lm_head"]
                 if cfg.padded_vocab != cfg.vocab_size:

@@ -36,6 +36,31 @@ _BLOCKS = {
 }
 
 
+def greedy_decode_loop(step_fn, tokens, cache, pos, num_tokens: int):
+    """Fused greedy generation: ``num_tokens`` autoregressive steps in one
+    ``lax.fori_loop`` (single dispatch when jitted), feeding each argmax back
+    in at the next position.  ``step_fn(cache, tok [B], pos_i) -> (logits
+    [B, v], cache)`` supplies the single step; shared by ``Model.decode_steps``
+    and the explicit-TP ``tp_generate`` so the feedback loop cannot diverge.
+
+    Returns (generated [B, num_tokens] int32, final cache); ``out[:, i]``
+    equals what a chain of step + argmax calls would emit.
+    """
+    B = tokens.shape[0]
+
+    def step(i, carry):
+        tok, cache, out = carry
+        logits, cache = step_fn(cache, tok, pos + i)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out = jax.lax.dynamic_update_slice(out, nxt[:, None], (0, i))
+        return nxt, cache, out
+
+    out = jnp.zeros((B, num_tokens), jnp.int32)
+    _, cache, out = jax.lax.fori_loop(0, num_tokens, step,
+                                      (tokens, cache, out))
+    return out, cache
+
+
 class Model:
     """Functional model wrapper for one ModelConfig."""
 
@@ -214,6 +239,12 @@ class Model:
         positions = jnp.full((B, 1), pos, jnp.int32)
         x, aux, new_cache = self._scan_decode(params, x, positions, cache, pos)
         return self._head(params, x)[:, 0], new_cache
+
+    def decode_steps(self, params, cache, tokens, pos, num_tokens: int):
+        """Fused greedy multi-token decode (see ``greedy_decode_loop``)."""
+        return greedy_decode_loop(
+            lambda c, tok, p: self.decode_step(params, c, tok, p),
+            tokens, cache, pos, num_tokens)
 
 
 @functools.lru_cache(maxsize=None)

@@ -1,0 +1,13 @@
+"""Force a multi-device CPU host platform before jax initializes.
+
+The explicit TP/PP engine tests (tests/test_decode_fastpath.py) shard over a
+real mesh, so the suite runs with 8 host-platform devices — the same setting
+CI exports.  An operator-provided XLA_FLAGS with an explicit device count is
+left untouched.
+"""
+import os
+
+_FLAGS = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _FLAGS:
+    os.environ["XLA_FLAGS"] = (
+        _FLAGS + " --xla_force_host_platform_device_count=8").strip()

@@ -1,6 +1,7 @@
 """Property-based invariants of the analytical comm model (hypothesis)."""
-import hypothesis.strategies as st
 import pytest
+pytest.importorskip("hypothesis")  # optional dep: skip, don't error
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.configs import get_config

@@ -63,6 +63,47 @@ def test_flops_trip_expansion():
     assert flops == 2 * 8 * 64 * 256 * 5
 
 
+def test_conditional_charged_at_heaviest_branch():
+    text = """\
+HloModule jit_cond
+
+%cheap (p: f32[4,4]) -> f32[4,4] {
+  ROOT %ar.small = f32[4,4] all-reduce(%p), replica_groups=[1,2]<=[2], to_apply=%add
+}
+
+%heavy (p: f32[4,4]) -> f32[4,4] {
+  %ar.big1 = f32[4,4] all-reduce(%p), replica_groups=[1,2]<=[2], to_apply=%add
+  ROOT %ar.big2 = f32[4,4] all-reduce(%ar.big1), replica_groups=[1,2]<=[2], to_apply=%add
+}
+
+ENTRY %main (pred: pred[], p: f32[4,4]) -> f32[4,4] {
+  ROOT %c = f32[4,4] conditional(%pred, %p, %p), true_computation=%heavy, false_computation=%cheap
+}
+"""
+    s = summarize(parse_hlo_collectives(text))
+    assert s["allreduce"]["count"] == 2          # heavy branch only
+
+
+def test_conditional_branch_list_form():
+    text = """\
+HloModule jit_switch
+
+%b0 (p: f32[4]) -> f32[4] {
+  ROOT %nop = f32[4] copy(%p)
+}
+
+%b1 (p: f32[4]) -> f32[4] {
+  ROOT %ag = f32[16] all-gather(%p), replica_groups=[1,4]<=[4], dimensions={0}
+}
+
+ENTRY %main (i: s32[], p: f32[4]) -> f32[4] {
+  ROOT %c = f32[4] conditional(%i, %p, %p), branch_computations={%b0, %b1}
+}
+"""
+    s = summarize(parse_hlo_collectives(text))
+    assert s["allgather"]["count"] == 1          # b1 moves bytes, b0 none
+
+
 def test_empty_module():
     assert parse_hlo_collectives("HloModule empty") == []
     assert collective_wire_bytes("HloModule empty") == 0.0

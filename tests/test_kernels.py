@@ -5,6 +5,7 @@ import pytest
 
 import jax
 import jax.numpy as jnp
+pytest.importorskip("hypothesis")  # optional dep: skip, don't error
 import hypothesis.strategies as st
 from hypothesis import given, settings
 

@@ -2,9 +2,10 @@
 indistinguishable from the paper-faithful baseline it replaces."""
 import dataclasses
 
+import pytest
+pytest.importorskip("hypothesis")  # optional dep: skip, don't error
 import hypothesis.strategies as st
 import numpy as np
-import pytest
 from hypothesis import given, settings
 
 import jax
