@@ -1,16 +1,22 @@
-"""Decode hot-path benchmark: unrolled vs scanned vs fused multi-token TP.
+"""Decode hot-path benchmark: TP (unrolled/scanned/fused) vs PP vs TP×PP.
 
-Times three decode strategies of the explicit TP engine on a 4-device
-host-platform mesh (reduced configs, CPU-sized):
+Times five decode strategies on a 4-device host-platform mesh (reduced
+configs, CPU-sized):
 
   unrolled   seed behaviour — one jit dispatch per token, Python-unrolled
              layer loop, cache re-stacked every step (paper-parity mode)
   scanned    one dispatch per token, lax.scan layers + donated cache
   fused      ``tp_generate`` — N tokens per dispatch (lax.fori_loop)
+  pp4        PipelineEngine t=1 p=4 ``generate`` — per-stage caches, one
+             dispatch per stage per token + 2 boundary transfers per hop
+  tp2pp2     hybrid t=2 p=2 ``generate`` — per-stage TP collectives plus
+             boundary shards (the paper's TP-vs-PP decode tradeoff, Fig. 9)
 
 Emits ``BENCH_decode.json`` at the repo root (tokens/sec and ms/token per
 arch × variant) so the perf trajectory is tracked across PRs.  Runs in a
-subprocess so the device-count flag stays contained.
+subprocess so the device-count flag stays contained.  ``--dry-run`` times a
+single reduced arch with a short generation and skips the JSON write — the
+CI smoke mode that keeps every entrypoint compiling.
 """
 import json
 import os
@@ -28,7 +34,7 @@ PREFILL = 16
 REPEAT = 3
 
 
-def _measure():
+def _measure(dry_run: bool = False):
     flags = os.environ.get("XLA_FLAGS", "")
     if "xla_force_host_platform_device_count" not in flags:
         os.environ["XLA_FLAGS"] = (
@@ -40,25 +46,29 @@ def _measure():
     from repro.core import parallel_exec as px
     from repro.models.transformer import get_model
 
+    models = MODELS[:1] if dry_run else MODELS
+    n_tokens = 4 if dry_run else N_TOKENS
+    repeat = 1 if dry_run else REPEAT
+    cache_w = PREFILL + n_tokens
+
     def time_loop(step_fn, params, cache, tok, pos):
         """Per-token dispatch loop; returns (seconds, final cache)."""
         t0 = time.perf_counter()
-        for i in range(N_TOKENS):
+        for i in range(n_tokens):
             logits, cache = step_fn(params, cache, tok, jnp.int32(pos + i))
             tok = jnp.argmax(logits, -1).astype(jnp.int32)
         tok.block_until_ready()
         return time.perf_counter() - t0, cache
 
     results = []
-    for arch in MODELS:
+    for arch in models:
         cfg = get_config(arch).reduced(num_layers=4)
         mesh = px.make_tp_mesh(4)
         model = get_model(cfg)
         params = model.init(jax.random.PRNGKey(0))
         toks = jax.random.randint(jax.random.PRNGKey(1), (BATCH, PREFILL), 2,
                                   cfg.vocab_size)
-        prefill = px.tp_prefill(cfg, mesh, cache_w=PREFILL + N_TOKENS,
-                                unroll=True)
+        prefill = px.tp_prefill(cfg, mesh, cache_w=cache_w, unroll=True)
         logits, cache0 = prefill(params, toks)
         tok0 = jnp.argmax(logits, -1).astype(jnp.int32)
         pos = PREFILL
@@ -66,20 +76,20 @@ def _measure():
         variants = {}
         step_u = px.tp_decode_step(cfg, mesh, unroll=True)
         step_s = px.tp_decode_step(cfg, mesh, unroll=False)
-        gen = px.tp_generate(cfg, mesh, N_TOKENS)
+        gen = px.tp_generate(cfg, mesh, n_tokens)
 
         def fresh():
             return jax.tree.map(jnp.copy, cache0)
 
-        # warmup (compile) once per variant, then best-of-REPEAT
+        # warmup (compile) once per variant, then best-of-repeat
         time_loop(step_u, params, fresh(), tok0, pos)
         variants["unrolled"] = min(
             time_loop(step_u, params, fresh(), tok0, pos)[0]
-            for _ in range(REPEAT))
+            for _ in range(repeat))
         time_loop(step_s, params, fresh(), tok0, pos)
         variants["scanned"] = min(
             time_loop(step_s, params, fresh(), tok0, pos)[0]
-            for _ in range(REPEAT))
+            for _ in range(repeat))
         gen(params, fresh(), tok0, jnp.int32(pos))[0].block_until_ready()
 
         def fused_once():
@@ -88,27 +98,50 @@ def _measure():
             out, _ = gen(params, c, tok0, jnp.int32(pos))
             out.block_until_ready()
             return time.perf_counter() - t0
-        variants["fused"] = min(fused_once() for _ in range(REPEAT))
+        variants["fused"] = min(fused_once() for _ in range(repeat))
 
+        # pipelined decode: per-stage caches + fused per-stage decode steps
+        layouts = {"pp4": (1, 4), "tp2pp2": (2, 2)}
+        for name, (t, p) in layouts.items():
+            eng = px.PipelineEngine(cfg, t=t, p=p, unroll=False)
+            staged = eng.prepare(params)
+            _, caches0 = eng.prefill_with_cache(staged, toks, cache_w)
+
+            def pp_once():
+                # generate donates the caches; run each repeat on copies
+                caches = [jax.tree.map(jnp.copy, c) for c in caches0]
+                t0 = time.perf_counter()
+                out, _ = eng.generate(staged, caches, tok0, pos, n_tokens)
+                out.block_until_ready()
+                return time.perf_counter() - t0
+
+            pp_once()                                  # warmup / compile
+            variants[name] = min(pp_once() for _ in range(repeat))
+
+        parallelism = {"unrolled": (4, 1), "scanned": (4, 1), "fused": (4, 1),
+                       "pp4": (1, 4), "tp2pp2": (2, 2)}
         for name, sec in variants.items():
+            t, p = parallelism[name]
             results.append({
-                "arch": arch, "variant": name, "tp": 4,
-                "batch": BATCH, "n_tokens": N_TOKENS,
-                "tokens_per_s": N_TOKENS * BATCH / sec,
-                "ms_per_token": sec / N_TOKENS * 1e3,
+                "arch": arch, "variant": name, "tp": t, "pp": p,
+                "batch": BATCH, "n_tokens": n_tokens,
+                "tokens_per_s": n_tokens * BATCH / sec,
+                "ms_per_token": sec / n_tokens * 1e3,
                 "speedup_vs_unrolled": variants["unrolled"] / sec,
             })
     print("DECODEJSON:" + json.dumps(results))
 
 
-def _run_subprocess():
+def _run_subprocess(dry_run: bool = False):
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
     env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep + REPO
+    cmd = [sys.executable, "-m", "benchmarks.decode_bench", "--measure"]
+    if dry_run:
+        cmd.append("--dry-run")
     try:
-        r = subprocess.run(
-            [sys.executable, "-m", "benchmarks.decode_bench", "--measure"],
-            capture_output=True, text=True, env=env, cwd=REPO, timeout=1200)
+        r = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                           cwd=REPO, timeout=1200)
     except subprocess.TimeoutExpired:
         return None, "timeout after 1200s"
     for line in r.stdout.splitlines():
@@ -117,15 +150,16 @@ def _run_subprocess():
     return None, r.stderr[-300:]
 
 
-def rows():
-    recs, err = _run_subprocess()
+def rows(dry_run: bool = False):
+    recs, err = _run_subprocess(dry_run)
     if recs is None:
         return [("decode/bench", 0.0, f"subprocess_failed;stderr={err}")]
-    with open(OUT_PATH, "w") as f:
-        json.dump(recs, f, indent=2, sort_keys=True)
+    if not dry_run:
+        with open(OUT_PATH, "w") as f:
+            json.dump(recs, f, indent=2, sort_keys=True)
     out = []
     for r in recs:
-        out.append((f"decode/{r['arch']}/tp{r['tp']}/{r['variant']}",
+        out.append((f"decode/{r['arch']}/t{r['tp']}p{r['pp']}/{r['variant']}",
                     r["ms_per_token"] * 1e3,
                     f"tok_per_s={r['tokens_per_s']:.1f};"
                     f"ms_per_token={r['ms_per_token']:.2f};"
@@ -133,17 +167,21 @@ def rows():
     return out
 
 
-def main():
-    print(f"Decode fast path — unrolled vs scanned vs fused×{N_TOKENS} "
-          f"(TP=4 host mesh, B={BATCH})")
-    for r in rows():
-        print(f"  {r[0]:42s} {r[2]}")
-    if os.path.exists(OUT_PATH):
+def main(dry_run: bool = False):
+    mode = "dry-run smoke" if dry_run else f"fused×{N_TOKENS}"
+    print(f"Decode paths — TP unrolled/scanned/fused vs PP vs TP×PP "
+          f"({mode}, 4-device host mesh, B={BATCH})")
+    rs = rows(dry_run)
+    for r in rs:
+        print(f"  {r[0]:46s} {r[2]}")
+    if dry_run and any(r[0] == "decode/bench" for r in rs):
+        raise SystemExit("decode_bench smoke failed")
+    if not dry_run and os.path.exists(OUT_PATH):
         print(f"  wrote {OUT_PATH}")
 
 
 if __name__ == "__main__":
     if "--measure" in sys.argv:
-        _measure()
+        _measure(dry_run="--dry-run" in sys.argv)
     else:
-        main()
+        main(dry_run="--dry-run" in sys.argv)

@@ -2,13 +2,54 @@
 parallelism layouts, and get a recommendation — Sections III + V-C as an API.
 
     PYTHONPATH=src python examples/comm_study.py --arch llama31-8b --world 8
+
+``--measure`` additionally runs the explicit PipelineEngine (reduced config,
+host-platform devices) through prefill + decode and prints the logged
+boundary transfers next to the Eq. 2 / Table V predictions — the measured
+counterpart of the analytical decode rows.
 """
 import argparse
+import os
 
 from repro.configs import get_config
 from repro.core import commodel as cm
 from repro.core.planner import plan
 from repro.core.slo import predict_slo
+
+
+def measure_pp_decode(arch: str, p: int = 2, s_p: int = 8, n_gen: int = 5):
+    """Measured vs predicted PP decode transfers on a reduced config."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + f" --xla_force_host_platform_device_count={p}").strip()
+    import jax
+    import jax.numpy as jnp
+    from repro.core import parallel_exec as px
+    from repro.models.transformer import get_model
+
+    cfg = get_config(arch).reduced(num_layers=4)
+    params = get_model(cfg).init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, s_p), 2,
+                              cfg.vocab_size)
+    eng = px.PipelineEngine(cfg, t=1, p=p, unroll=False)
+    staged = eng.prepare(params)
+    logits, caches = eng.prefill_with_cache(staged, toks, s_p + n_gen)
+    tok0 = jnp.argmax(logits, -1).astype(jnp.int32)
+    eng.generate(staged, caches, tok0, s_p, n_gen)
+
+    ops = cm.pp_comm_ops(cfg, s_p, n_gen + 1, p, b=4, batch=1)
+    print(f"\n=== measured PP decode, {cfg.name} (t=1, p={p}, "
+          f"S_p={s_p}, {n_gen} generated tokens → s_d={n_gen + 1})")
+    for phase in ("prefill", "decode"):
+        got = eng.transfer_summary(phase=phase)
+        want = [o for o in ops
+                if o.collective == "send" and o.phase == phase][0]
+        tag = "OK" if (got["count"], got["bytes"]) == \
+            (want.count, want.total_msg_bytes) else "MISMATCH"
+        print(f"  {phase:8s} measured count={got['count']:3d} "
+              f"bytes={got['bytes']:7d} | predicted count={want.count:3d} "
+              f"bytes={want.total_msg_bytes:7d}  [{tag}]")
 
 
 def main():
@@ -17,6 +58,9 @@ def main():
     ap.add_argument("--world", type=int, default=8)
     ap.add_argument("--prefill", type=int, default=128)
     ap.add_argument("--decode", type=int, default=512)
+    ap.add_argument("--measure", action="store_true",
+                    help="run the reduced explicit PP engine and compare "
+                         "logged decode transfers to Eq. 2")
     args = ap.parse_args()
     cfg = get_config(args.arch)
 
@@ -40,6 +84,9 @@ def main():
     print("\n=== planner recommendation (objective=e2e)")
     for c in plan(cfg, args.world, args.prefill, args.decode)[:3]:
         print(f"  {c.name:14s} {c.slo.row()}")
+
+    if args.measure:
+        measure_pp_decode(args.arch)
 
 
 if __name__ == "__main__":

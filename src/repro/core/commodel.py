@@ -156,6 +156,33 @@ def v_pp(cfg: ModelConfig, s_p: int, s_d: int, p: int, b: int = 2) -> float:
 # ---------------------------------------------------------------------------
 
 
+def stage_layer_partition(L: int, p: int) -> List[int]:
+    """Layers owned by each pipeline stage; the remainder of an indivisible
+    L goes to the *early* stages (stage 0 first), so every layer is always
+    assigned.  Shared with ``parallel_exec.stage_layer_range`` — the engine
+    and the analytical model must agree on the split."""
+    base, rem = divmod(L, p)
+    return [base + (1 if s < rem else 0) for s in range(p)]
+
+
+def hybrid_stage_collectives(cfg: ModelConfig, t: int, p: int,
+                             stage: int) -> dict:
+    """Collective *counts per pass* visible in one stage's compiled module
+    under the explicit hybrid engine (gather_mode="allgather"): 2·L_s
+    allreduces per stage (+1 embedding psum on stage 0), 2 boundary
+    redistribute all-gathers on every receiving stage, and the logits
+    all-gather on the last stage.  Counts are identical for a prefill pass
+    and a decode pass (only message shapes differ)."""
+    if t <= 1:
+        return {}
+    L_s = stage_layer_partition(cfg.num_layers, p)[stage]
+    counts = {"allreduce": 2 * L_s + (1 if stage == 0 else 0)}
+    ag = (2 if stage > 0 else 0) + (1 if stage == p - 1 else 0)
+    if ag:
+        counts["allgather"] = ag
+    return counts
+
+
 def hybrid_comm_ops(cfg: ModelConfig, s_p: int, s_d: int, t: int, p: int, *,
                     b: int = 2, batch: int = 1,
                     gather_mode: str = "gather") -> List[CommOp]:
@@ -166,7 +193,9 @@ def hybrid_comm_ops(cfg: ModelConfig, s_p: int, s_d: int, t: int, p: int, *,
     if t <= 1:
         return pp_comm_ops(cfg, s_p, s_d, p, b=b, batch=batch)
     L, h, v = cfg.num_layers, cfg.d_model, cfg.vocab_size
-    n_ar = 2 * L // p + 1   # first stage carries the embedding allreduce
+    # stage-0 rank view: it owns the most layers under the uneven split and
+    # carries the embedding allreduce (equals 2L/p + 1 when p divides L)
+    n_ar = 2 * stage_layer_partition(L, p)[0] + 1
     ops = [
         CommOp("allreduce", "prefill", n_ar, (batch * s_p, h), t, b),
         CommOp("allgather", "prefill", 2 * (p - 1), (batch * s_p, h), t, b),
@@ -193,10 +222,14 @@ def hybrid_comm_ops(cfg: ModelConfig, s_p: int, s_d: int, t: int, p: int, *,
 
 def v_hybrid_components(cfg: ModelConfig, s_p: int, s_d: int, t: int, p: int,
                         b: int = 2, include_embedding: bool = True) -> dict:
-    """Eq. 4–7 in closed form (bytes per component)."""
+    """Eq. 4–7 in closed form (bytes per component).
+
+    The allreduce term uses the stage-0 layer count of the uneven split
+    (== the paper's 2L/p whenever p divides L), keeping the closed form
+    equal to the ``hybrid_comm_ops`` per-op sum for every L."""
     L, h, v = cfg.num_layers, cfg.d_model, cfg.vocab_size
     steps = s_p + s_d - 1
-    v_ar = (2 * L / p) * steps * h * b * 2 * (t - 1) / t
+    v_ar = (2 * stage_layer_partition(L, p)[0]) * steps * h * b * 2 * (t - 1) / t
     if include_embedding:
         v_ar += steps * h * b * 2 * (t - 1) / t   # first-rank embedding term
     return {
@@ -246,7 +279,7 @@ def ssm_pp_state_ops(cfg: ModelConfig, s_d: int, p: int, *, b: int = 2,
     if cfg.ssm is None or p <= 1:
         return []
     H, hs = cfg.num_heads, cfg.ssm.head_size
-    per_stage_layers = cfg.num_layers // p
+    per_stage_layers = stage_layer_partition(cfg.num_layers, p)[0]
     return [CommOp("send", "decode", 1,
                    (batch * per_stage_layers * H, hs, hs), p, 4)]
 

@@ -9,7 +9,10 @@ profiles in vLLM/Megatron, using shard_map with hand-placed collectives:
        down-projection (2L), and a logits gather over the vocab shards.
   PP   (Section III-B): per stage boundary TWO tensors (vLLM ships
        hidden_states and residual separately — we split the activation into
-       two summands to reproduce the wire pattern) moved by ppermute.
+       two summands to reproduce the wire pattern) moved by ``jax.device_put``
+       between the per-stage jits and logged as TransferRecords, our measured
+       Eq. 2 / Table V side (DESIGN.md §3 — not ppermute: an SPMD-lockstep
+       collective would run every stage's schedule on every rank).
   TP×PP (Section III-C): per-stage allreduces (2L/p + 1), boundary p2p of
        the [tokens, h/t] shard, and 2 allgathers to redistribute the
        received shard among the stage's TP workers.
@@ -48,9 +51,11 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.config.base import ModelConfig
+from repro.core.commodel import stage_layer_partition
 from repro.models.layers import apply_rope, decode_cache_mask, gqa_attention, \
     make_mask, mlp_apply, rms_norm
-from repro.models.transformer import greedy_decode_loop
+from repro.models.transformer import greedy_decode_host_loop, \
+    greedy_decode_loop
 
 
 # ---------------------------------------------------------------------------
@@ -98,9 +103,16 @@ def _vocab_parallel_embed(embed_local, tokens, axis: str):
     return jax.lax.psum(x, axis)
 
 
-def _tp_layer_full(cfg, pl, x, positions, mask, axis: str, heads_t: int,
+def _maybe_psum(x, axis):
+    """psum over the TP axis — identity when the layer runs full-width
+    (``axis=None``, the pure-PP per-stage path)."""
+    return jax.lax.psum(x, axis) if axis is not None else x
+
+
+def _tp_layer_full(cfg, pl, x, positions, mask, axis, heads_t: int,
                    kv_t: int, cache_w=None):
-    """One transformer layer under TP over full sequence.  2 psums."""
+    """One transformer layer over a full sequence.  2 psums when TP-sharded
+    (``axis`` set); ``axis=None`` runs the same math full-width."""
     B, S, _ = x.shape
     D = cfg.head_dim
     xn = rms_norm(x, pl["ln1"], cfg.norm_eps)
@@ -110,10 +122,10 @@ def _tp_layer_full(cfg, pl, x, positions, mask, axis: str, heads_t: int,
                    cfg.rope_theta)
     v = (xn @ pl["wv"]).reshape(B, S, kv_t, D)
     attn = gqa_attention(q, k, v, mask).reshape(B, S, heads_t * D)
-    x = x + jax.lax.psum(attn @ pl["wo"], axis)                # AR (attn out)
+    x = x + _maybe_psum(attn @ pl["wo"], axis)                 # AR (attn out)
     xn2 = rms_norm(x, pl["ln2"], cfg.norm_eps)
     mlp = mlp_apply(pl, xn2, cfg.activation)
-    x = x + jax.lax.psum(mlp, axis)                            # AR (mlp down)
+    x = x + _maybe_psum(mlp, axis)                             # AR (mlp down)
     cache = None
     if cache_w is not None:
         from repro.models.blocks import build_ring_cache
@@ -121,8 +133,8 @@ def _tp_layer_full(cfg, pl, x, positions, mask, axis: str, heads_t: int,
     return x, cache
 
 
-def _tp_layer_step(cfg, pl, x, pos, cache, axis: str, heads_t: int, kv_t: int):
-    """One decode step under TP.  2 psums."""
+def _tp_layer_step(cfg, pl, x, pos, cache, axis, heads_t: int, kv_t: int):
+    """One decode step against a ring cache.  2 psums when TP-sharded."""
     B = x.shape[0]
     D = cfg.head_dim
     w = cache["k"].shape[1]
@@ -138,14 +150,24 @@ def _tp_layer_step(cfg, pl, x, pos, cache, axis: str, heads_t: int, kv_t: int):
     cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
     mask = decode_cache_mask(w, pos + 1, cfg.sliding_window)[None, :]
     attn = gqa_attention(q, ck, cv, mask).reshape(B, 1, heads_t * D)
-    x = x + jax.lax.psum(attn @ pl["wo"], axis)
+    x = x + _maybe_psum(attn @ pl["wo"], axis)
     xn2 = rms_norm(x, pl["ln2"], cfg.norm_eps)
-    x = x + jax.lax.psum(mlp_apply(pl, xn2, cfg.activation), axis)
+    x = x + _maybe_psum(mlp_apply(pl, xn2, cfg.activation), axis)
     return x, {"k": ck, "v": cv}
 
 
 def _layer_slice(blocks, l):
     return {k: v[l] for k, v in blocks.items()}
+
+
+def _mask_pad_vocab(logits, vocab):
+    """Mask pad-vocab columns to the *logit dtype's* min.  A hardcoded
+    ``jnp.finfo(jnp.float32).min`` (a strongly-typed numpy scalar) would
+    promote bf16 logits to f32 — and overflow to -inf if cast back."""
+    if vocab is None or vocab >= logits.shape[-1]:
+        return logits
+    col = jnp.arange(logits.shape[-1])
+    return jnp.where(col < vocab, logits, jnp.finfo(logits.dtype).min)
 
 
 def _logits_allgather(params, x_last, axis: str, vocab: int = None,
@@ -154,10 +176,7 @@ def _logits_allgather(params, x_last, axis: str, vocab: int = None,
     xn = rms_norm(x_last, params["final_norm"], eps)
     local = xn @ params["lm_head"]
     logits = jax.lax.all_gather(local, axis, axis=-1, tiled=True)
-    if vocab is not None and vocab < logits.shape[-1]:
-        col = jnp.arange(logits.shape[-1])
-        logits = jnp.where(col < vocab, logits, jnp.finfo(jnp.float32).min)
-    return logits
+    return _mask_pad_vocab(logits, vocab)
 
 
 # ---------------------------------------------------------------------------
@@ -324,22 +343,6 @@ def tp_generate(cfg: ModelConfig, mesh: Mesh, num_tokens: int,
 # every inter-stage transfer — that log is our measured Table V / Eq. 2 side.
 
 
-def _dense_local_layer(cfg, pl, x, positions, mask):
-    """Full-width dense layer (no TP) — used by pure-PP stages."""
-    B, S, _ = x.shape
-    D = cfg.head_dim
-    xn = rms_norm(x, pl["ln1"], cfg.norm_eps)
-    q = apply_rope((xn @ pl["wq"]).reshape(B, S, cfg.num_heads, D), positions,
-                   cfg.rope_theta)
-    k = apply_rope((xn @ pl["wk"]).reshape(B, S, cfg.num_kv_heads, D),
-                   positions, cfg.rope_theta)
-    v = (xn @ pl["wv"]).reshape(B, S, cfg.num_kv_heads, D)
-    attn = gqa_attention(q, k, v, mask).reshape(B, S, cfg.num_heads * D)
-    x = x + attn @ pl["wo"]
-    x = x + mlp_apply(pl, rms_norm(x, pl["ln2"], cfg.norm_eps), cfg.activation)
-    return x
-
-
 @dataclasses.dataclass
 class TransferRecord:
     phase: str
@@ -356,20 +359,42 @@ class TransferRecord:
 
 
 def stage_layer_range(cfg: ModelConfig, p: int, s: int) -> Tuple[int, int]:
-    L = cfg.num_layers
-    per = L // p
-    return s * per, (s + 1) * per
+    """Layer interval [lo, hi) owned by stage s.
+
+    An indivisible ``num_layers`` spreads its remainder over the *early*
+    stages (``commodel.stage_layer_partition``, which the analytical side
+    shares), so every layer is always executed — 28 layers at p=8 runs
+    4+4+4+4+3+3+3+3, not 8×3 with four layers silently dropped.
+    """
+    sizes = stage_layer_partition(cfg.num_layers, p)
+    lo = sum(sizes[:s])
+    return lo, lo + sizes[s]
+
+
+# per-stage KV cache: [L_s, B, W, kv, D] with kv heads sharded over the
+# stage's TP workers (matches _TP_CACHE_SPEC minus the global layer axis)
+_STAGE_CACHE_SPEC = {"k": P(None, None, None, "tp", None),
+                     "v": P(None, None, None, "tp", None)}
 
 
 class PipelineEngine:
-    """Single-request PP (t=1) or hybrid TP×PP (t>1) inference engine.
+    """Single-request PP (t=1) or hybrid TP×PP (t>1) serving engine.
 
-    Stage s owns layers [s·L/p, (s+1)·L/p) on its own ``t``-device mesh.
-    Boundary hand-off ships TWO tensors per hop (hidden_states + residual,
-    the vLLM pattern) of shape [S, h/t] per TP worker, logged in
-    ``self.transfers``.  Within a stage the TP collectives (allreduce per
-    row-parallel linear, embedding psum on stage 0, logits all-gather on the
-    last stage) are hand-placed and visible in each stage's HLO.
+    Stage s owns layers ``stage_layer_range(cfg, p, s)`` on its own
+    ``t``-device mesh.  Boundary hand-off ships TWO tensors per hop
+    (hidden_states + residual, the vLLM pattern) of shape [S, h/t] per TP
+    worker, logged in ``self.transfers``.  Within a stage the TP collectives
+    (allreduce per row-parallel linear, embedding psum on stage 0, logits
+    all-gather on the last stage) are hand-placed and visible in each
+    stage's HLO.
+
+    Decode subsystem (DESIGN.md §6): ``prefill_with_cache`` seeds a
+    per-stage [L_s, B, W, kv, D] ring KV cache, ``decode_once`` runs one
+    token through every stage's jitted decode_step (cache donated on the
+    fast path), and ``generate`` drives N greedy tokens through the
+    pipeline — every decode boundary hop is a logged [1, h/t]×2
+    TransferRecord, the measured side of the paper's Table V decode rows
+    and the ``(p−1)·2·(s_d−1)`` term of Eq. 2.
 
     ``unroll=False`` scans each stage's layer slice instead of unrolling it
     (same collective schedule, trip-counted in the stage HLO — DESIGN.md §5).
@@ -385,86 +410,168 @@ class PipelineEngine:
                        for s in range(p)]
         self.transfers: list = []
         self._stage_fns = [self._build_stage(s) for s in range(p)]
+        self._cache_stage_fns = {}      # cache_w -> per-stage prefill fns
+        self._decode_stage_fns = None   # built on first decode
+
+    # -- shared stage fragments (traced inside each stage's jit) -----------
+    def _embed_tokens(self, params, tokens):
+        if self.t > 1:
+            return _vocab_parallel_embed(params["embed"], tokens, "tp")
+        return params["embed"][tokens]
+
+    def _boundary_in(self, x_or_tokens):
+        """Merge a received (hidden, residual) pair; t>1 first redistributes
+        the h/t shards among the stage's TP workers (2 all-gathers)."""
+        h1, h2 = x_or_tokens
+        if self.t > 1:
+            h1 = jax.lax.all_gather(h1, "tp", axis=-1, tiled=True)
+            h2 = jax.lax.all_gather(h2, "tp", axis=-1, tiled=True)
+        return h1 + h2
+
+    def _boundary_out(self, x):
+        """Split into the (hidden, residual)-like summand pair for the wire;
+        t>1 ships only this worker's h/t shard."""
+        t, h = self.t, self.cfg.d_model
+        if t > 1:
+            idx = jax.lax.axis_index("tp")
+            x = jax.lax.dynamic_slice_in_dim(x, idx * (h // t), h // t,
+                                             axis=-1)
+        return x * 0.25, x * 0.75
+
+    def _head_out(self, params, x_last):
+        cfg = self.cfg
+        if self.t > 1:
+            return _logits_allgather(params, x_last, "tp", cfg.vocab_size,
+                                     cfg.norm_eps)
+        xn = rms_norm(x_last, params["final_norm"], cfg.norm_eps)
+        return _mask_pad_vocab(xn @ params["lm_head"], cfg.vocab_size)
+
+    def _stage_blocks(self, params, lo, hi):
+        return jax.tree.map(
+            lambda a: jax.lax.slice_in_dim(a, lo, hi, axis=0),
+            params["blocks"])
+
+    def _boundary_pair_spec(self):
+        """Sharding of the two-tensor [B, S|1, h/t] boundary pair."""
+        return (P(None, None, "tp" if self.t > 1 else None),) * 2
+
+    def _boundary_specs(self, s: int):
+        first, last = s == 0, s == self.p - 1
+        pair = self._boundary_pair_spec()
+        in_x = P(None, None) if first else pair
+        out = P(None, None) if last else pair
+        return in_x, out
 
     # -- per-stage jitted computations -------------------------------------
-    def _build_stage(self, s: int):
+    def _build_stage(self, s: int, cache_w: int = None):
+        """Full-sequence stage fn; with ``cache_w`` it also emits the
+        stage's seeded [L_s, B, W, kv, D] ring cache."""
         cfg, t, p = self.cfg, self.t, self.p
         lo, hi = stage_layer_range(cfg, p, s)
         heads_t, kv_t = cfg.num_heads // t, cfg.num_kv_heads // t
+        axis = "tp" if t > 1 else None
         mesh = self.meshes[s]
         first, last = s == 0, s == p - 1
 
         def fn(params, x_or_tokens):
-            if first:
-                if t > 1:
-                    x = _vocab_parallel_embed(params["embed"], x_or_tokens,
-                                              "tp")
-                else:
-                    x = params["embed"][x_or_tokens]
-            else:
-                if t > 1:   # redistribute the received h/t shards (2 tensors)
-                    h1, h2 = x_or_tokens
-                    g1 = jax.lax.all_gather(h1, "tp", axis=-1, tiled=True)
-                    g2 = jax.lax.all_gather(h2, "tp", axis=-1, tiled=True)
-                    x = g1 + g2
-                else:
-                    h1, h2 = x_or_tokens
-                    x = h1 + h2
+            x = (self._embed_tokens(params, x_or_tokens) if first
+                 else self._boundary_in(x_or_tokens))
             B, S = x.shape[:2]
             positions = jnp.broadcast_to(jnp.arange(S), (B, S))
             mask = make_mask(S, S, window=cfg.sliding_window)
             if self.unroll:
+                caches = []
                 for l in range(lo, hi):
-                    pl = _layer_slice(params["blocks"], l)
-                    if t > 1:
-                        x, _ = _tp_layer_full(cfg, pl, x, positions, mask,
-                                              "tp", heads_t, kv_t)
-                    else:
-                        x = _dense_local_layer(cfg, pl, x, positions, mask)
+                    x, c = _tp_layer_full(cfg, _layer_slice(params["blocks"],
+                                                            l),
+                                          x, positions, mask, axis, heads_t,
+                                          kv_t, cache_w)
+                    caches.append(c)
+                cache = (jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+                         if cache_w is not None else None)
             else:
-                stage_blocks = jax.tree.map(
-                    lambda a: jax.lax.slice_in_dim(a, lo, hi, axis=0),
-                    params["blocks"])
-
                 def body(h, pl):
-                    if t > 1:
-                        h, _ = _tp_layer_full(cfg, pl, h, positions, mask,
-                                              "tp", heads_t, kv_t)
-                    else:
-                        h = _dense_local_layer(cfg, pl, h, positions, mask)
-                    return h, None
+                    h, c = _tp_layer_full(cfg, pl, h, positions, mask, axis,
+                                          heads_t, kv_t, cache_w)
+                    return h, c
 
-                x, _ = jax.lax.scan(body, x, stage_blocks)
-            if last:
-                if t > 1:
-                    return _logits_allgather(params, x[:, -1, :], "tp",
-                                             cfg.vocab_size, cfg.norm_eps)
-                xn = rms_norm(x[:, -1, :], params["final_norm"], cfg.norm_eps)
-                logits = xn @ params["lm_head"]
-                if cfg.padded_vocab != cfg.vocab_size:
-                    col = jnp.arange(logits.shape[-1])
-                    logits = jnp.where(col < cfg.vocab_size, logits,
-                                       jnp.finfo(jnp.float32).min)
-                return logits
-            # split into (hidden, residual)-like summand pair for the wire
-            tp_idx = jax.lax.axis_index("tp") if t > 1 else 0
-            h = cfg.d_model
-            shard = (jax.lax.dynamic_slice_in_dim(
-                x, tp_idx * (h // t), h // t, axis=-1) if t > 1 else x)
-            return shard * 0.25, shard * 0.75
+                x, cache = jax.lax.scan(body, x,
+                                        self._stage_blocks(params, lo, hi))
+            out = (self._head_out(params, x[:, -1, :]) if last
+                   else self._boundary_out(x))
+            return out if cache_w is None else (out, cache)
 
         specs = tp_param_specs(cfg)
-        in_x_spec = (P(None, None) if first
-                     else (P(None, None, "tp" if t > 1 else None),) * 2)
-        out_spec = (P(None, None) if last
-                    else (P(None, None, "tp" if t > 1 else None),) * 2)
+        in_x_spec, out_spec = self._boundary_specs(s)
+        full_out = (out_spec if cache_w is None
+                    else (out_spec, _STAGE_CACHE_SPEC))
         if t > 1:
             mapped = shard_map(fn, mesh=mesh, in_specs=(specs, in_x_spec),
-                               out_specs=out_spec, check_rep=False)
+                               out_specs=full_out, check_rep=False)
         else:
-            def mapped(params, x):          # single-device stage
-                return fn(params, x)
+            mapped = fn                     # single-device stage
         return jax.jit(mapped), mesh
+
+    def _build_decode_stage(self, s: int):
+        """One-token stage fn against the stage's donated ring cache."""
+        cfg, t, p = self.cfg, self.t, self.p
+        lo, hi = stage_layer_range(cfg, p, s)
+        heads_t, kv_t = cfg.num_heads // t, cfg.num_kv_heads // t
+        axis = "tp" if t > 1 else None
+        mesh = self.meshes[s]
+        first, last = s == 0, s == p - 1
+
+        def fn(params, cache, x_or_tokens, pos):
+            x = (self._embed_tokens(params, x_or_tokens[:, None]) if first
+                 else self._boundary_in(x_or_tokens))
+            if self.unroll:
+                new_cache = []
+                for i, l in enumerate(range(lo, hi)):
+                    x, c = _tp_layer_step(
+                        cfg, _layer_slice(params["blocks"], l), x, pos,
+                        _layer_slice(cache, i), axis, heads_t, kv_t)
+                    new_cache.append(c)
+                cache = jax.tree.map(lambda *xs: jnp.stack(xs), *new_cache)
+            else:
+                def body(h, inp):
+                    pl, cl = inp
+                    h, c = _tp_layer_step(cfg, pl, h, pos, cl, axis,
+                                          heads_t, kv_t)
+                    return h, c
+
+                x, cache = jax.lax.scan(
+                    body, x, (self._stage_blocks(params, lo, hi), cache))
+            out = (self._head_out(params, x[:, 0, :]) if last
+                   else self._boundary_out(x))
+            return out, cache
+
+        specs = tp_param_specs(cfg)
+        _, out_spec = self._boundary_specs(s)
+        in_x_spec = P(None) if first else self._boundary_pair_spec()
+        if t > 1:
+            mapped = shard_map(
+                fn, mesh=mesh,
+                in_specs=(specs, _STAGE_CACHE_SPEC, in_x_spec, P()),
+                out_specs=(out_spec, _STAGE_CACHE_SPEC), check_rep=False)
+        else:
+            mapped = fn
+        # fast path donates the cache (in-place update); paper-parity mode
+        # keeps it alive for step-by-step comparisons — same convention as
+        # tp_decode_step.
+        donate = () if self.unroll else (1,)
+        return jax.jit(mapped, donate_argnums=donate), mesh
+
+    def _cache_fns(self, cache_w: int):
+        if cache_w not in self._cache_stage_fns:
+            self._cache_stage_fns[cache_w] = [
+                self._build_stage(s, cache_w=cache_w) for s in range(self.p)]
+        return self._cache_stage_fns[cache_w]
+
+    def _decode_fns(self):
+        if self._decode_stage_fns is None:
+            self._decode_stage_fns = [self._build_decode_stage(s)
+                                      for s in range(self.p)]
+        return self._decode_stage_fns
 
     # -- driver --------------------------------------------------------------
     def _shard_params(self, params, mesh):
@@ -481,39 +588,126 @@ class PipelineEngine:
         """Place one param copy per stage (each stage reads its own layers)."""
         return [self._shard_params(params, m) for m in self.meshes]
 
+    def _move_boundary(self, out, s: int, phase: str, log: bool = True):
+        """Ship the two-tensor boundary pair to stage s+1 (device_put,
+        DESIGN.md §3) and log one TransferRecord per tensor."""
+        nxt = self.meshes[s + 1]
+        spec = self._boundary_pair_spec()[0]
+        moved = tuple(jax.device_put(h, NamedSharding(nxt, spec))
+                      for h in out)
+        if log:
+            for h in moved:
+                self.transfers.append(TransferRecord(
+                    phase, 1,
+                    tuple(h.shape[:-1]) + (h.shape[-1] // self.t,),
+                    jnp.dtype(h.dtype).itemsize))
+        return moved
+
     def forward(self, staged_params, tokens, phase: str = "prefill"):
         """Run one pass; logs (p-1)×2 transfers of [S, h/t] — Eq. 2 / Eq. 7."""
         x = tokens
         for s in range(self.p):
-            fn, mesh = self._stage_fns[s]
+            fn, _ = self._stage_fns[s]
             out = fn(staged_params[s], x)
             if s < self.p - 1:
-                nxt = self.meshes[s + 1]
-                spec = P(None, None, "tp" if self.t > 1 else None)
-                moved = tuple(
-                    jax.device_put(h, NamedSharding(nxt, spec)) for h in out)
-                for h in moved:
-                    self.transfers.append(TransferRecord(
-                        phase, 1, tuple(h.shape[:-1]) + (h.shape[-1] // self.t,),
-                        jnp.dtype(h.dtype).itemsize))
-                x = moved
+                x = self._move_boundary(out, s, phase)
             else:
                 return out
 
+    def prefill_with_cache(self, staged_params, tokens, cache_w: int):
+        """Prefill that seeds every stage's [L_s, B, W, kv, D] ring cache.
+
+        Returns (last-position logits [B, v], per-stage cache list); logs
+        the same (p-1)×2 [S, h/t] prefill transfers as ``forward``.
+        """
+        fns = self._cache_fns(cache_w)
+        x = tokens
+        caches = []
+        for s in range(self.p):
+            fn, _ = fns[s]
+            out, cache = fn(staged_params[s], x)
+            caches.append(cache)
+            if s < self.p - 1:
+                x = self._move_boundary(out, s, "prefill")
+            else:
+                return out, caches
+
+    def decode_once(self, staged_params, caches, token, pos):
+        """One pipelined decode step: token [B] in, next-token logits out.
+
+        Each stage runs its jitted decode_step against its own cache; every
+        boundary ships the two-tensor [1, h/t] pair logged with
+        phase="decode" — the measured Table V decode rows.  Returns
+        (logits [B, v], new per-stage caches); on the fast path the input
+        caches are donated (consumed).
+        """
+        fns = self._decode_fns()
+        pos = jnp.int32(pos)
+        # next-token feedback hop to stage 0 (a few bytes; not charged by
+        # Eq. 2, which counts only the boundary activation tensors)
+        x = jax.device_put(token, NamedSharding(self.meshes[0], P(None)))
+        new_caches = []
+        out = None
+        for s in range(self.p):
+            fn, _ = fns[s]
+            out, c = fn(staged_params[s], caches[s], x, pos)
+            new_caches.append(c)
+            if s < self.p - 1:
+                x = self._move_boundary(out, s, "decode")
+        return out, new_caches
+
+    def generate(self, staged_params, caches, token, pos, num_tokens: int):
+        """Greedy pipelined generation: N tokens through all p stages.
+
+        The argmax feedback loop is the shared driver
+        (``models.transformer.greedy_decode_host_loop``), so ``out[:, i]``
+        equals what a chain of decode_once + argmax would emit — and, token
+        for token, what ``tp_generate`` / ``InferenceEngine`` produce from
+        the same params.  Logs (p-1)·2·N decode transfers: with the prefill
+        token counted, exactly the paper's (p−1)·2·(s_d−1) for s_d = N+1.
+        Returns (tokens [B, N] int32, final per-stage caches).
+        """
+        state = {"caches": caches}
+
+        def step(tok, pos_i):
+            logits, state["caches"] = self.decode_once(
+                staged_params, state["caches"], tok, pos_i)
+            return logits
+
+        out = greedy_decode_host_loop(step, token, pos, num_tokens)
+        return out, state["caches"]
+
+    # -- introspection -------------------------------------------------------
     def stage_hlo(self, staged_params, tokens, s: int) -> str:
-        """Compiled HLO of stage s (for collective-count validation)."""
+        """Compiled HLO of stage s's prefill (collective-count validation)."""
         x = tokens
         for i in range(s):
             fn, _ = self._stage_fns[i]
             out = fn(staged_params[i], x)
-            nxt = self.meshes[i + 1]
-            spec = P(None, None, "tp" if self.t > 1 else None)
-            x = tuple(jax.device_put(h, NamedSharding(nxt, spec))
-                      for h in out)
+            x = self._move_boundary(out, i, "hlo", log=False)
         fn, _ = self._stage_fns[s]
         return fn.lower(staged_params[s], x).compile().as_text()
 
-    def transfer_summary(self):
-        total = sum(r.bytes for r in self.transfers)
-        return {"count": sum(r.count for r in self.transfers),
-                "bytes": total}
+    def stage_decode_hlo(self, staged_params, caches, token, pos,
+                         s: int) -> str:
+        """Compiled HLO of stage s's decode_step — asserted against
+        ``commodel.hybrid_stage_collectives``.  Earlier stages run on cache
+        copies so the caller's caches survive donation."""
+        fns = self._decode_fns()
+        pos = jnp.int32(pos)
+        x = jax.device_put(token, NamedSharding(self.meshes[0], P(None)))
+        for i in range(s):
+            fn, _ = fns[i]
+            out, _ = fn(staged_params[i],
+                        jax.tree.map(jnp.copy, caches[i]), x, pos)
+            x = self._move_boundary(out, i, "hlo", log=False)
+        fn, _ = fns[s]
+        return fn.lower(staged_params[s], caches[s], x,
+                        pos).compile().as_text()
+
+    def transfer_summary(self, phase: str = None):
+        """Aggregate logged transfers; ``phase`` filters to one phase so the
+        decode rows can be asserted against pp/hybrid_comm_ops directly."""
+        recs = [r for r in self.transfers if phase in (None, r.phase)]
+        return {"count": sum(r.count for r in recs),
+                "bytes": sum(r.bytes for r in recs)}

@@ -61,6 +61,23 @@ def greedy_decode_loop(step_fn, tokens, cache, pos, num_tokens: int):
     return out, cache
 
 
+def greedy_decode_host_loop(step_fn, tokens, pos, num_tokens: int):
+    """Host-driven counterpart of :func:`greedy_decode_loop` for engines
+    whose step spans multiple dispatches (the per-stage-jit
+    ``PipelineEngine``, whose boundary hops are device_put transfers that
+    cannot live inside one ``fori_loop``).  ``step_fn(tok [B], pos_i) ->
+    logits [B, v]`` supplies the step; the argmax feedback is identical, so
+    ``out[:, i]`` matches ``greedy_decode_loop`` token for token on the
+    same per-step logits.  Returns generated [B, num_tokens] int32."""
+    out = []
+    tok = tokens
+    for i in range(num_tokens):
+        logits = step_fn(tok, pos + i)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out.append(tok)
+    return jnp.stack(out, axis=1)
+
+
 class Model:
     """Functional model wrapper for one ModelConfig."""
 
@@ -114,9 +131,12 @@ class Model:
         else:
             logits = x @ params["lm_head"]
         if cfg.padded_vocab != cfg.vocab_size:
+            # mask at the *logit dtype's* min: a hardcoded f32 numpy scalar
+            # is strongly typed, promoting bf16 logits to f32 (and f32 min
+            # overflows to -inf if later cast back down).
             col = jnp.arange(cfg.padded_vocab)
             logits = jnp.where(col < cfg.vocab_size, logits,
-                               jnp.finfo(jnp.float32).min)
+                               jnp.finfo(logits.dtype).min)
         return logits
 
     def _mask(self, q_len, kv_len, prefix_len=0):
