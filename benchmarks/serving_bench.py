@@ -1,0 +1,167 @@
+"""Serving benchmark: continuous batching under Poisson traffic (paper §V-C).
+
+Drives the continuous-batching scheduler (runtime/scheduler.py) over each
+DecodeBackend with mixed-length request traces at increasing arrival rates,
+producing the throughput-vs-latency curves the paper's SLO section draws from
+measurement — measured TTFT / TPOT / E2E sit next to the analytical
+``core.slo.predict_slo`` prediction for the same layout, so the two sides of
+the paper's methodology (measure + model) face each other at request level.
+
+Backends × layouts (4-device host-platform mesh):
+
+  gspmd    ModelBackend, t=1 p=1 — the GSPMD Model path
+  tp2      TPBackend, explicit TP over 2 devices
+  pp2      PPBackend, explicit PP over 2 single-device stages
+
+Emits ``BENCH_serve.json`` at the repo root (per backend × rate: throughput,
+mean/p95 TTFT/TPOT/E2E, queue delay).  Runs in a subprocess so the device
+flag stays contained.  ``--dry-run`` serves one tiny closed trace per
+backend and skips the JSON write — the CI smoke mode that keeps every
+serving entrypoint compiling.
+"""
+import json
+import os
+import subprocess
+import sys
+
+ARCH = "llama32-3b"
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+OUT_PATH = os.path.join(REPO, "BENCH_serve.json")
+
+N_REQUESTS = 24
+NUM_SLOTS = 4
+DRY_REQUESTS = 4
+DRY_SLOTS = 2
+MAX_LEN = 96
+RATES = [2.0, 8.0, 0.0]          # req/s; 0 = closed batch (all at t=0)
+PROMPT_LENS = (8, 48)
+DECODE_LENS = (4, 24)
+
+
+def _measure(dry_run: bool = False):
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + " --xla_force_host_platform_device_count=4").strip()
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.core.slo import predict_slo
+    from repro.models.transformer import get_model
+    from repro.runtime.backends import make_backend
+    from repro.runtime.request import Request, make_poisson_trace
+    from repro.runtime.scheduler import Scheduler
+
+    cfg = get_config(ARCH).reduced(num_layers=4)
+    params = get_model(cfg).init(jax.random.PRNGKey(0))
+
+    n_requests = DRY_REQUESTS if dry_run else N_REQUESTS
+    num_slots = DRY_SLOTS if dry_run else NUM_SLOTS
+    rates = [0.0] if dry_run else RATES
+    backends = [("gspmd", dict()), ("tp2", dict(t=2)),
+                ("pp2", dict(t=1, p=2))]
+
+    # analytical counterpart: one mean-shape request on an idle engine
+    sp_mean = sum(PROMPT_LENS) // 2
+    sd_mean = sum(DECODE_LENS) // 2
+    results = []
+    for name, kw in backends:
+        kind = {"gspmd": "gspmd", "tp2": "tp", "pp2": "pp"}[name]
+        t, p = kw.get("t", 1), kw.get("p", 1)
+        pred = predict_slo(cfg, sp_mean, sd_mean, t=t, p=p)
+        # ONE backend per kind, reused across rates — the jits live on it,
+        # so the compile caches warm once; admission fully overwrites slot
+        # rows, making reuse across runs safe
+        backend = make_backend(kind, cfg, params, num_slots=num_slots,
+                               max_len=MAX_LEN, **kw)
+        traces = {rate: make_poisson_trace(
+            n_requests, rate, cfg.vocab_size, prompt_lens=PROMPT_LENS,
+            decode_lens=DECODE_LENS, seed=7, quantum=8) for rate in rates}
+        # warm the compile caches off the clock: one 2-token request per
+        # distinct bucketed prompt length, plus the decode step itself
+        wrng = np.random.default_rng(1)
+        warm = [Request(rid=10_000 + j,
+                        prompt=wrng.integers(2, cfg.vocab_size, s),
+                        max_new_tokens=2)
+                for j, s in enumerate(
+                    sorted({r.prompt_len for t in traces.values()
+                            for r in t}))]
+        Scheduler(backend).run(warm)
+        for rate in rates:
+            report = Scheduler(backend).run(traces[rate])
+            s = report.summary()
+            results.append({
+                "arch": cfg.name, "backend": name, "tp": t, "pp": p,
+                "num_slots": num_slots, "rate_req_s": rate,
+                **s,
+                "queue_delay_mean_s": float(
+                    sum(m.queue_delay for m in report.metrics)
+                    / len(report.metrics)),
+                "decode_steps": len(report.steps),
+                "predicted_ttft_s": pred.ttft,
+                "predicted_tpot_s": pred.tpot,
+                "predicted_e2e_s": pred.e2e,
+            })
+    print("SERVEJSON:" + json.dumps(results))
+
+
+def _run_subprocess(dry_run: bool = False):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep + REPO
+    cmd = [sys.executable, "-m", "benchmarks.serving_bench", "--measure"]
+    if dry_run:
+        cmd.append("--dry-run")
+    try:
+        r = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                           cwd=REPO, timeout=1800)
+    except subprocess.TimeoutExpired:
+        return None, "timeout after 1800s"
+    for line in r.stdout.splitlines():
+        if line.startswith("SERVEJSON:"):
+            return json.loads(line[len("SERVEJSON:"):]), None
+    return None, r.stderr[-300:]
+
+
+def rows(dry_run: bool = False):
+    recs, err = _run_subprocess(dry_run)
+    if recs is None:
+        return [("serve/bench", 0.0, f"subprocess_failed;stderr={err}")]
+    if not dry_run:
+        with open(OUT_PATH, "w") as f:
+            json.dump(recs, f, indent=2, sort_keys=True)
+    out = []
+    for r in recs:
+        rate = "closed" if not r["rate_req_s"] else f"{r['rate_req_s']:g}rps"
+        out.append((
+            f"serve/{r['arch']}/t{r['tp']}p{r['pp']}/{r['backend']}/{rate}",
+            r["throughput_tok_s"],
+            f"tok_per_s={r['throughput_tok_s']:.1f};"
+            f"ttft_p95={r['ttft_p95_s']*1e3:.0f}ms;"
+            f"tpot_mean={r['tpot_mean_s']*1e3:.1f}ms;"
+            f"e2e_p95={r['e2e_p95_s']:.2f}s"))
+    return out
+
+
+def main(dry_run: bool = False):
+    # mirror the knobs _measure actually uses in each mode
+    mode = (f"dry-run smoke, {DRY_REQUESTS} reqs, {DRY_SLOTS} slots"
+            if dry_run
+            else f"{N_REQUESTS} reqs × {RATES}, {NUM_SLOTS} slots")
+    print(f"Continuous-batching serving — gspmd vs tp2 vs pp2 "
+          f"({mode}, Poisson arrivals)")
+    rs = rows(dry_run)
+    for r in rs:
+        print(f"  {r[0]:52s} {r[2]}")
+    if dry_run and any(r[0] == "serve/bench" for r in rs):
+        raise SystemExit("serving_bench smoke failed")
+    if not dry_run and os.path.exists(OUT_PATH):
+        print(f"  wrote {OUT_PATH}")
+
+
+if __name__ == "__main__":
+    if "--measure" in sys.argv:
+        _measure(dry_run="--dry-run" in sys.argv)
+    else:
+        main(dry_run="--dry-run" in sys.argv)

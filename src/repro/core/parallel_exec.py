@@ -52,8 +52,9 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.config.base import ModelConfig
 from repro.core.commodel import stage_layer_partition
-from repro.models.layers import apply_rope, decode_cache_mask, gqa_attention, \
-    make_mask, mlp_apply, rms_norm
+from repro.models.layers import apply_rope, decode_attn_mask, \
+    decode_positions, gqa_attention, make_mask, mlp_apply, rms_norm, \
+    ring_cache_update
 from repro.models.transformer import greedy_decode_host_loop, \
     greedy_decode_loop
 
@@ -134,21 +135,20 @@ def _tp_layer_full(cfg, pl, x, positions, mask, axis, heads_t: int,
 
 
 def _tp_layer_step(cfg, pl, x, pos, cache, axis, heads_t: int, kv_t: int):
-    """One decode step against a ring cache.  2 psums when TP-sharded."""
+    """One decode step against a ring cache.  2 psums when TP-sharded.
+    ``pos`` is a scalar (shared depth) or [B] per-sequence positions."""
     B = x.shape[0]
     D = cfg.head_dim
     w = cache["k"].shape[1]
-    positions = jnp.full((B, 1), pos, jnp.int32)
+    positions = decode_positions(pos, B)
     xn = rms_norm(x, pl["ln1"], cfg.norm_eps)
     q = apply_rope((xn @ pl["wq"]).reshape(B, 1, heads_t, D), positions,
                    cfg.rope_theta)
     k = apply_rope((xn @ pl["wk"]).reshape(B, 1, kv_t, D), positions,
                    cfg.rope_theta)
     v = (xn @ pl["wv"]).reshape(B, 1, kv_t, D)
-    slot = pos % w
-    ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
-    cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
-    mask = decode_cache_mask(w, pos + 1, cfg.sliding_window)[None, :]
+    ck, cv = ring_cache_update(cache["k"], cache["v"], k, v, pos)
+    mask = decode_attn_mask(w, pos, cfg.sliding_window)
     attn = gqa_attention(q, ck, cv, mask).reshape(B, 1, heads_t * D)
     x = x + _maybe_psum(attn @ pl["wo"], axis)
     xn2 = rms_norm(x, pl["ln2"], cfg.norm_eps)
@@ -275,7 +275,7 @@ def tp_prefill(cfg: ModelConfig, mesh: Mesh, cache_w: int = None,
 
 
 def tp_decode_step(cfg: ModelConfig, mesh: Mesh, unroll: bool = True,
-                   donate: bool = None):
+                   donate: bool = None, vector_pos: bool = False):
     """jit'd fn(params, cache, token [B], pos) -> (logits, cache).
 
     Collectives per call: (2L+1) allreduce + 1 allgather — Table III decode.
@@ -283,6 +283,9 @@ def tp_decode_step(cfg: ModelConfig, mesh: Mesh, unroll: bool = True,
     and donates it, so XLA aliases the update in place instead of the
     per-layer slice/re-stack copy; ``donate`` overrides that default (the
     paper-parity mode keeps the cache alive for step-by-step comparisons).
+    ``vector_pos`` traces ``pos`` as a replicated [B] vector of per-sequence
+    positions (the continuous-batching DecodeBackend step) instead of the
+    scalar shared position.
     """
     t = mesh.shape["tp"]
     heads_t, kv_t = cfg.num_heads // t, cfg.num_kv_heads // t
@@ -295,14 +298,15 @@ def tp_decode_step(cfg: ModelConfig, mesh: Mesh, unroll: bool = True,
 
     return jax.jit(shard_map(
         fn, mesh=mesh,
-        in_specs=(specs, _TP_CACHE_SPEC, P(None), P()),
+        in_specs=(specs, _TP_CACHE_SPEC, P(None),
+                  P(None) if vector_pos else P()),
         out_specs=(P(None, None), _TP_CACHE_SPEC),
         check_rep=False),
         donate_argnums=(1,) if donate else ())
 
 
 def tp_generate(cfg: ModelConfig, mesh: Mesh, num_tokens: int,
-                unroll: bool = False):
+                unroll: bool = False, vector_pos: bool = False):
     """jit'd fn(params, cache, token [B], pos) -> (tokens [B, N], cache).
 
     Fused greedy multi-token decode: N scanned decode steps run inside ONE
@@ -311,6 +315,8 @@ def tp_generate(cfg: ModelConfig, mesh: Mesh, num_tokens: int,
     after feeding ``token`` at ``pos`` and its successors at ``pos+1 ...``.
     The cache is donated: the [L, B, W, kv, D] buffers are updated in place
     across all N steps without ever being re-materialized on the host.
+    ``vector_pos`` takes per-sequence [B] start positions (each sequence
+    advances from its own depth — ragged fused decode).
     """
     t = mesh.shape["tp"]
     heads_t, kv_t = cfg.num_heads // t, cfg.num_kv_heads // t
@@ -324,7 +330,8 @@ def tp_generate(cfg: ModelConfig, mesh: Mesh, num_tokens: int,
 
     return jax.jit(shard_map(
         fn, mesh=mesh,
-        in_specs=(specs, _TP_CACHE_SPEC, P(None), P()),
+        in_specs=(specs, _TP_CACHE_SPEC, P(None),
+                  P(None) if vector_pos else P()),
         out_specs=(P(None, None), _TP_CACHE_SPEC),
         check_rep=False),
         donate_argnums=(1,))
@@ -411,7 +418,7 @@ class PipelineEngine:
         self.transfers: list = []
         self._stage_fns = [self._build_stage(s) for s in range(p)]
         self._cache_stage_fns = {}      # cache_w -> per-stage prefill fns
-        self._decode_stage_fns = None   # built on first decode
+        self._decode_stage_fns = {}     # vector_pos -> per-stage decode fns
 
     # -- shared stage fragments (traced inside each stage's jit) -----------
     def _embed_tokens(self, params, tokens):
@@ -512,8 +519,10 @@ class PipelineEngine:
             mapped = fn                     # single-device stage
         return jax.jit(mapped), mesh
 
-    def _build_decode_stage(self, s: int):
-        """One-token stage fn against the stage's donated ring cache."""
+    def _build_decode_stage(self, s: int, vector_pos: bool = False):
+        """One-token stage fn against the stage's donated ring cache.
+        ``vector_pos`` traces ``pos`` as a replicated [B] per-sequence
+        vector (continuous batching) instead of the scalar shared depth."""
         cfg, t, p = self.cfg, self.t, self.p
         lo, hi = stage_layer_range(cfg, p, s)
         heads_t, kv_t = cfg.num_heads // t, cfg.num_kv_heads // t
@@ -548,10 +557,11 @@ class PipelineEngine:
         specs = tp_param_specs(cfg)
         _, out_spec = self._boundary_specs(s)
         in_x_spec = P(None) if first else self._boundary_pair_spec()
+        pos_spec = P(None) if vector_pos else P()
         if t > 1:
             mapped = shard_map(
                 fn, mesh=mesh,
-                in_specs=(specs, _STAGE_CACHE_SPEC, in_x_spec, P()),
+                in_specs=(specs, _STAGE_CACHE_SPEC, in_x_spec, pos_spec),
                 out_specs=(out_spec, _STAGE_CACHE_SPEC), check_rep=False)
         else:
             mapped = fn
@@ -567,11 +577,12 @@ class PipelineEngine:
                 self._build_stage(s, cache_w=cache_w) for s in range(self.p)]
         return self._cache_stage_fns[cache_w]
 
-    def _decode_fns(self):
-        if self._decode_stage_fns is None:
-            self._decode_stage_fns = [self._build_decode_stage(s)
-                                      for s in range(self.p)]
-        return self._decode_stage_fns
+    def _decode_fns(self, vector_pos: bool = False):
+        if vector_pos not in self._decode_stage_fns:
+            self._decode_stage_fns[vector_pos] = [
+                self._build_decode_stage(s, vector_pos=vector_pos)
+                for s in range(self.p)]
+        return self._decode_stage_fns[vector_pos]
 
     # -- driver --------------------------------------------------------------
     def _shard_params(self, params, mesh):
@@ -637,12 +648,13 @@ class PipelineEngine:
 
         Each stage runs its jitted decode_step against its own cache; every
         boundary ships the two-tensor [1, h/t] pair logged with
-        phase="decode" — the measured Table V decode rows.  Returns
-        (logits [B, v], new per-stage caches); on the fast path the input
-        caches are donated (consumed).
+        phase="decode" — the measured Table V decode rows.  ``pos`` may be a
+        scalar or a [B] vector of per-sequence positions (continuous
+        batching).  Returns (logits [B, v], new per-stage caches); on the
+        fast path the input caches are donated (consumed).
         """
-        fns = self._decode_fns()
-        pos = jnp.int32(pos)
+        pos = jnp.asarray(pos, jnp.int32)
+        fns = self._decode_fns(vector_pos=pos.ndim > 0)
         # next-token feedback hop to stage 0 (a few bytes; not charged by
         # Eq. 2, which counts only the boundary activation tensors)
         x = jax.device_put(token, NamedSharding(self.meshes[0], P(None)))

@@ -69,6 +69,21 @@ def _collective_time(op: CommOp, hw: HardwareProfile, cross: bool) -> float:
     return op.count * alpha + op.wire_bytes / bw
 
 
+def split_p2p_count(count: int, p: int, cross_links: int):
+    """Split a p2p call count between intra- and cross-node pipeline links.
+
+    ``cross_links`` of the ``p - 1`` links cross nodes; rounding is guarded
+    so the two parts are each in [0, count] and ALWAYS sum to ``count`` —
+    the naive ``int(count * (1 - frac))`` truncation silently shifts calls
+    from the intra to the (α-heavier) cross bucket.
+    """
+    if p <= 1 or cross_links <= 0:
+        return count, 0
+    frac_cross = min(cross_links / (p - 1), 1.0)
+    cross = min(count, max(0, round(count * frac_cross)))
+    return count - cross, cross
+
+
 def predict_slo(cfg: ModelConfig, s_p: int, s_d: int, t: int = 1, p: int = 1,
                 hw: HardwareProfile = H100_NODE,
                 ov: EngineOverheads = DEFAULT_OVERHEADS,
@@ -92,15 +107,11 @@ def predict_slo(cfg: ModelConfig, s_p: int, s_d: int, t: int = 1, p: int = 1,
             if o.collective in ("send", "recv"):
                 if o.collective == "recv":
                     continue
-                # split p2p count between intra and cross links
-                if p > 1:
-                    frac_cross = cross_links / (p - 1)
-                else:
-                    frac_cross = 0.0
-                intra = dataclasses.replace(
-                    o, count=max(int(o.count * (1 - frac_cross)), 0))
-                cross = dataclasses.replace(
-                    o, count=o.count - intra.count)
+                # split p2p count between intra and cross links (guarded
+                # rounding: parts always sum to o.count)
+                n_intra, n_cross = split_p2p_count(o.count, p, cross_links)
+                intra = dataclasses.replace(o, count=n_intra)
+                cross = dataclasses.replace(o, count=n_cross)
                 total += _collective_time(intra, hw, False)
                 total += _collective_time(cross, hw, True)
             else:

@@ -16,8 +16,8 @@ import jax.numpy as jnp
 
 from repro.config.base import ModelConfig
 from repro.models import layers
-from repro.models.layers import (apply_rope, decode_cache_mask, dense_init,
-                                 gqa_attention, mlp_apply, rms_norm)
+from repro.models.layers import (apply_rope, dense_init, gqa_attention,
+                                 mlp_apply, rms_norm)
 
 
 def build_ring_cache(k, v, w: int):
@@ -52,12 +52,12 @@ def attention_apply(cfg: ModelConfig, p, xn, positions, mask,
     k = apply_rope(k, positions, cfg.rope_theta)
 
     if cache is not None:
-        # single-token decode against a ring-buffer cache
+        # single-token decode against a ring-buffer cache; ``pos`` is a
+        # scalar (fixed-batch serve path) or [B] per-sequence positions
+        # (continuous batching: each sequence hits its own slot and mask)
         w = cache["k"].shape[1]
-        slot = pos % w
-        ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
-        dmask = decode_cache_mask(w, pos + 1, cfg.sliding_window)[None, :]
+        ck, cv = layers.ring_cache_update(cache["k"], cache["v"], k, v, pos)
+        dmask = layers.decode_attn_mask(w, pos, cfg.sliding_window)
         out = gqa_attention(q, ck, cv, dmask)
         cache_out = {"k": ck, "v": cv}
     else:

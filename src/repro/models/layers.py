@@ -115,16 +115,56 @@ def make_mask(q_len: int, kv_len: int, *, mode: str = "causal",
 
 
 def decode_cache_mask(cache_len: int, pos, window=None):
-    """Valid-slot mask [cache_len] for a (possibly ring-buffer) KV cache.
+    """Valid-slot mask for a (possibly ring-buffer) KV cache.
 
     With a ring buffer of width W == window, every slot is valid once pos > W;
-    before that only the first ``pos`` slots are.
+    before that only the first ``pos`` slots are.  ``pos`` may be a scalar
+    (shared decode position, mask [cache_len]) or a [B] vector of per-sequence
+    positions (continuous batching, mask [B, cache_len]).
     """
     idx = jnp.arange(cache_len)
-    mask = idx < pos
+    p = jnp.asarray(pos)[..., None]
+    mask = idx < p
     if window is not None:
-        mask = mask | (pos > cache_len)
+        mask = mask | (p > cache_len)
     return mask
+
+
+def decode_positions(pos, batch: int):
+    """RoPE position tensor [B, 1] for one decode step from a scalar or [B]
+    position; the scalar form broadcasts one shared position over the batch."""
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        return jnp.full((batch, 1), pos, jnp.int32)
+    return pos[:, None]
+
+
+def decode_attn_mask(cache_len: int, pos, window=None):
+    """`gqa_attention`-broadcastable cache mask for one decode step: [1, W]
+    for a scalar position, [B, 1, 1, 1, W] (per-sequence) for pos [B]."""
+    m = decode_cache_mask(cache_len, pos + 1, window)
+    if jnp.ndim(pos) == 0:
+        return m[None, :]
+    return m[:, None, None, None, :]
+
+
+def ring_cache_update(cache_k, cache_v, k, v, pos):
+    """Write this step's K/V row into slot ``pos % W`` of a ring cache.
+
+    cache_k/v: [B, W, Hkv, D]; k/v: [B, 1, Hkv, D].  A scalar ``pos`` keeps
+    the seed ``dynamic_update_slice`` (all sequences share one slot — XLA
+    aliases the donated buffer); a [B] vector scatters one row per sequence
+    at its own slot, the continuous-batching layout.
+    """
+    w = cache_k.shape[1]
+    if jnp.ndim(pos) == 0:
+        slot = pos % w
+        return (jax.lax.dynamic_update_slice(cache_k, k, (0, slot, 0, 0)),
+                jax.lax.dynamic_update_slice(cache_v, v, (0, slot, 0, 0)))
+    bidx = jnp.arange(cache_k.shape[0])
+    slot = pos % w
+    return (cache_k.at[bidx, slot].set(k[:, 0]),
+            cache_v.at[bidx, slot].set(v[:, 0]))
 
 
 # ---------------------------------------------------------------------------

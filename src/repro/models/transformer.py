@@ -23,6 +23,7 @@ from repro.config.base import ModelConfig
 from repro.models import blocks as blocks_lib
 from repro.models import hybrid as hybrid_lib
 from repro.models import moe as moe_lib
+from repro.models import layers as layers_lib
 from repro.models import ssm as ssm_lib
 from repro.models.layers import MaskSpec, dense_init, make_mask, rms_norm
 
@@ -250,13 +251,17 @@ class Model:
         }
 
     def decode_step(self, params, cache, tokens, pos):
-        """One autoregressive step.  tokens [B] int32, pos scalar int32.
+        """One autoregressive step.  tokens [B] int32; ``pos`` is a scalar
+        int32 (every sequence at the same depth — the fixed-batch serve path)
+        or a [B] vector of per-sequence positions (continuous batching: each
+        slot advances independently, with its own RoPE angle, cache slot and
+        causal mask).
 
         Returns (logits [B, v], new_cache).
         """
         x = self._embed(params, tokens[:, None])
         B = x.shape[0]
-        positions = jnp.full((B, 1), pos, jnp.int32)
+        positions = layers_lib.decode_positions(pos, B)
         x, aux, new_cache = self._scan_decode(params, x, positions, cache, pos)
         return self._head(params, x)[:, 0], new_cache
 

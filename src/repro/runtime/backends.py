@@ -1,0 +1,301 @@
+"""DecodeBackend: one slot-based decode protocol over all three engines.
+
+The repo grew three decode paths — the GSPMD ``Model`` path
+(runtime/engine.py), the explicit-collective TP engine
+(core/parallel_exec.tp_decode_step) and the per-stage-jit ``PipelineEngine``
+— each serving one fixed, same-length batch with a scalar decode position.
+The continuous-batching scheduler (runtime/scheduler.py) instead needs a
+*slot* abstraction: a KV cache with ``num_slots`` independent batch rows,
+where any row can be (re)filled by prefilling a new request while the other
+rows keep decoding from their own depths.
+
+The protocol (DESIGN.md §7):
+
+  prefill_into_slots(prompts, slots) -> first greedy token per request.
+      Each request is prefilled alone at its true length (batch-1 pass —
+      row-wise math is identical to serving it solo, which is what makes the
+      scheduler token-identical to isolated serving) and its seeded KV cache
+      is scattered into the slot's batch row.
+  decode_step(tokens [B], pos [B]) -> next greedy token for every slot.
+      ONE jitted step over the full slot batch with per-sequence positions
+      (models/transformer.py + core/parallel_exec.py vector-pos paths);
+      free slots decode garbage that the scheduler ignores — the collective
+      *count* of the step is batch-invariant either way (the paper's
+      Tables III–VI carry no batch term in the count columns), which is why
+      a fixed-capacity step can serve a varying active set.
+  free_slots(slots)
+      Bookkeeping only: a freed row is overwritten by the next admission.
+
+Per-step predicted communication comes from ``commodel.comm_ops_for`` via
+:meth:`DecodeBackend.decode_comm_ops`; the PP/hybrid backend additionally
+exposes the engine's measured TransferRecords through ``drain_transfers``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, Protocol, Sequence, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config.base import ModelConfig
+from repro.core import parallel_exec as px
+from repro.core.commodel import CommOp, comm_ops_for
+from repro.models.transformer import get_model
+
+
+@runtime_checkable
+class DecodeBackend(Protocol):
+    """Slot-based decode interface the scheduler drives (DESIGN.md §7)."""
+
+    cfg: ModelConfig
+    num_slots: int
+    max_len: int
+    t: int
+    p: int
+
+    def prefill_into_slots(self, prompts: Sequence[np.ndarray],
+                           slots: Sequence[int]) -> np.ndarray: ...
+
+    def decode_step(self, tokens: np.ndarray,
+                    pos: np.ndarray) -> np.ndarray: ...
+
+    def free_slots(self, slots: Sequence[int]) -> None: ...
+
+    def decode_comm_ops(self, batch: int = 1) -> List[CommOp]: ...
+
+    def drain_transfers(self) -> dict: ...
+
+
+def _write_slot(big, small, slot):
+    """Scatter a batch-1 cache pytree into batch row ``slot`` of the slot
+    cache (every cache family keeps batch on axis 1 of each leaf)."""
+    return jax.tree.map(
+        lambda b, s: jax.lax.dynamic_update_slice_in_dim(b, s, slot, axis=1),
+        big, small)
+
+
+class _BackendBase:
+    """Shared slot bookkeeping + predicted per-step communication."""
+
+    def __init__(self, cfg: ModelConfig, num_slots: int, max_len: int,
+                 t: int, p: int):
+        if not cfg.is_decoder:
+            raise ValueError(f"{cfg.name} is encoder-only: no decode")
+        self.cfg = cfg
+        self.num_slots = int(num_slots)
+        self.max_len = int(max_len)
+        self.t, self.p = int(t), int(p)
+
+    def decode_comm_ops(self, batch: int = 1) -> List[CommOp]:
+        """Predicted collectives for ONE decode step over ``batch`` rows:
+        the decode-phase rows of ``comm_ops_for`` at s_d=2 (one step past
+        the prefill token), gather_mode="allgather" (the XLA engines), at
+        the backend's actual activation width — so predicted bytes sit on
+        the same scale as the measured TransferRecords."""
+        ops = comm_ops_for(self.cfg, 1, 2, self.t, self.p, batch=batch,
+                           b=jnp.dtype(self.cfg.dtype).itemsize,
+                           gather_mode="allgather")
+        return [o for o in ops if o.phase == "decode"]
+
+    def drain_transfers(self) -> dict:
+        """Inter-stage bytes moved since the last drain (PP only)."""
+        return {"count": 0, "bytes": 0}
+
+    def free_slots(self, slots: Sequence[int]) -> None:
+        for s in slots:
+            if not 0 <= s < self.num_slots:
+                raise IndexError(f"slot {s} out of range")
+
+    # -- shared admission loop (template method) ---------------------------
+    def prefill_into_slots(self, prompts, slots) -> np.ndarray:
+        """Admit requests: one batch-1 prefill per prompt at its true
+        length (row-wise identical to serving it solo), scattered into the
+        slot's batch row.  Returns the first greedy token per request."""
+        first = np.zeros(len(slots), np.int32)
+        for i, (prompt, slot) in enumerate(zip(prompts, slots)):
+            logits, small = self._prefill_one(self._as_prompt(prompt))
+            self._scatter(small, slot)
+            first[i] = self._first_token(logits)[0]
+        return first
+
+    def _prefill_one(self, prompt):
+        """(logits [1, v], seeded batch-1 cache) for one prompt."""
+        raise NotImplementedError
+
+    def _scatter(self, small, slot: int) -> None:
+        """Write a batch-1 cache into the slot row (default: single slot
+        cache pytree on ``self.cache`` via the donating ``self._write``)."""
+        self.cache = self._write(self.cache, small, jnp.int32(slot))
+
+    def _first_token(self, logits) -> np.ndarray:
+        return np.asarray(jnp.argmax(logits, -1), np.int32)
+
+    def _as_prompt(self, prompt) -> jnp.ndarray:
+        return jnp.asarray(np.asarray(prompt, np.int32))[None, :]
+
+
+class ModelBackend(_BackendBase):
+    """GSPMD ``Model`` path (the runtime/engine.py lineage) behind the
+    DecodeBackend protocol.  Single jit per decode step, donated slot cache,
+    per-sequence positions through ``Model.decode_step``."""
+
+    def __init__(self, cfg: ModelConfig, params, num_slots: int,
+                 max_len: int = 256):
+        super().__init__(cfg, num_slots, max_len, t=1, p=1)
+        self.model = get_model(cfg)
+        self.params = params
+        self.cache = self.model.init_cache(num_slots, max_len)
+        self._prefill = jax.jit(
+            functools.partial(self.model.prefill, max_len=max_len))
+        self._step = jax.jit(self.model.decode_step, donate_argnums=(1,))
+        self._write = jax.jit(_write_slot, donate_argnums=(0,))
+
+    def _prefill_one(self, prompt):
+        logits, small, _ = self._prefill(self.params, prompt)
+        return logits, small
+
+    def decode_step(self, tokens, pos) -> np.ndarray:
+        logits, self.cache = self._step(
+            self.params, self.cache, jnp.asarray(tokens, jnp.int32),
+            jnp.asarray(pos, jnp.int32))
+        return self._first_token(logits)
+
+
+class TPBackend(_BackendBase):
+    """Explicit tensor-parallel engine (core/parallel_exec.py) behind the
+    protocol: shard_map with hand-placed collectives — (2L+1) allreduce +
+    1 logits all-gather per decode step, regardless of slot count."""
+
+    def __init__(self, cfg: ModelConfig, params, num_slots: int,
+                 max_len: int = 256, t: int = 2, unroll: bool = False):
+        super().__init__(cfg, num_slots, max_len, t=t, p=1)
+        if cfg.family != "dense":
+            raise ValueError("explicit TP engine covers the dense family")
+        self.params = params
+        self.mesh = px.make_tp_mesh(t)
+        self.cache_w = get_model(cfg).cache_width(max_len)
+        self._prefill = px.tp_prefill(cfg, self.mesh, cache_w=self.cache_w,
+                                      unroll=unroll)
+        self._step = px.tp_decode_step(cfg, self.mesh, unroll=unroll,
+                                       vector_pos=True)
+        shard = lambda sp: NamedSharding(self.mesh, sp)
+        self.cache = {
+            key: jax.device_put(
+                jnp.zeros((cfg.num_layers, num_slots, self.cache_w,
+                           cfg.num_kv_heads, cfg.head_dim),
+                          jnp.dtype(cfg.dtype)),
+                shard(P(None, None, None, "tp", None)))
+            for key in ("k", "v")}
+        self._write = jax.jit(_write_slot, donate_argnums=(0,))
+
+    def _prefill_one(self, prompt):
+        return self._prefill(self.params, prompt)
+
+    def decode_step(self, tokens, pos) -> np.ndarray:
+        logits, self.cache = self._step(
+            self.params, self.cache, jnp.asarray(tokens, jnp.int32),
+            jnp.asarray(pos, jnp.int32))
+        return self._first_token(logits)
+
+    def decode_step_hlo(self) -> str:
+        """Compiled HLO of the slot decode step (collective-count checks)."""
+        tok = jax.ShapeDtypeStruct((self.num_slots,), jnp.int32)
+        pos = jax.ShapeDtypeStruct((self.num_slots,), jnp.int32)
+        return self._step.lower(self.params, self.cache, tok,
+                                pos).compile().as_text()
+
+
+class PPBackend(_BackendBase):
+    """PipelineEngine (pure PP when t=1, hybrid TP×PP when t>1) behind the
+    protocol: per-stage slot caches, one decode step = one token through all
+    p stages with (p-1)·2 logged boundary transfers."""
+
+    def __init__(self, cfg: ModelConfig, params, num_slots: int,
+                 max_len: int = 256, t: int = 1, p: int = 2,
+                 unroll: bool = False, devices=None):
+        super().__init__(cfg, num_slots, max_len, t=t, p=p)
+        if cfg.family != "dense":
+            raise ValueError("PipelineEngine covers the dense family")
+        self.engine = px.PipelineEngine(cfg, t=t, p=p, unroll=unroll,
+                                        devices=devices)
+        self.staged = self.engine.prepare(params)
+        self.cache_w = get_model(cfg).cache_width(max_len)
+        self.caches = []
+        for s in range(p):
+            lo, hi = px.stage_layer_range(cfg, p, s)
+            leaves = {
+                key: jnp.zeros((hi - lo, num_slots, self.cache_w,
+                                cfg.num_kv_heads, cfg.head_dim),
+                               jnp.dtype(cfg.dtype))
+                for key in ("k", "v")}
+            if t > 1:
+                leaves = {
+                    key: jax.device_put(
+                        a, NamedSharding(self.engine.meshes[s],
+                                         P(None, None, None, "tp", None)))
+                    for key, a in leaves.items()}
+            self.caches.append(leaves)
+        self._writes = [jax.jit(_write_slot, donate_argnums=(0,))
+                        for _ in range(p)]
+        self._drained = 0              # transfer-log cursor
+
+    def _prefill_one(self, prompt):
+        return self.engine.prefill_with_cache(self.staged, prompt,
+                                              cache_w=self.cache_w)
+
+    def _scatter(self, small, slot: int) -> None:
+        self.caches = [
+            self._writes[s](self.caches[s], small[s], jnp.int32(slot))
+            for s in range(self.p)]
+
+    def decode_step(self, tokens, pos) -> np.ndarray:
+        logits, self.caches = self.engine.decode_once(
+            self.staged, self.caches, jnp.asarray(tokens, jnp.int32),
+            jnp.asarray(np.asarray(pos), jnp.int32))
+        return self._first_token(logits)
+
+    def drain_transfers(self) -> dict:
+        recs = self.engine.transfers[self._drained:]
+        self._drained = len(self.engine.transfers)
+        return {"count": sum(r.count for r in recs),
+                "bytes": sum(r.bytes for r in recs)}
+
+    def stage_decode_hlo(self, stage: int) -> str:
+        """Compiled HLO of one stage's slot decode step (vector pos)."""
+        fns = self.engine._decode_fns(vector_pos=True)
+        pos = jnp.zeros((self.num_slots,), jnp.int32)
+        tok = jnp.zeros((self.num_slots,), jnp.int32)
+        x = jax.device_put(tok, NamedSharding(self.engine.meshes[0], P(None)))
+        for i in range(stage):
+            fn, _ = fns[i]
+            out, _ = fn(self.staged[i],
+                        jax.tree.map(jnp.copy, self.caches[i]), x, pos)
+            x = self.engine._move_boundary(out, i, "hlo", log=False)
+        fn, _ = fns[stage]
+        return fn.lower(self.staged[stage], self.caches[stage], x,
+                        pos).compile().as_text()
+
+
+def make_backend(kind: str, cfg: ModelConfig, params, num_slots: int,
+                 max_len: int = 256, t: int = 1, p: int = 1,
+                 unroll: bool = False) -> DecodeBackend:
+    """Backend factory keyed by engine kind: "gspmd" | "tp" | "pp".
+
+    Degenerate layouts are rejected, not coerced — a silently bumped t/p
+    would attribute measured SLOs to a layout the caller never asked for.
+    """
+    if kind == "gspmd":
+        return ModelBackend(cfg, params, num_slots, max_len)
+    if kind == "tp":
+        if t < 2:
+            raise ValueError(f"tp backend needs t >= 2, got t={t}")
+        return TPBackend(cfg, params, num_slots, max_len, t=t, unroll=unroll)
+    if kind == "pp":
+        if p < 2:
+            raise ValueError(f"pp backend needs p >= 2, got p={p}")
+        return PPBackend(cfg, params, num_slots, max_len, t=t, p=p,
+                         unroll=unroll)
+    raise ValueError(f"unknown backend kind: {kind!r}")

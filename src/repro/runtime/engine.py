@@ -16,7 +16,7 @@ from repro.config.base import ModelConfig
 from repro.models.transformer import Model, get_model
 
 
-def make_serve_step(model: Model, greedy: bool = True):
+def make_serve_step(model: Model):
     """(params, cache, token [B], pos) -> (next_token [B], cache)."""
 
     def serve_step(params, cache, token, pos):
@@ -53,6 +53,7 @@ class InferenceEngine:
             functools.partial(self.model.decode_steps,
                               num_tokens=self.decode_chunk),
             donate_argnums=(1,))
+        self._encode = jax.jit(self.model.forward)
 
     def generate(self, tokens, max_new_tokens: int = 32,
                  prefix_emb=None) -> jnp.ndarray:
@@ -82,6 +83,7 @@ class InferenceEngine:
         return jnp.concatenate(pieces, axis=1)
 
     def encode(self, features):
-        logits, _ = jax.jit(self.model.forward)(self.params,
-                                                features=features)
+        # the jit lives on the engine: a fresh jax.jit(...) per call would
+        # wrap a new callable every time and re-trace on every encode
+        logits, _ = self._encode(self.params, features=features)
         return logits

@@ -1,0 +1,118 @@
+"""Serving requests and per-request SLO metrics (paper §V-C, request level).
+
+The paper's SLO study is about *serving*: requests with distinct arrival
+times, prompt lengths and decode budgets.  This module is the request-level
+vocabulary the continuous-batching scheduler (runtime/scheduler.py) consumes:
+a :class:`Request` (prompt + decode budget + arrival time), the
+:class:`RequestMetrics` record (TTFT / TPOT / E2E — the paper's Fig. 8–10
+quantities, measured instead of predicted), and a Poisson trace generator for
+benchmarks/serving_bench.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    """One inference request.
+
+    ``arrival`` is in seconds relative to the start of the scheduler run
+    (0.0 = queued before the run starts).  ``eos_id`` stops decode early when
+    the model emits it; ``max_new_tokens`` always bounds the decode length
+    (first token from prefill included).
+    """
+
+    rid: int
+    prompt: np.ndarray               # [S] int32 token ids
+    max_new_tokens: int
+    arrival: float = 0.0
+    eos_id: Optional[int] = None
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        if self.prompt.size == 0:
+            raise ValueError(f"request {self.rid}: empty prompt")
+        if self.max_new_tokens < 1:
+            raise ValueError(f"request {self.rid}: max_new_tokens < 1")
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+
+@dataclasses.dataclass
+class RequestMetrics:
+    """Measured per-request SLOs — the serving counterpart of
+    ``core.slo.predict_slo`` (which predicts the same three quantities
+    analytically for a single request on an idle engine)."""
+
+    rid: int
+    prompt_len: int
+    arrival: float
+    admitted: float = 0.0            # prefill start (queueing delay ends)
+    first_token: float = 0.0         # TTFT reference point
+    finished: float = 0.0
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    finish_reason: str = ""          # "length" | "eos"
+
+    @property
+    def num_generated(self) -> int:
+        return len(self.tokens)
+
+    @property
+    def ttft(self) -> float:
+        return self.first_token - self.arrival
+
+    @property
+    def queue_delay(self) -> float:
+        return self.admitted - self.arrival
+
+    @property
+    def tpot(self) -> float:
+        """Mean time per output token after the first (0 for 1-token runs)."""
+        if self.num_generated <= 1:
+            return 0.0
+        return (self.finished - self.first_token) / (self.num_generated - 1)
+
+    @property
+    def e2e(self) -> float:
+        return self.finished - self.arrival
+
+    def row(self) -> str:
+        return (f"req {self.rid:3d}  s_p {self.prompt_len:4d} "
+                f"n_out {self.num_generated:4d}  "
+                f"TTFT {self.ttft*1e3:8.1f} ms  TPOT {self.tpot*1e3:7.2f} ms  "
+                f"E2E {self.e2e:6.3f} s  [{self.finish_reason}]")
+
+
+def make_poisson_trace(n_requests: int, rate: float, vocab_size: int,
+                       prompt_lens=(8, 64), decode_lens=(4, 32),
+                       seed: int = 0, quantum: int = 1) -> List[Request]:
+    """Mixed-length request trace with Poisson arrivals at ``rate`` req/s.
+
+    Prompt and decode lengths are drawn uniformly from the given inclusive
+    ranges — the "application-specific request mix" knob the related work
+    (Topcu et al.) shows flips parallelization tradeoffs.  ``rate=inf``
+    (or <= 0) makes every request arrive at t=0 (closed-batch mode).
+    ``quantum`` rounds prompt lengths down to a multiple (vLLM-style shape
+    bucketing: each distinct prompt length compiles one batch-1 prefill).
+    """
+    rng = np.random.default_rng(seed)
+    if rate and np.isfinite(rate) and rate > 0:
+        arrivals = np.cumsum(rng.exponential(1.0 / rate, n_requests))
+    else:
+        arrivals = np.zeros(n_requests)
+    reqs = []
+    for i in range(n_requests):
+        s_p = int(rng.integers(prompt_lens[0], prompt_lens[1] + 1))
+        if quantum > 1:
+            s_p = max(prompt_lens[0], (s_p // quantum) * quantum)
+        n_d = int(rng.integers(decode_lens[0], decode_lens[1] + 1))
+        prompt = rng.integers(2, vocab_size, s_p).astype(np.int32)
+        reqs.append(Request(rid=i, prompt=prompt, max_new_tokens=n_d,
+                            arrival=float(arrivals[i])))
+    return reqs

@@ -1,0 +1,294 @@
+"""Continuous-batching scheduler over a DecodeBackend (paper §V-C, serving).
+
+vLLM-style iteration-level scheduling, reduced to the pieces the paper's SLO
+study actually exercises: a fixed pool of KV-cache *slots*, admission of
+queued requests into freed slots between decode steps (each admission is one
+batch-1 prefill scattered into the slot row), one fused decode step per
+iteration over the whole slot batch with per-sequence positions, and
+EOS/length-based eviction.  What it deliberately does NOT reproduce from
+vLLM: paged KV blocks (slots are contiguous rows; paging is a later PR),
+chunked/piggybacked prefill (prefill runs alone between decode steps), and
+preemption/swapping (admission only when a slot is free) — see DESIGN.md §7.
+
+The scheduler measures the quantities ``core.slo.predict_slo`` predicts —
+per-request TTFT / TPOT / E2E — and records per-step communication: predicted
+collective counts/bytes from ``commodel.comm_ops_for`` plus, for pipeline
+backends, the engine's measured boundary TransferRecords.  The paper's claim
+that per-step collective *counts* are batch-invariant (only message bytes
+scale with batch) is load-bearing here — it is what makes a fixed-capacity
+decode step correct for a varying active set — so it is asserted against
+``comm_ops_for(batch=...)`` at construction time.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from repro.runtime.backends import DecodeBackend
+from repro.runtime.request import Request, RequestMetrics
+
+
+# ---------------------------------------------------------------------------
+# clocks (injectable so tests run on virtual time)
+# ---------------------------------------------------------------------------
+
+
+class WallClock:
+    """Real time, relative to construction; ``wait_until`` sleeps."""
+
+    def __init__(self):
+        self._t0 = time.perf_counter()
+
+    def now(self) -> float:
+        return time.perf_counter() - self._t0
+
+    def wait_until(self, t: float) -> None:
+        delta = t - self.now()
+        if delta > 0:
+            time.sleep(delta)
+
+
+class VirtualClock:
+    """Deterministic clock for tests: time only moves via ``wait_until`` /
+    ``advance`` — decode steps take zero virtual time."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def now(self) -> float:
+        return self.t
+
+    def wait_until(self, t: float) -> None:
+        self.t = max(self.t, t)
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+# ---------------------------------------------------------------------------
+# per-step traffic records
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class StepRecord:
+    """Communication of one scheduler iteration (one fused decode step)."""
+
+    step: int
+    n_active: int
+    collective_counts: Dict[str, int]     # predicted, per decode step
+    predicted_wire_bytes: float           # at batch=num_slots
+    measured_transfers: Dict[str, int]    # PP boundary hops since last step
+
+
+def step_collective_counts(backend: DecodeBackend,
+                           batch: int = 1) -> Dict[str, int]:
+    """Collective call counts of ONE decode step, summed by collective."""
+    counts: Dict[str, int] = {}
+    for o in backend.decode_comm_ops(batch=batch):
+        counts[o.collective] = counts.get(o.collective, 0) + o.count
+    return counts
+
+
+def assert_counts_batch_invariant(backend: DecodeBackend) -> None:
+    """The paper's batch-invariance property, asserted: a decode step issues
+    the same number of collectives at any batch size — only wire bytes scale
+    (linearly).  The scheduler's fixed-capacity step depends on this."""
+    base = backend.decode_comm_ops(batch=1)
+    for batch in (2, backend.num_slots):
+        if batch < 2:
+            continue
+        scaled = backend.decode_comm_ops(batch=batch)
+        if step_collective_counts(backend, 1) != \
+                step_collective_counts(backend, batch):
+            raise AssertionError(
+                f"per-step collective counts vary with batch={batch}: "
+                f"{step_collective_counts(backend, 1)} vs "
+                f"{step_collective_counts(backend, batch)}")
+        for o1, ob in zip(base, scaled):
+            if not np.isclose(ob.wire_bytes, batch * o1.wire_bytes):
+                raise AssertionError(
+                    f"wire bytes not linear in batch for {o1.collective}: "
+                    f"{ob.wire_bytes} != {batch} * {o1.wire_bytes}")
+
+
+# ---------------------------------------------------------------------------
+# scheduler
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ServingReport:
+    metrics: List[RequestMetrics]
+    steps: List[StepRecord]
+    wall_time: float
+
+    @property
+    def total_tokens(self) -> int:
+        return sum(m.num_generated for m in self.metrics)
+
+    @property
+    def throughput(self) -> float:
+        return self.total_tokens / self.wall_time if self.wall_time else 0.0
+
+    def tokens_by_rid(self) -> Dict[int, List[int]]:
+        return {m.rid: list(m.tokens) for m in self.metrics}
+
+    def summary(self) -> dict:
+        def _pct(vals, q):
+            return float(np.percentile(vals, q)) if vals else 0.0
+
+        ttfts = [m.ttft for m in self.metrics]
+        tpots = [m.tpot for m in self.metrics if m.num_generated > 1]
+        e2es = [m.e2e for m in self.metrics]
+        return {
+            "requests": len(self.metrics),
+            "total_tokens": self.total_tokens,
+            "wall_time_s": self.wall_time,
+            "throughput_tok_s": self.throughput,
+            "ttft_mean_s": float(np.mean(ttfts)) if ttfts else 0.0,
+            "ttft_p95_s": _pct(ttfts, 95),
+            "tpot_mean_s": float(np.mean(tpots)) if tpots else 0.0,
+            "tpot_p95_s": _pct(tpots, 95),
+            "e2e_mean_s": float(np.mean(e2es)) if e2es else 0.0,
+            "e2e_p95_s": _pct(e2es, 95),
+        }
+
+
+@dataclasses.dataclass
+class _Active:
+    req: Request
+    metrics: RequestMetrics
+
+
+class Scheduler:
+    """Continuous batching over ``backend.num_slots`` KV-cache slots.
+
+    One ``step()`` = admit every arrived request a free slot can take
+    (batch-1 prefill each, TTFT stamped), then ONE fused decode step over
+    the full slot batch with per-sequence positions, then eviction of
+    finished sequences (EOS or length), freeing their slots for the next
+    iteration's admissions.
+    """
+
+    def __init__(self, backend: DecodeBackend, clock=None):
+        self.backend = backend
+        self.clock = clock if clock is not None else WallClock()
+        self.num_slots = backend.num_slots
+        self.queue: deque = deque()
+        self.free: List[int] = list(range(self.num_slots))
+        self.active: Dict[int, _Active] = {}
+        self.tokens = np.zeros(self.num_slots, np.int32)
+        self.pos = np.zeros(self.num_slots, np.int64)
+        self.finished: List[RequestMetrics] = []
+        self.step_log: List[StepRecord] = []
+        self._step_i = 0
+        # the batch-invariance the fixed-capacity step relies on (paper
+        # Tables III–VI: no batch term in any count column)
+        assert_counts_batch_invariant(backend)
+        self._step_counts = step_collective_counts(backend, 1)
+        self._step_bytes = sum(
+            o.wire_bytes
+            for o in backend.decode_comm_ops(batch=self.num_slots))
+
+    # ------------------------------------------------------------- intake
+    def submit(self, requests) -> None:
+        reqs = [requests] if isinstance(requests, Request) else list(requests)
+        for r in reqs:
+            # the last generated token is never fed back, so the highest
+            # cache position written is prompt_len + max_new_tokens - 2
+            need = r.prompt_len + r.max_new_tokens - 1
+            w = self.backend.cfg.sliding_window
+            if need > self.backend.max_len and not w:
+                raise ValueError(
+                    f"request {r.rid} needs {need} cache positions "
+                    f"> max_len {self.backend.max_len}")
+        self.queue.extend(reqs)
+        # arrival order == admission order
+        self.queue = deque(sorted(self.queue, key=lambda r: r.arrival))
+
+    # ------------------------------------------------------------- admission
+    def _finish(self, slot: int, reason: str, now: float) -> None:
+        st = self.active.pop(slot)
+        st.metrics.finished = now
+        st.metrics.finish_reason = reason
+        self.finished.append(st.metrics)
+        self.backend.free_slots([slot])
+        self.free.append(slot)
+        self.tokens[slot] = 0
+        self.pos[slot] = 0
+
+    def _admit_ready(self) -> None:
+        while self.free and self.queue and \
+                self.queue[0].arrival <= self.clock.now():
+            req = self.queue.popleft()
+            slot = self.free.pop(0)
+            m = RequestMetrics(rid=req.rid, prompt_len=req.prompt_len,
+                               arrival=req.arrival,
+                               admitted=self.clock.now())
+            first = int(self.backend.prefill_into_slots([req.prompt],
+                                                        [slot])[0])
+            m.first_token = self.clock.now()
+            m.tokens.append(first)
+            self.active[slot] = _Active(req, m)
+            self.tokens[slot] = first
+            self.pos[slot] = req.prompt_len
+            if req.eos_id is not None and first == req.eos_id:
+                self._finish(slot, "eos", self.clock.now())
+            elif req.max_new_tokens == 1:
+                self._finish(slot, "length", self.clock.now())
+
+    # ------------------------------------------------------------- stepping
+    def step(self) -> bool:
+        """One scheduler iteration; returns False when fully drained."""
+        if not self.queue and not self.active:
+            return False
+        self._admit_ready()
+        self.backend.drain_transfers()      # prefill hops: not decode traffic
+        if not self.active:
+            if self.queue:                  # idle until the next arrival
+                self.clock.wait_until(self.queue[0].arrival)
+            return bool(self.queue or self.active)
+        nxt = self.backend.decode_step(self.tokens, self.pos)
+        now = self.clock.now()
+        self.step_log.append(StepRecord(
+            step=self._step_i, n_active=len(self.active),
+            collective_counts=dict(self._step_counts),
+            predicted_wire_bytes=self._step_bytes,
+            measured_transfers=self.backend.drain_transfers()))
+        self._step_i += 1
+        for slot in list(self.active):
+            st = self.active[slot]
+            tok = int(nxt[slot])
+            st.metrics.tokens.append(tok)
+            self.tokens[slot] = tok
+            self.pos[slot] += 1
+            if st.req.eos_id is not None and tok == st.req.eos_id:
+                self._finish(slot, "eos", now)
+            elif st.metrics.num_generated >= st.req.max_new_tokens:
+                self._finish(slot, "length", now)
+        return bool(self.queue or self.active)
+
+    def run(self, requests=None) -> ServingReport:
+        """Drive until every submitted request has finished."""
+        t0 = self.clock.now()
+        if requests is not None:
+            self.submit(requests)
+        while self.step():
+            pass
+        report = ServingReport(
+            metrics=sorted(self.finished, key=lambda m: m.rid),
+            steps=self.step_log, wall_time=self.clock.now() - t0)
+        self.finished, self.step_log = [], []
+        self._step_i = 0
+        return report
+
+
+def serve(backend: DecodeBackend, requests: Sequence[Request],
+          clock=None) -> ServingReport:
+    """One-shot convenience wrapper: schedule ``requests`` to completion."""
+    return Scheduler(backend, clock=clock).run(requests)

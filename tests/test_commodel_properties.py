@@ -93,3 +93,73 @@ def test_batch_scales_token_rows(b, t):
     for o1, ob in zip(one, many):
         assert ob.elements == o1.elements * b
         assert ob.count == o1.count
+
+
+# ---------------------------------------------------------------------------
+# batch invariance of per-step collective COUNTS (the property the
+# continuous-batching scheduler's fixed-capacity decode step relies on:
+# runtime/scheduler.assert_counts_batch_invariant)
+# ---------------------------------------------------------------------------
+
+batch_strat = st.integers(min_value=2, max_value=128)
+
+
+def _counts(ops):
+    out = {}
+    for o in ops:
+        key = (o.collective, o.phase)
+        out[key] = out.get(key, 0) + o.count
+    return out
+
+
+@given(sp=sp_strat, sd=sd_strat, t=st.sampled_from([1, 2, 4, 8]),
+       p=st.sampled_from([1, 2, 4, 8]), b=batch_strat)
+@settings(max_examples=80, deadline=None)
+def test_comm_ops_counts_batch_invariant(sp, sd, t, p, b):
+    """Tables III–VI carry no batch term in any count column: growing the
+    batch must change message bytes only, never the number of calls."""
+    one = cm.comm_ops_for(CFG, sp, sd, t, p, batch=1,
+                          gather_mode="allgather")
+    many = cm.comm_ops_for(CFG, sp, sd, t, p, batch=b,
+                           gather_mode="allgather")
+    assert _counts(one) == _counts(many)
+
+
+@given(sp=sp_strat, sd=sd_strat, t=st.sampled_from([1, 2, 4, 8]),
+       p=st.sampled_from([1, 2, 4, 8]), b=batch_strat)
+@settings(max_examples=80, deadline=None)
+def test_comm_ops_wire_bytes_linear_in_batch(sp, sd, t, p, b):
+    """Wire bytes scale EXACTLY linearly with batch, per op and in total."""
+    one = cm.comm_ops_for(CFG, sp, sd, t, p, batch=1,
+                          gather_mode="allgather")
+    many = cm.comm_ops_for(CFG, sp, sd, t, p, batch=b,
+                           gather_mode="allgather")
+    assert len(one) == len(many)
+    for o1, ob in zip(one, many):
+        assert (ob.collective, ob.phase, ob.count) == \
+            (o1.collective, o1.phase, o1.count)
+        assert ob.wire_bytes == pytest.approx(b * o1.wire_bytes)
+    assert cm.total_volume(many) == pytest.approx(b * cm.total_volume(one))
+
+
+# ---------------------------------------------------------------------------
+# slo.split_p2p_count: the intra/cross split must conserve the call count
+# ---------------------------------------------------------------------------
+
+
+@given(count=st.integers(min_value=0, max_value=10_000),
+       p=st.sampled_from([2, 3, 4, 8]),
+       cross=st.integers(min_value=0, max_value=8))
+@settings(max_examples=200, deadline=None)
+def test_p2p_split_conserves_count(count, p, cross):
+    """Pinned for p ∈ {2, 3, 4, 8}: intra + cross == count with both parts
+    in range, for every cross-link configuration (incl. cross > p-1)."""
+    from repro.core.slo import split_p2p_count
+    n_intra, n_cross = split_p2p_count(count, p, cross)
+    assert n_intra + n_cross == count
+    assert 0 <= n_intra <= count
+    assert 0 <= n_cross <= count
+    if cross == 0:
+        assert n_cross == 0
+    if cross >= p - 1:
+        assert n_intra == 0 or count == 0
