@@ -1,0 +1,86 @@
+"""Bench-regression gate: predicted collective counts must not drift.
+
+Timing numbers in ``BENCH_decode.json`` / ``BENCH_serve.json`` are
+machine-dependent, but the *predicted collective counts* each record carries
+(``decode_collective_counts``, ``prefill_chunk_counts``) come straight from
+``core.commodel`` and are exact program properties — if a refactor changes
+them, either the engines' schedule changed (a real regression against the
+paper's Tables III–VI) or the analytical model did.  Either way CI should
+stop the merge until the baselines are regenerated deliberately.
+
+CI runs ``decode_bench --dry-run`` / ``serving_bench --dry-run`` first (they
+write ``results/BENCH_*.dryrun.json``), then this script diffs every dry-run
+record's count fields against the checked-in baseline record with the same
+key.  Run locally the same way:
+
+    PYTHONPATH=src python -m benchmarks.decode_bench --dry-run
+    PYTHONPATH=src python -m benchmarks.serving_bench --dry-run
+    PYTHONPATH=src python -m benchmarks.check_baselines
+"""
+import json
+import os
+import sys
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+CHECKS = [
+    # (baseline, dry-run output, key fields, compared count fields)
+    (os.path.join(REPO, "BENCH_decode.json"),
+     os.path.join(REPO, "results", "BENCH_decode.dryrun.json"),
+     ("arch", "variant"),
+     ("decode_collective_counts",)),
+    (os.path.join(REPO, "BENCH_serve.json"),
+     os.path.join(REPO, "results", "BENCH_serve.dryrun.json"),
+     ("series", "arch", "backend", "tp", "pp", "paged"),
+     ("decode_collective_counts", "prefill_chunk_counts")),
+]
+
+
+def _index(records, key_fields):
+    out = {}
+    for r in records:
+        out[tuple(r.get(k) for k in key_fields)] = r
+    return out
+
+
+def check(baseline_path, dry_path, key_fields, count_fields):
+    failures = []
+    if not os.path.exists(dry_path):
+        return [f"{dry_path} missing — run the --dry-run bench first"]
+    with open(baseline_path) as f:
+        base = _index(json.load(f), key_fields)
+    with open(dry_path) as f:
+        dry = json.load(f)
+    for rec in dry:
+        key = tuple(rec.get(k) for k in key_fields)
+        ref = base.get(key)
+        if ref is None:
+            failures.append(
+                f"{os.path.basename(baseline_path)}: no baseline row for "
+                f"{dict(zip(key_fields, key))} — regenerate the bench JSON")
+            continue
+        for field in count_fields:
+            if rec.get(field) != ref.get(field):
+                failures.append(
+                    f"{os.path.basename(baseline_path)} "
+                    f"{dict(zip(key_fields, key))}: {field} drifted\n"
+                    f"    baseline: {ref.get(field)}\n"
+                    f"    measured: {rec.get(field)}")
+    return failures
+
+
+def main():
+    failures = []
+    for baseline, dry, keys, counts in CHECKS:
+        failures += check(baseline, dry, keys, counts)
+    if failures:
+        print("BASELINE DRIFT — predicted collective counts changed:")
+        for f in failures:
+            print(f"  {f}")
+        sys.exit(1)
+    print("baseline check OK: predicted collective counts match "
+          "BENCH_decode.json / BENCH_serve.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -8,7 +8,7 @@ where ``us_per_call`` is the measured wall time of producing the quantity and
 from __future__ import annotations
 
 import time
-from typing import Callable, List, Tuple
+from typing import Callable, Tuple
 
 Row = Tuple[str, float, str]
 

@@ -13,10 +13,14 @@ configs, CPU-sized):
              boundary shards (the paper's TP-vs-PP decode tradeoff, Fig. 9)
 
 Emits ``BENCH_decode.json`` at the repo root (tokens/sec and ms/token per
-arch × variant) so the perf trajectory is tracked across PRs.  Runs in a
-subprocess so the device-count flag stays contained.  ``--dry-run`` times a
-single reduced arch with a short generation and skips the JSON write — the
-CI smoke mode that keeps every entrypoint compiling.
+arch × variant) so the perf trajectory is tracked across PRs.  Every record
+also carries the *predicted* per-step decode collective counts from
+``commodel`` — deterministic fields the CI bench-regression gate
+(`benchmarks/check_baselines.py`) diffs against the checked-in baseline.
+Runs in a subprocess so the device-count flag stays contained.  ``--dry-run``
+times a single reduced arch with a short generation and writes
+``results/BENCH_decode.dryrun.json`` (the CI artifact) instead of the
+full series.
 """
 import json
 import os
@@ -27,6 +31,7 @@ import time
 MODELS = ["llama32-3b", "llama31-8b", "internlm2-1.8b"]
 REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 OUT_PATH = os.path.join(REPO, "BENCH_decode.json")
+DRY_PATH = os.path.join(REPO, "results", "BENCH_decode.dryrun.json")
 
 N_TOKENS = 32
 BATCH = 4
@@ -118,6 +123,19 @@ def _measure(dry_run: bool = False):
             pp_once()                                  # warmup / compile
             variants[name] = min(pp_once() for _ in range(repeat))
 
+        from repro.core import commodel as cm
+
+        def decode_counts(t, p):
+            """Predicted per-step decode collective counts (drift-gate
+            payload: deterministic, machine-independent)."""
+            counts = {}
+            for o in cm.comm_ops_for(cfg, 1, 2, t, p,
+                                     gather_mode="allgather"):
+                if o.phase == "decode":
+                    counts[o.collective] = counts.get(o.collective, 0) \
+                        + o.count
+            return counts
+
         parallelism = {"unrolled": (4, 1), "scanned": (4, 1), "fused": (4, 1),
                        "pp4": (1, 4), "tp2pp2": (2, 2)}
         for name, sec in variants.items():
@@ -128,6 +146,7 @@ def _measure(dry_run: bool = False):
                 "tokens_per_s": n_tokens * BATCH / sec,
                 "ms_per_token": sec / n_tokens * 1e3,
                 "speedup_vs_unrolled": variants["unrolled"] / sec,
+                "decode_collective_counts": decode_counts(t, p),
             })
     print("DECODEJSON:" + json.dumps(results))
 
@@ -154,9 +173,10 @@ def rows(dry_run: bool = False):
     recs, err = _run_subprocess(dry_run)
     if recs is None:
         return [("decode/bench", 0.0, f"subprocess_failed;stderr={err}")]
-    if not dry_run:
-        with open(OUT_PATH, "w") as f:
-            json.dump(recs, f, indent=2, sort_keys=True)
+    path = DRY_PATH if dry_run else OUT_PATH
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(recs, f, indent=2, sort_keys=True)
     out = []
     for r in recs:
         out.append((f"decode/{r['arch']}/t{r['tp']}p{r['pp']}/{r['variant']}",

@@ -1,5 +1,5 @@
 """Paper Fig 7: communication volume vs decode sequence length."""
-from benchmarks.common import fmt_bytes, timed
+from benchmarks.common import timed
 from repro.configs import get_config
 from repro.core import commodel as cm
 

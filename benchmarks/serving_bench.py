@@ -7,17 +7,25 @@ measurement — measured TTFT / TPOT / E2E sit next to the analytical
 ``core.slo.predict_slo`` prediction for the same layout, so the two sides of
 the paper's methodology (measure + model) face each other at request level.
 
-Backends × layouts (4-device host-platform mesh):
+Two series (4-device host-platform mesh):
 
-  gspmd    ModelBackend, t=1 p=1 — the GSPMD Model path
-  tp2      TPBackend, explicit TP over 2 devices
-  pp2      PPBackend, explicit PP over 2 single-device stages
+  short    gspmd / tp2 / pp2, contiguous slots, prompts 8–48 at three
+           arrival rates — the original throughput-vs-latency sweep
+  longctx  prompts spanning 16–512 (the regime where a contiguous
+           ``max_len`` slot pool wastes most of its memory): contiguous
+           vs ``paged=True`` + chunked prefill on the same trace — the
+           paged-vs-contiguous throughput series (DESIGN.md §8)
 
-Emits ``BENCH_serve.json`` at the repo root (per backend × rate: throughput,
-mean/p95 TTFT/TPOT/E2E, queue delay).  Runs in a subprocess so the device
-flag stays contained.  ``--dry-run`` serves one tiny closed trace per
-backend and skips the JSON write — the CI smoke mode that keeps every
-serving entrypoint compiling.
+Every record carries the *predicted* per-step decode collective counts (and,
+for paged runs, the per-chunk prefill counts) from ``commodel`` — these are
+deterministic and machine-independent, so CI's bench-regression gate
+(`benchmarks/check_baselines.py`) can diff them against the checked-in
+``BENCH_serve.json`` without chasing timing noise.
+
+Emits ``BENCH_serve.json`` at the repo root.  Runs in a subprocess so the
+device flag stays contained.  ``--dry-run`` serves one tiny closed trace per
+backend (including a paged one) and writes ``results/BENCH_serve.dryrun.json``
+for the CI artifact + drift gate instead of the full series.
 """
 import json
 import os
@@ -27,6 +35,7 @@ import sys
 ARCH = "llama32-3b"
 REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 OUT_PATH = os.path.join(REPO, "BENCH_serve.json")
+DRY_PATH = os.path.join(REPO, "results", "BENCH_serve.dryrun.json")
 
 N_REQUESTS = 24
 NUM_SLOTS = 4
@@ -36,6 +45,15 @@ MAX_LEN = 96
 RATES = [2.0, 8.0, 0.0]          # req/s; 0 = closed batch (all at t=0)
 PROMPT_LENS = (8, 48)
 DECODE_LENS = (4, 24)
+
+# long-context mixed trace: prompts up to 512 tokens (paged vs contiguous)
+LONG_PROMPT_LENS = (16, 512)
+LONG_DECODE_LENS = (4, 16)
+LONG_MAX_LEN = 544
+LONG_REQUESTS = 8
+LONG_QUANTUM = 32
+CHUNK_SIZE = 64
+PAGE_SIZE = 16
 
 
 def _measure(dry_run: bool = False):
@@ -51,58 +69,97 @@ def _measure(dry_run: bool = False):
     from repro.models.transformer import get_model
     from repro.runtime.backends import make_backend
     from repro.runtime.request import Request, make_poisson_trace
-    from repro.runtime.scheduler import Scheduler
+    from repro.runtime.scheduler import Scheduler, step_collective_counts
 
     cfg = get_config(ARCH).reduced(num_layers=4)
     params = get_model(cfg).init(jax.random.PRNGKey(0))
 
-    n_requests = DRY_REQUESTS if dry_run else N_REQUESTS
-    num_slots = DRY_SLOTS if dry_run else NUM_SLOTS
-    rates = [0.0] if dry_run else RATES
-    backends = [("gspmd", dict()), ("tp2", dict(t=2)),
-                ("pp2", dict(t=1, p=2))]
+    def chunk_counts(backend, chunk):
+        counts = {}
+        for o in backend.chunk_comm_ops(chunk):
+            counts[o.collective] = counts.get(o.collective, 0) + o.count
+        return counts
 
-    # analytical counterpart: one mean-shape request on an idle engine
-    sp_mean = sum(PROMPT_LENS) // 2
-    sd_mean = sum(DECODE_LENS) // 2
-    results = []
-    for name, kw in backends:
-        kind = {"gspmd": "gspmd", "tp2": "tp", "pp2": "pp"}[name]
-        t, p = kw.get("t", 1), kw.get("p", 1)
-        pred = predict_slo(cfg, sp_mean, sd_mean, t=t, p=p)
-        # ONE backend per kind, reused across rates — the jits live on it,
-        # so the compile caches warm once; admission fully overwrites slot
-        # rows, making reuse across runs safe
+    def run_series(series, kind, name, t, p, paged, chunk, num_slots,
+                   max_len, traces, warm_lens, rates, sp_mean, sd_mean):
         backend = make_backend(kind, cfg, params, num_slots=num_slots,
-                               max_len=MAX_LEN, **kw)
-        traces = {rate: make_poisson_trace(
-            n_requests, rate, cfg.vocab_size, prompt_lens=PROMPT_LENS,
-            decode_lens=DECODE_LENS, seed=7, quantum=8) for rate in rates}
+                               max_len=max_len, t=t, p=p, paged=paged,
+                               page_size=PAGE_SIZE)
+        sched = lambda: Scheduler(backend,
+                                  chunk_size=chunk if paged else None)
         # warm the compile caches off the clock: one 2-token request per
         # distinct bucketed prompt length, plus the decode step itself
         wrng = np.random.default_rng(1)
         warm = [Request(rid=10_000 + j,
                         prompt=wrng.integers(2, cfg.vocab_size, s),
                         max_new_tokens=2)
-                for j, s in enumerate(
-                    sorted({r.prompt_len for t in traces.values()
-                            for r in t}))]
-        Scheduler(backend).run(warm)
+                for j, s in enumerate(sorted(warm_lens))]
+        sched().run(warm)
+        # analytical counterpart at THIS series' mean request shape
+        pred = predict_slo(cfg, sp_mean, sd_mean, t=t, p=p)
+        out = []
         for rate in rates:
-            report = Scheduler(backend).run(traces[rate])
+            report = sched().run(traces[rate])
             s = report.summary()
-            results.append({
-                "arch": cfg.name, "backend": name, "tp": t, "pp": p,
+            out.append({
+                "series": series, "arch": cfg.name, "backend": name,
+                "tp": t, "pp": p, "paged": paged,
+                "chunk_size": chunk if paged else None,
                 "num_slots": num_slots, "rate_req_s": rate,
                 **s,
                 "queue_delay_mean_s": float(
                     sum(m.queue_delay for m in report.metrics)
                     / len(report.metrics)),
-                "decode_steps": len(report.steps),
+                "decode_steps": len([r for r in report.steps
+                                     if r.phase == "decode"]),
+                "prefill_chunks": len([r for r in report.steps
+                                       if r.phase == "prefill"]),
+                "decode_collective_counts":
+                    step_collective_counts(backend, 1),
+                "prefill_chunk_counts":
+                    chunk_counts(backend, chunk) if paged else None,
                 "predicted_ttft_s": pred.ttft,
                 "predicted_tpot_s": pred.tpot,
                 "predicted_e2e_s": pred.e2e,
             })
+        return out
+
+    n_requests = DRY_REQUESTS if dry_run else N_REQUESTS
+    num_slots = DRY_SLOTS if dry_run else NUM_SLOTS
+    rates = [0.0] if dry_run else RATES
+
+    results = []
+    # -- short series: gspmd vs tp2 vs pp2 (contiguous, as before) + a
+    #    paged gspmd point so paged-vs-contiguous exists at every scale
+    short_backends = [("gspmd", "gspmd", 1, 1, False),
+                      ("tp", "tp2", 2, 1, False),
+                      ("pp", "pp2", 1, 2, False),
+                      ("gspmd", "gspmd-paged", 1, 1, True)]
+    traces = {rate: make_poisson_trace(
+        n_requests, rate, cfg.vocab_size, prompt_lens=PROMPT_LENS,
+        decode_lens=DECODE_LENS, seed=7, quantum=8) for rate in rates}
+    warm_lens = {r.prompt_len for t in traces.values() for r in t}
+    for kind, name, t, p, paged in short_backends:
+        results += run_series("short", kind, name, t, p, paged,
+                              8 if dry_run else CHUNK_SIZE // 4, num_slots,
+                              MAX_LEN, traces, warm_lens, rates,
+                              sum(PROMPT_LENS) // 2, sum(DECODE_LENS) // 2)
+
+    # -- long-context series: prompts 16–512, paged vs contiguous on the
+    #    same closed trace (arrival rate stresses nothing new here)
+    long_n = 3 if dry_run else LONG_REQUESTS
+    long_lens = (16, 96) if dry_run else LONG_PROMPT_LENS
+    long_max = 128 if dry_run else LONG_MAX_LEN
+    ltraces = {0.0: make_poisson_trace(
+        long_n, 0.0, cfg.vocab_size, prompt_lens=long_lens,
+        decode_lens=LONG_DECODE_LENS, seed=11, quantum=LONG_QUANTUM)}
+    lwarm = {r.prompt_len for t in ltraces.values() for r in t}
+    for name, paged in [("gspmd", False), ("gspmd-paged", True)]:
+        results += run_series("longctx", "gspmd", name, 1, 1, paged,
+                              16 if dry_run else CHUNK_SIZE, num_slots,
+                              long_max, ltraces, lwarm, [0.0],
+                              sum(long_lens) // 2,
+                              sum(LONG_DECODE_LENS) // 2)
     print("SERVEJSON:" + json.dumps(results))
 
 
@@ -128,14 +185,16 @@ def rows(dry_run: bool = False):
     recs, err = _run_subprocess(dry_run)
     if recs is None:
         return [("serve/bench", 0.0, f"subprocess_failed;stderr={err}")]
-    if not dry_run:
-        with open(OUT_PATH, "w") as f:
-            json.dump(recs, f, indent=2, sort_keys=True)
+    path = DRY_PATH if dry_run else OUT_PATH
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(recs, f, indent=2, sort_keys=True)
     out = []
     for r in recs:
         rate = "closed" if not r["rate_req_s"] else f"{r['rate_req_s']:g}rps"
         out.append((
-            f"serve/{r['arch']}/t{r['tp']}p{r['pp']}/{r['backend']}/{rate}",
+            f"serve/{r['series']}/{r['arch']}/t{r['tp']}p{r['pp']}/"
+            f"{r['backend']}/{rate}",
             r["throughput_tok_s"],
             f"tok_per_s={r['throughput_tok_s']:.1f};"
             f"ttft_p95={r['ttft_p95_s']*1e3:.0f}ms;"
@@ -149,15 +208,16 @@ def main(dry_run: bool = False):
     mode = (f"dry-run smoke, {DRY_REQUESTS} reqs, {DRY_SLOTS} slots"
             if dry_run
             else f"{N_REQUESTS} reqs × {RATES}, {NUM_SLOTS} slots")
-    print(f"Continuous-batching serving — gspmd vs tp2 vs pp2 "
-          f"({mode}, Poisson arrivals)")
+    print(f"Continuous-batching serving — gspmd/tp2/pp2 + paged, short & "
+          f"long-context traces ({mode}, Poisson arrivals)")
     rs = rows(dry_run)
     for r in rs:
-        print(f"  {r[0]:52s} {r[2]}")
+        print(f"  {r[0]:60s} {r[2]}")
     if dry_run and any(r[0] == "serve/bench" for r in rs):
         raise SystemExit("serving_bench smoke failed")
-    if not dry_run and os.path.exists(OUT_PATH):
-        print(f"  wrote {OUT_PATH}")
+    out = DRY_PATH if dry_run else OUT_PATH
+    if os.path.exists(out):
+        print(f"  wrote {out}")
 
 
 if __name__ == "__main__":

@@ -1,5 +1,5 @@
 """Paper Table III: TP message size & frequency, Llama-3.1-8B, S_p=S_d=128."""
-from benchmarks.common import Row, timed
+from benchmarks.common import timed
 from repro.configs import get_config
 from repro.core import commodel as cm
 

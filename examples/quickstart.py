@@ -6,7 +6,6 @@ step, and a short greedy generation — the whole public API in 40 lines.
 import argparse
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.models.transformer import get_model

@@ -7,7 +7,7 @@ are looked up through :func:`repro.configs.get_config`.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional
 
 
 @dataclasses.dataclass(frozen=True)

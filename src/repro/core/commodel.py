@@ -246,6 +246,40 @@ def v_hybrid(cfg: ModelConfig, s_p: int, s_d: int, t: int, p: int,
     return sum(v_hybrid_components(cfg, s_p, s_d, t, p, b).values())
 
 
+def chunked_prefill_ops(cfg: ModelConfig, s_p: int, chunk: int,
+                        t: int = 1, p: int = 1, *, b: int = 2,
+                        batch: int = 1,
+                        gather_mode: str = "gather") -> List[CommOp]:
+    """Prefill communication when the prompt is split into fixed-size chunks
+    (DESIGN.md §8): ``ceil(s_p / chunk)`` passes, each carrying the SAME
+    collective schedule as a full prefill pass — (2L+1) allreduce + 1 logit
+    gather under TP, (p-1)·2 boundary sends under PP, the per-stage mix
+    under hybrid — with message rows scaled to the chunk's tokens (the final
+    chunk may be shorter).  Counts therefore grow linearly with the number
+    of chunks while staying batch- and chunk-length-invariant *per chunk*,
+    which is what lets the scheduler interleave chunks with decode steps
+    without changing any per-step count column.
+
+    The chunked engines compute the logits head every chunk (one uniform
+    jitted pass — only the final chunk's argmax is consumed), so the gather
+    count is per-chunk too; total allreduce bytes equal the monolithic
+    prefill's exactly, the gather bytes exceed it by (n_chunks - 1) calls.
+    """
+    if chunk < 1:
+        raise ValueError(f"chunk must be >= 1, got {chunk}")
+    sizes = [chunk] * (s_p // chunk)
+    if s_p % chunk:
+        sizes.append(s_p % chunk)
+    ops: List[CommOp] = []
+    for c in sorted(set(sizes), reverse=True):
+        n = sizes.count(c)
+        per_pass = hybrid_comm_ops(cfg, c, 1, t, p, b=b, batch=batch,
+                                   gather_mode=gather_mode)
+        ops += [dataclasses.replace(o, count=o.count * n)
+                for o in per_pass if o.phase == "prefill"]
+    return ops
+
+
 # ---------------------------------------------------------------------------
 # Beyond-paper extensions
 # ---------------------------------------------------------------------------

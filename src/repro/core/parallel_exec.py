@@ -41,7 +41,6 @@ Two execution modes (DESIGN.md §5):
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Tuple
 
 import jax
@@ -53,8 +52,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.config.base import ModelConfig
 from repro.core.commodel import stage_layer_partition
 from repro.models.layers import apply_rope, decode_attn_mask, \
-    decode_positions, gqa_attention, make_mask, mlp_apply, rms_norm, \
-    ring_cache_update
+    decode_positions, gqa_attention, make_mask, mlp_apply, paged_attn_mask, \
+    paged_cache_update, paged_gather, rms_norm, ring_cache_update
 from repro.models.transformer import greedy_decode_host_loop, \
     greedy_decode_loop
 
@@ -110,23 +109,36 @@ def _maybe_psum(x, axis):
     return jax.lax.psum(x, axis) if axis is not None else x
 
 
-def _tp_layer_full(cfg, pl, x, positions, mask, axis, heads_t: int,
-                   kv_t: int, cache_w=None):
-    """One transformer layer over a full sequence.  2 psums when TP-sharded
-    (``axis`` set); ``axis=None`` runs the same math full-width."""
-    B, S, _ = x.shape
+def _tp_layer_qkv(cfg, pl, xn, positions, heads_t: int, kv_t: int):
+    """Normed input [B, S, h] -> (RoPE'd q, RoPE'd k, v), each
+    [B, S, H_t, D] — the projection head shared by every layer variant."""
+    B, S = xn.shape[:2]
     D = cfg.head_dim
-    xn = rms_norm(x, pl["ln1"], cfg.norm_eps)
     q = apply_rope((xn @ pl["wq"]).reshape(B, S, heads_t, D), positions,
                    cfg.rope_theta)
     k = apply_rope((xn @ pl["wk"]).reshape(B, S, kv_t, D), positions,
                    cfg.rope_theta)
     v = (xn @ pl["wv"]).reshape(B, S, kv_t, D)
-    attn = gqa_attention(q, k, v, mask).reshape(B, S, heads_t * D)
+    return q, k, v
+
+
+def _tp_layer_out(cfg, pl, x, attn, axis):
+    """Attention-output + MLP residual tail shared by every layer variant:
+    the layer's TWO psums when TP-sharded (``axis`` set)."""
     x = x + _maybe_psum(attn @ pl["wo"], axis)                 # AR (attn out)
     xn2 = rms_norm(x, pl["ln2"], cfg.norm_eps)
-    mlp = mlp_apply(pl, xn2, cfg.activation)
-    x = x + _maybe_psum(mlp, axis)                             # AR (mlp down)
+    return x + _maybe_psum(mlp_apply(pl, xn2, cfg.activation), axis)  # AR
+
+
+def _tp_layer_full(cfg, pl, x, positions, mask, axis, heads_t: int,
+                   kv_t: int, cache_w=None):
+    """One transformer layer over a full sequence.  2 psums when TP-sharded
+    (``axis`` set); ``axis=None`` runs the same math full-width."""
+    B, S, _ = x.shape
+    xn = rms_norm(x, pl["ln1"], cfg.norm_eps)
+    q, k, v = _tp_layer_qkv(cfg, pl, xn, positions, heads_t, kv_t)
+    attn = gqa_attention(q, k, v, mask).reshape(B, S, heads_t * cfg.head_dim)
+    x = _tp_layer_out(cfg, pl, x, attn, axis)
     cache = None
     if cache_w is not None:
         from repro.models.blocks import build_ring_cache
@@ -138,22 +150,36 @@ def _tp_layer_step(cfg, pl, x, pos, cache, axis, heads_t: int, kv_t: int):
     """One decode step against a ring cache.  2 psums when TP-sharded.
     ``pos`` is a scalar (shared depth) or [B] per-sequence positions."""
     B = x.shape[0]
-    D = cfg.head_dim
     w = cache["k"].shape[1]
     positions = decode_positions(pos, B)
     xn = rms_norm(x, pl["ln1"], cfg.norm_eps)
-    q = apply_rope((xn @ pl["wq"]).reshape(B, 1, heads_t, D), positions,
-                   cfg.rope_theta)
-    k = apply_rope((xn @ pl["wk"]).reshape(B, 1, kv_t, D), positions,
-                   cfg.rope_theta)
-    v = (xn @ pl["wv"]).reshape(B, 1, kv_t, D)
+    q, k, v = _tp_layer_qkv(cfg, pl, xn, positions, heads_t, kv_t)
     ck, cv = ring_cache_update(cache["k"], cache["v"], k, v, pos)
     mask = decode_attn_mask(w, pos, cfg.sliding_window)
-    attn = gqa_attention(q, ck, cv, mask).reshape(B, 1, heads_t * D)
-    x = x + _maybe_psum(attn @ pl["wo"], axis)
-    xn2 = rms_norm(x, pl["ln2"], cfg.norm_eps)
-    x = x + _maybe_psum(mlp_apply(pl, xn2, cfg.activation), axis)
-    return x, {"k": ck, "v": cv}
+    attn = gqa_attention(q, ck, cv, mask).reshape(B, 1,
+                                                  heads_t * cfg.head_dim)
+    return _tp_layer_out(cfg, pl, x, attn, axis), {"k": ck, "v": cv}
+
+
+def _tp_layer_paged(cfg, pl, x, pos, cache, bt, axis, heads_t: int,
+                    kv_t: int):
+    """One transformer layer of a *paged* pass: x [B, S, h] is a prefill
+    chunk (S > 1) or a decode token (S == 1) starting at per-sequence
+    positions ``pos`` [B]; K/V rows are scattered into the layer's
+    [P, ps, kv_t, D] page pool at the pages ``bt`` names and the logical
+    view is gathered back for attention (DESIGN.md §8).  The collective
+    schedule is exactly the contiguous layer's: 2 psums when TP-sharded —
+    paging is data movement, not communication."""
+    B, S = x.shape[:2]
+    positions = pos[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+    xn = rms_norm(x, pl["ln1"], cfg.norm_eps)
+    q, k, v = _tp_layer_qkv(cfg, pl, xn, positions, heads_t, kv_t)
+    ck, cv = paged_cache_update(cache["k"], cache["v"], k, v, pos, bt)
+    kg, vg = paged_gather(ck, bt), paged_gather(cv, bt)
+    mask = paged_attn_mask(kg.shape[1], pos, S)
+    attn = gqa_attention(q, kg, vg, mask).reshape(B, S,
+                                                  heads_t * cfg.head_dim)
+    return _tp_layer_out(cfg, pl, x, attn, axis), {"k": ck, "v": cv}
 
 
 def _layer_slice(blocks, l):
@@ -337,6 +363,54 @@ def tp_generate(cfg: ModelConfig, mesh: Mesh, num_tokens: int,
         donate_argnums=(1,))
 
 
+def tp_paged_step(cfg: ModelConfig, mesh: Mesh, unroll: bool = False,
+                  donate: bool = True):
+    """jit'd fn(params, cache, tokens [B,S], pos [B], bt [B,n]) ->
+    (last-position logits [B, v], cache) — the paged TP pass (DESIGN.md §8).
+
+    ONE builder serves chunked prefill (S = chunk) and paged decode (S = 1);
+    each distinct (B, S, n) traces once.  Collectives per call are exactly
+    the contiguous step's — (2L+1) allreduce + 1 logits all-gather — for ANY
+    chunk length or batch: the page scatter/gather is per-shard local (the
+    kv-head axis is the sharded one; the page axis is replicated), so paging
+    adds data movement, never communication.  The [L, P, ps, kv/t, D] page
+    pools are donated by default (in-place update across chunks and steps).
+    """
+    t = mesh.shape["tp"]
+    heads_t, kv_t = cfg.num_heads // t, cfg.num_kv_heads // t
+    specs = tp_param_specs(cfg)
+
+    def fn(params, cache, tokens, pos, bt):
+        x = _vocab_parallel_embed(params["embed"], tokens, "tp")
+        if unroll:
+            new_cache = []
+            for l in range(cfg.num_layers):
+                x, c = _tp_layer_paged(cfg, _layer_slice(params["blocks"], l),
+                                       x, pos, _layer_slice(cache, l), bt,
+                                       "tp", heads_t, kv_t)
+                new_cache.append(c)
+            cache = jax.tree.map(lambda *xs: jnp.stack(xs), *new_cache)
+        else:
+            def body(h, inp):
+                pl, cl = inp
+                h, c = _tp_layer_paged(cfg, pl, h, pos, cl, bt, "tp",
+                                       heads_t, kv_t)
+                return h, c
+
+            x, cache = jax.lax.scan(body, x, (params["blocks"], cache))
+        logits = _logits_allgather(params, x[:, -1, :], "tp", cfg.vocab_size,
+                                   cfg.norm_eps)
+        return logits, cache
+
+    return jax.jit(shard_map(
+        fn, mesh=mesh,
+        in_specs=(specs, _TP_CACHE_SPEC, P(None, None), P(None),
+                  P(None, None)),
+        out_specs=(P(None, None), _TP_CACHE_SPEC),
+        check_rep=False),
+        donate_argnums=(1,) if donate else ())
+
+
 # ---------------------------------------------------------------------------
 # PP engine — one jitted computation per stage, explicit transfers (vLLM-style)
 # ---------------------------------------------------------------------------
@@ -419,6 +493,7 @@ class PipelineEngine:
         self._stage_fns = [self._build_stage(s) for s in range(p)]
         self._cache_stage_fns = {}      # cache_w -> per-stage prefill fns
         self._decode_stage_fns = {}     # vector_pos -> per-stage decode fns
+        self._paged_stage_fns = None    # per-stage paged chunk/decode fns
 
     # -- shared stage fragments (traced inside each stage's jit) -----------
     def _embed_tokens(self, params, tokens):
@@ -571,6 +646,65 @@ class PipelineEngine:
         donate = () if self.unroll else (1,)
         return jax.jit(mapped, donate_argnums=donate), mesh
 
+    def _build_paged_stage(self, s: int):
+        """Paged stage fn (DESIGN.md §8): fn(params, cache, x_or_tokens,
+        pos [B], bt [B, n]) -> (out, cache) against the stage's donated
+        [L_s, P, ps, kv/t, D] page pools.  One fn per stage serves every
+        chunk length AND paged decode (each distinct shape traces once);
+        the per-pass collective schedule is identical to the contiguous
+        decode stage — ``commodel.hybrid_stage_collectives`` — because the
+        page scatter/gather is shard-local."""
+        cfg, t, p = self.cfg, self.t, self.p
+        lo, hi = stage_layer_range(cfg, p, s)
+        heads_t, kv_t = cfg.num_heads // t, cfg.num_kv_heads // t
+        axis = "tp" if t > 1 else None
+        first, last = s == 0, s == p - 1
+
+        def fn(params, cache, x_or_tokens, pos, bt):
+            x = (self._embed_tokens(params, x_or_tokens) if first
+                 else self._boundary_in(x_or_tokens))
+            if self.unroll:
+                new_cache = []
+                for i, l in enumerate(range(lo, hi)):
+                    x, c = _tp_layer_paged(
+                        cfg, _layer_slice(params["blocks"], l), x, pos,
+                        _layer_slice(cache, i), bt, axis, heads_t, kv_t)
+                    new_cache.append(c)
+                cache = jax.tree.map(lambda *xs: jnp.stack(xs), *new_cache)
+            else:
+                def body(h, inp):
+                    pl, cl = inp
+                    h, c = _tp_layer_paged(cfg, pl, h, pos, cl, bt, axis,
+                                           heads_t, kv_t)
+                    return h, c
+
+                x, cache = jax.lax.scan(
+                    body, x, (self._stage_blocks(params, lo, hi), cache))
+            out = (self._head_out(params, x[:, -1, :]) if last
+                   else self._boundary_out(x))
+            return out, cache
+
+        specs = tp_param_specs(cfg)
+        _, out_spec = self._boundary_specs(s)
+        in_x_spec = (P(None, None) if first
+                     else self._boundary_pair_spec())
+        if t > 1:
+            mapped = shard_map(
+                fn, mesh=self.meshes[s],
+                in_specs=(specs, _STAGE_CACHE_SPEC, in_x_spec, P(None),
+                          P(None, None)),
+                out_specs=(out_spec, _STAGE_CACHE_SPEC), check_rep=False)
+        else:
+            mapped = fn
+        donate = () if self.unroll else (1,)
+        return jax.jit(mapped, donate_argnums=donate), self.meshes[s]
+
+    def _paged_fns(self):
+        if self._paged_stage_fns is None:
+            self._paged_stage_fns = [self._build_paged_stage(s)
+                                     for s in range(self.p)]
+        return self._paged_stage_fns
+
     def _cache_fns(self, cache_w: int):
         if cache_w not in self._cache_stage_fns:
             self._cache_stage_fns[cache_w] = [
@@ -668,6 +802,34 @@ class PipelineEngine:
                 x = self._move_boundary(out, s, "decode")
         return out, new_caches
 
+    def paged_pass(self, staged_params, caches, tokens, pos, bt,
+                   phase: str = "decode"):
+        """One paged pass through all p stages: a prefill chunk
+        (tokens [B, S], phase="prefill") or a paged decode step
+        (tokens [B, 1], phase="decode") — DESIGN.md §8.
+
+        Every boundary ships the same two-tensor [B, S, h/t] summand pair as
+        the contiguous passes, logged with ``phase`` — so per-chunk prefill
+        hops and per-step decode hops stay separately assertable against
+        ``commodel.chunked_prefill_ops`` / the decode send rows.  Returns
+        (last-position logits [B, v], new per-stage page pools); on the fast
+        path the input pools are donated (consumed).
+        """
+        fns = self._paged_fns()
+        pos = jnp.asarray(pos, jnp.int32)
+        bt = jnp.asarray(bt, jnp.int32)
+        x = jax.device_put(jnp.asarray(tokens, jnp.int32),
+                           NamedSharding(self.meshes[0], P(None, None)))
+        new_caches = []
+        out = None
+        for s in range(self.p):
+            fn, _ = fns[s]
+            out, c = fn(staged_params[s], caches[s], x, pos, bt)
+            new_caches.append(c)
+            if s < self.p - 1:
+                x = self._move_boundary(out, s, phase)
+        return out, new_caches
+
     def generate(self, staged_params, caches, token, pos, num_tokens: int):
         """Greedy pipelined generation: N tokens through all p stages.
 
@@ -716,6 +878,26 @@ class PipelineEngine:
         fn, _ = fns[s]
         return fn.lower(staged_params[s], caches[s], x,
                         pos).compile().as_text()
+
+    def stage_paged_hlo(self, staged_params, caches, tokens, pos, bt,
+                        s: int) -> str:
+        """Compiled HLO of stage s's paged pass (any chunk length) —
+        asserted against ``commodel.hybrid_stage_collectives``, which covers
+        paged passes too (counts are chunk-length-invariant).  Earlier
+        stages run on cache copies so the caller's pools survive donation."""
+        fns = self._paged_fns()
+        pos = jnp.asarray(pos, jnp.int32)
+        bt = jnp.asarray(bt, jnp.int32)
+        x = jax.device_put(jnp.asarray(tokens, jnp.int32),
+                           NamedSharding(self.meshes[0], P(None, None)))
+        for i in range(s):
+            fn, _ = fns[i]
+            out, _ = fn(staged_params[i],
+                        jax.tree.map(jnp.copy, caches[i]), x, pos, bt)
+            x = self._move_boundary(out, i, "hlo", log=False)
+        fn, _ = fns[s]
+        return fn.lower(staged_params[s], caches[s], x, pos,
+                        bt).compile().as_text()
 
     def transfer_summary(self, phase: str = None):
         """Aggregate logged transfers; ``phase`` filters to one phase so the

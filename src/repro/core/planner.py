@@ -14,7 +14,6 @@ import dataclasses
 from typing import List, Optional
 
 from repro.config.base import HardwareProfile, H100_NODE, ModelConfig
-from repro.core.commodel import comm_ops_for
 from repro.core.slo import DEFAULT_OVERHEADS, EngineOverheads, SLOReport, \
     predict_slo
 

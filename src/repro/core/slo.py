@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List
+from typing import Dict
 
 from repro.config.base import HardwareProfile, H100_NODE, ModelConfig
 from repro.core.commodel import CommOp, comm_ops_for

@@ -15,7 +15,7 @@ import numpy as np
 
 try:
     import jax
-    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    from jax.sharding import NamedSharding
 except Exception:                                  # pragma: no cover
     jax = None
 

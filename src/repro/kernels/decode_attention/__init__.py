@@ -1,1 +1,2 @@
-from repro.kernels.decode_attention.ops import decode_attention  # noqa: F401
+from repro.kernels.decode_attention.ops import (  # noqa: F401
+    decode_attention, paged_decode_attention)

@@ -6,7 +6,10 @@ import os
 import jax
 
 from repro.kernels.decode_attention.decode_kernel import decode_attention_pallas
-from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.decode_attention.paged_kernel import \
+    paged_decode_attention_pallas
+from repro.kernels.decode_attention.ref import (decode_attention_ref,
+                                                paged_decode_attention_ref)
 
 
 def decode_attention(q, k, v, valid):
@@ -15,3 +18,18 @@ def decode_attention(q, k, v, valid):
     if os.environ.get("REPRO_PALLAS_INTERPRET") == "1":
         return decode_attention_pallas(q, k, v, valid, interpret=True)
     return decode_attention_ref(q, k, v, valid)
+
+
+def paged_decode_attention(q, k_pages, v_pages, block_tables, lengths):
+    """Paged flash-decode (DESIGN.md §8): the Pallas kernel indexes KV pages
+    directly via the scalar-prefetched block tables on TPU; elsewhere the
+    jnp oracle gathers the logical view."""
+    if jax.default_backend() == "tpu":
+        return paged_decode_attention_pallas(q, k_pages, v_pages,
+                                             block_tables, lengths)
+    if os.environ.get("REPRO_PALLAS_INTERPRET") == "1":
+        return paged_decode_attention_pallas(q, k_pages, v_pages,
+                                             block_tables, lengths,
+                                             interpret=True)
+    return paged_decode_attention_ref(q, k_pages, v_pages, block_tables,
+                                      lengths)

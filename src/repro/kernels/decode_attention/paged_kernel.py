@@ -1,0 +1,109 @@
+"""Pallas TPU *paged* decode-attention kernel (DESIGN.md §8).
+
+Same flash-decode structure as ``decode_kernel.py`` — one query token per
+sequence, online softmax over KV blocks — but the KV cache is the KVPool's
+[P, ps, Hkv, D] page pools instead of a contiguous [B, W, Hkv, D] slab, and
+the kernel indexes pages *directly*: the per-sequence block table rides in as
+a scalar-prefetch operand (``pltpu.PrefetchScalarGridSpec``), so the BlockSpec
+index map can pick physical page ``block_tables[b, j]`` for logical page j
+while the grid streams logical pages sequentially.  No gather materializes
+the logical view — the DMA engine fetches exactly one page per grid step,
+which is the point of paging: attention reads scale with the sequence's
+actual length (pages named by its table), not with a padded max_len slab.
+
+Grid: (B, Hkv, n_pages) — n_pages minor/sequential.  ``lengths[b]`` masks
+the tail of the last page and any scratch-aliased entries.
+
+TPU alignment: page_size ideally a multiple of the 8-row sublane and D a
+multiple of 128 for full MXU tiles; interpret mode (tests, CPU) takes any
+shape.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float(np.finfo(np.float32).min)
+
+
+def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, acc, m_i, l_i,
+                  *, scale, page_size):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    nj = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_i[...] = jnp.full_like(m_i, NEG_INF)
+        l_i[...] = jnp.zeros_like(l_i)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale               # [G, D]
+    k = k_ref[0, 0].astype(jnp.float32)                       # [ps, D]
+    s = q @ k.T                                               # [G, ps]
+    # logical position of each row in this page vs the sequence's length
+    idx = j * page_size + jax.lax.broadcasted_iota(jnp.int32, (1, page_size),
+                                                   1)
+    mask = idx < len_ref[b]                                   # [1, ps]
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_i[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+    l_i[...] = l_i[...] * alpha + p.sum(axis=1, keepdims=True)
+    m_i[...] = m_new
+    acc[...] = acc[...] * alpha + p @ v_ref[0, 0].astype(jnp.float32)
+
+    @pl.when(j == nj - 1)
+    def _flush():
+        o_ref[0, 0] = (acc[...] /
+                       jnp.maximum(l_i[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention_pallas(q, k_pages, v_pages, block_tables, lengths,
+                                  *, interpret: bool = False):
+    """q: [B,Hq,D]; k_pages/v_pages: [P,ps,Hkv,D]; block_tables: [B,n] int32
+    (physical page of logical page j); lengths: [B] int32 -> [B,Hq,D]."""
+    B, Hq, D = q.shape
+    ps, Hkv = k_pages.shape[1], k_pages.shape[2]
+    G = Hq // Hkv
+    n = block_tables.shape[1]
+
+    qt = q.reshape(B, Hkv, G, D)                              # [B,Hkv,G,D]
+    kt = k_pages.transpose(2, 0, 1, 3)                        # [Hkv,P,ps,D]
+    vt = v_pages.transpose(2, 0, 1, 3)
+
+    def kv_index(b, h, j, bt_ref, len_ref):
+        return (h, bt_ref[b, j], 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, n),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D),
+                         lambda b, h, j, bt_ref, len_ref: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, ps, D), kv_index),
+            pl.BlockSpec((1, 1, ps, D), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D),
+                               lambda b, h, j, bt_ref, len_ref: (b, h, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((G, D), jnp.float32),
+                        pltpu.VMEM((G, 1), jnp.float32),
+                        pltpu.VMEM((G, 1), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_kernel, scale=1.0 / np.sqrt(D),
+                          page_size=ps),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        interpret=interpret,
+    )(jnp.asarray(block_tables, jnp.int32), jnp.asarray(lengths, jnp.int32),
+      qt, kt, vt)
+    return out.reshape(B, Hq, D)

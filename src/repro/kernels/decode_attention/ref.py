@@ -6,6 +6,27 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def paged_decode_attention_ref(q, k_pages, v_pages, block_tables, lengths):
+    """Oracle for the paged kernel: gather the logical view named by the
+    block tables, then masked attention.  q: [B,Hq,D]; k_pages/v_pages:
+    [P,ps,Hkv,D]; block_tables: [B,n] int32; lengths: [B] int32."""
+    B, Hq, D = q.shape
+    ps, Hkv = k_pages.shape[1], k_pages.shape[2]
+    n = block_tables.shape[1]
+    G = Hq // Hkv
+    k = k_pages[block_tables].reshape(B, n * ps, Hkv, D)
+    v = v_pages[block_tables].reshape(B, n * ps, Hkv, D)
+    valid = jnp.arange(n * ps)[None, :] < lengths[:, None]      # [B, T]
+    qg = q.reshape(B, Hkv, G, D)
+    logits = jnp.einsum("bkgd,btkd->bkgt", qg, k).astype(jnp.float32)
+    logits *= 1.0 / np.sqrt(D)
+    logits = jnp.where(valid[:, None, None, :], logits,
+                       jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgt,btkd->bkgd", probs, v)
+    return out.reshape(B, Hq, D)
+
+
 def decode_attention_ref(q, k, v, valid):
     """q: [B,Hq,D]; k,v: [B,W,Hkv,D]; valid: [W] bool -> [B,Hq,D]."""
     B, Hq, D = q.shape

@@ -43,7 +43,6 @@ def _record_path(arch: str, shape: str, mesh_name: str) -> str:
 def run_one(arch: str, shape_name: str, multi_pod: bool,
             variant: str = "baseline") -> dict:
     import jax
-    import jax.numpy as jnp
     from jax.sharding import NamedSharding, PartitionSpec as P
 
     from repro.config.base import INPUT_SHAPES, TPU_V5E
@@ -53,7 +52,6 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
     from repro.launch.mesh import make_production_mesh
     from repro.models.transformer import get_model
     from repro.optim.adamw import AdamW
-    from repro.runtime import sharding as sh
     from repro.runtime.engine import make_serve_step
     from repro.runtime.train import make_train_step
 

@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.config.base import INPUT_SHAPES, ModelConfig, ShapeConfig
+from repro.config.base import ModelConfig, ShapeConfig
 from repro.models.transformer import get_model
 from repro.runtime import sharding as sh
 

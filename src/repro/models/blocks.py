@@ -3,11 +3,13 @@
 Block API (used by the scan trunk in ``transformer.py``):
 
     init_blocks(rng, cfg, L, dtype)              -> stacked param pytree [L, ...]
-    block_apply(cfg, p_l, x, positions, mask,
-                cache=None, pos=None, build_cache_w=None) -> (y, cache_out, aux)
+    block_apply(cfg, p_l, x, positions, mask, cache=None, pos=None,
+                build_cache_w=None, block_table=None) -> (y, cache_out, aux)
 
 ``cache`` is the per-layer cache slice in decode mode; ``build_cache_w`` asks a
-full-sequence pass to emit a (ring-buffer) cache of width W for the engine.
+full-sequence pass to emit a (ring-buffer) cache of width W for the engine;
+``block_table`` switches the dense block to the paged-cache path
+(DESIGN.md §8), where ``cache`` is a [P, ps, Hkv, D] page pool.
 """
 from __future__ import annotations
 
@@ -16,7 +18,7 @@ import jax.numpy as jnp
 
 from repro.config.base import ModelConfig
 from repro.models import layers
-from repro.models.layers import (apply_rope, dense_init, gqa_attention,
+from repro.models.layers import (apply_rope, gqa_attention,
                                  mlp_apply, rms_norm)
 
 
@@ -37,7 +39,8 @@ def build_ring_cache(k, v, w: int):
 
 
 def attention_apply(cfg: ModelConfig, p, xn, positions, mask,
-                    cache=None, pos=None, build_cache_w=None, n_heads=None):
+                    cache=None, pos=None, build_cache_w=None, n_heads=None,
+                    block_table=None):
     """Self-attention over a normalized input xn [B,S,h].
 
     Returns (attn_out [B,S,n_heads*D], cache_out).
@@ -51,7 +54,20 @@ def attention_apply(cfg: ModelConfig, p, xn, positions, mask,
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
 
-    if cache is not None:
+    if cache is not None and block_table is not None:
+        # paged path (DESIGN.md §8): the chunk's K/V rows are scattered into
+        # the [P, ps, Hkv, D] page pool at the pages the block table names,
+        # then the logical view is gathered back for attention.  Serves both
+        # chunked prefill (S > 1) and paged decode (S == 1); ``pos`` is the
+        # [B] vector of start positions.
+        ck, cv = layers.paged_cache_update(cache["k"], cache["v"], k, v,
+                                           pos, block_table)
+        kg = layers.paged_gather(ck, block_table)
+        vg = layers.paged_gather(cv, block_table)
+        pmask = layers.paged_attn_mask(kg.shape[1], pos, S)
+        out = gqa_attention(q, kg, vg, pmask)
+        cache_out = {"k": ck, "v": cv}
+    elif cache is not None:
         # single-token decode against a ring-buffer cache; ``pos`` is a
         # scalar (fixed-batch serve path) or [B] per-sequence positions
         # (continuous batching: each sequence hits its own slot and mask)
@@ -83,10 +99,12 @@ def init_dense_blocks(rng, cfg: ModelConfig, L: int, dtype):
 
 
 def dense_block_apply(cfg: ModelConfig, p, x, positions, mask,
-                      cache=None, pos=None, build_cache_w=None):
+                      cache=None, pos=None, build_cache_w=None,
+                      block_table=None):
     attn_out, cache_out = attention_apply(
         cfg, p, rms_norm(x, p["ln1"], cfg.norm_eps), positions, mask,
-        cache=cache, pos=pos, build_cache_w=build_cache_w)
+        cache=cache, pos=pos, build_cache_w=build_cache_w,
+        block_table=block_table)
     x = x + attn_out @ p["wo"]
     x = x + mlp_apply(p, rms_norm(x, p["ln2"], cfg.norm_eps), cfg.activation)
     return x, cache_out, jnp.zeros((), jnp.float32)

@@ -148,6 +148,53 @@ def decode_attn_mask(cache_len: int, pos, window=None):
     return m[:, None, None, None, :]
 
 
+def paged_cache_update(cache_k, cache_v, k, v, pos, block_table):
+    """Write a chunk's K/V rows into their block-table pages.
+
+    cache_k/v: [P, ps, Hkv, D] page pools (one layer); k/v: [B, S, Hkv, D];
+    pos: [B] start positions; block_table: [B, n] int32 — logical page j of
+    sequence b lives at physical page ``block_table[b, j]``.  Logical
+    position q maps to physical row ``block_table[b, q // ps] * ps + q % ps``
+    of the flattened pool.  Every live page is owned by exactly one sequence
+    (runtime/kvpool.py), so the scatter destinations are distinct — except
+    for the reserved scratch page 0, which inactive slots alias on purpose
+    (their garbage writes must land somewhere harmless).
+    """
+    P, ps, Hkv, D = cache_k.shape
+    B, S = k.shape[:2]
+    lp = pos[:, None] + jnp.arange(S)[None, :]             # [B, S] logical
+    phys = jnp.take_along_axis(block_table, lp // ps, axis=1)
+    rows = (phys * ps + lp % ps).reshape(-1)               # [B*S] physical
+    ck = cache_k.reshape(P * ps, Hkv, D).at[rows].set(
+        k.reshape(B * S, Hkv, D)).reshape(P, ps, Hkv, D)
+    cv = cache_v.reshape(P * ps, Hkv, D).at[rows].set(
+        v.reshape(B * S, Hkv, D)).reshape(P, ps, Hkv, D)
+    return ck, cv
+
+
+def paged_gather(pages, block_table):
+    """Materialize the logical KV view named by a block table:
+    pages [P, ps, Hkv, D] + table [B, n] -> [B, n*ps, Hkv, D].  Row j*ps+r
+    of the result is logical position j*ps+r of sequence b; entries past the
+    sequence's length alias whatever page the table names there (scratch
+    page 0 for unallocated blocks) and must be masked by the caller."""
+    B, n = block_table.shape
+    P, ps, Hkv, D = pages.shape
+    out = pages[block_table]                               # [B, n, ps, Hkv, D]
+    return out.reshape(B, n * ps, Hkv, D)
+
+
+def paged_attn_mask(kv_len: int, pos, q_len: int):
+    """[B, 1, 1, S, T] causal mask for a paged chunk step: query s of
+    sequence b sits at absolute position pos[b]+s and may attend to logical
+    KV positions <= it (which covers both the previously-cached prefix and
+    the chunk's own causal triangle — the pages were just updated in place)."""
+    q_pos = jnp.asarray(pos)[:, None] + jnp.arange(q_len)[None, :]  # [B, S]
+    kv_pos = jnp.arange(kv_len)
+    m = kv_pos[None, None, :] <= q_pos[:, :, None]                  # [B, S, T]
+    return m[:, None, None, :, :]
+
+
 def ring_cache_update(cache_k, cache_v, k, v, pos):
     """Write this step's K/V row into slot ``pos % W`` of a ring cache.
 

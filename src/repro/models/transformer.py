@@ -187,6 +187,21 @@ class Model:
                                        params["blocks"])
         return x, aux, cache
 
+    def _scan_paged(self, params, x, positions, cache, pos, block_table):
+        cfg = self.cfg
+
+        def body(carry, inp):
+            p_l, c_l = inp
+            h, aux = carry
+            y, c, a = self.block_apply(cfg, p_l, h, positions, None,
+                                       cache=c_l, pos=pos,
+                                       block_table=block_table)
+            return (y, aux + a), c
+
+        (x, aux), new_cache = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)), (params["blocks"], cache))
+        return x, aux, new_cache
+
     def _scan_decode(self, params, x, positions, cache, pos):
         cfg = self.cfg
 
@@ -249,6 +264,45 @@ class Model:
             "k": jnp.zeros((L, batch, w, cfg.num_kv_heads, cfg.head_dim), dtype),
             "v": jnp.zeros((L, batch, w, cfg.num_kv_heads, cfg.head_dim), dtype),
         }
+
+    def init_paged_cache(self, num_pages: int, page_size: int):
+        """[L, P, ps, Hkv, D] K/V page pools (dense attention families only;
+        page 0 is the reserved scratch page — runtime/kvpool.py)."""
+        cfg = self.cfg
+        if cfg.family not in ("dense",):
+            raise ValueError(
+                f"paged KV cache covers dense attention; {cfg.name} is "
+                f"{cfg.family}")
+        if cfg.sliding_window:
+            raise ValueError(
+                "paged KV cache keeps every position (pages, no ring wrap); "
+                f"{cfg.name} uses a sliding window — serve it contiguous")
+        L, dtype = cfg.num_layers, jnp.dtype(cfg.dtype)
+        return {
+            "k": jnp.zeros((L, num_pages, page_size, cfg.num_kv_heads,
+                            cfg.head_dim), dtype),
+            "v": jnp.zeros((L, num_pages, page_size, cfg.num_kv_heads,
+                            cfg.head_dim), dtype),
+        }
+
+    def paged_step(self, params, cache, tokens, pos, block_table):
+        """One paged pass: chunked prefill (S > 1) or paged decode (S == 1).
+
+        tokens [B, S] int32; pos [B] per-sequence start positions;
+        block_table [B, n] int32 page indices; ``cache`` is the
+        ``init_paged_cache`` pool.  K/V rows for positions pos..pos+S-1 are
+        written into their pages and the logical view is gathered back for
+        attention, so the math is identical to the contiguous decode/prefill
+        at the same positions (DESIGN.md §8).  Returns (last-position logits
+        [B, v], new cache).
+        """
+        x = self._embed(params, tokens)
+        B, S = x.shape[:2]
+        pos = jnp.asarray(pos, jnp.int32)
+        positions = pos[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+        x, aux, new_cache = self._scan_paged(params, x, positions, cache,
+                                             pos, block_table)
+        return self._head(params, x[:, -1:, :])[:, 0], new_cache
 
     def decode_step(self, params, cache, tokens, pos):
         """One autoregressive step.  tokens [B] int32; ``pos`` is a scalar

@@ -29,11 +29,30 @@ The protocol (DESIGN.md §7):
 Per-step predicted communication comes from ``commodel.comm_ops_for`` via
 :meth:`DecodeBackend.decode_comm_ops`; the PP/hybrid backend additionally
 exposes the engine's measured TransferRecords through ``drain_transfers``.
+
+Paged mode (DESIGN.md §8).  With ``paged=True`` every backend swaps the
+contiguous [.., num_slots, max_len, ..] slot cache for fixed-size KV *pages*
+([.., num_pages, page_size, ..]) managed by a host-side ``runtime.kvpool.
+KVPool``: slots own pages on demand instead of a pinned ``max_len`` row, so
+long-context and short requests share one pool without reserving worst-case
+memory.  Prefill becomes *chunked* — three extra methods drive it:
+
+  begin_prefill(slot, prompt_len)   allocate the slot's pages
+  prefill_chunk(slot, tokens, start) -> greedy token of the chunk's last
+      position (only the final chunk's is meaningful); ONE jitted paged
+      pass per chunk, same collective schedule as a full prefill pass
+      (``commodel.chunked_prefill_ops``)
+  finish_prefill(slot)              mark the slot decode-eligible
+
+``decode_step`` keeps its protocol signature; in paged mode it extends each
+decode-eligible slot's pages to cover the incoming position and points every
+ineligible slot's block-table row at the reserved scratch page 0, so the
+fixed-capacity step's garbage lanes can never corrupt a live page.
 """
 from __future__ import annotations
 
 import functools
-from typing import List, Protocol, Sequence, runtime_checkable
+from typing import List, Optional, Protocol, Sequence, runtime_checkable
 
 import jax
 import jax.numpy as jnp
@@ -42,8 +61,9 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.config.base import ModelConfig
 from repro.core import parallel_exec as px
-from repro.core.commodel import CommOp, comm_ops_for
+from repro.core.commodel import CommOp, chunked_prefill_ops, comm_ops_for
 from repro.models.transformer import get_model
+from repro.runtime.kvpool import KVPool
 
 
 @runtime_checkable
@@ -81,13 +101,122 @@ class _BackendBase:
     """Shared slot bookkeeping + predicted per-step communication."""
 
     def __init__(self, cfg: ModelConfig, num_slots: int, max_len: int,
-                 t: int, p: int):
+                 t: int, p: int, paged: bool = False, page_size: int = 16,
+                 num_pages: Optional[int] = None):
         if not cfg.is_decoder:
             raise ValueError(f"{cfg.name} is encoder-only: no decode")
         self.cfg = cfg
         self.num_slots = int(num_slots)
         self.max_len = int(max_len)
         self.t, self.p = int(t), int(p)
+        self.paged = bool(paged)
+        if self.paged:
+            if cfg.family != "dense":
+                raise ValueError(
+                    f"paged mode covers dense attention; {cfg.name} is "
+                    f"{cfg.family}")
+            if cfg.sliding_window:
+                raise ValueError(
+                    "paged mode keeps every position (no ring wrap); "
+                    f"{cfg.name} uses a sliding window — serve it contiguous")
+            self.page_size = int(page_size)
+            self.pages_per_slot = -(-self.max_len // self.page_size)
+            if num_pages is None:
+                # capacity parity with the contiguous slot cache, +1 for the
+                # reserved scratch page; a smaller pool oversubscribes
+                # (long-context mixes that would OOM contiguous slots)
+                num_pages = 1 + self.num_slots * self.pages_per_slot
+            self.pool = KVPool(num_pages, self.page_size)
+            self.block_tables = np.zeros(
+                (self.num_slots, self.pages_per_slot), np.int32)
+            self._decodable: set = set()
+            self._worst: dict = {}      # slot -> worst-case pages committed
+
+    # -- paged bookkeeping (DESIGN.md §8) ----------------------------------
+    def _require_paged(self):
+        if not self.paged:
+            raise RuntimeError("chunked-prefill API needs paged=True")
+
+    def _set_table(self, slot: int) -> None:
+        table = self.pool.block_table(slot)
+        row = np.zeros(self.pages_per_slot, np.int32)
+        row[:len(table)] = table
+        self.block_tables[slot] = row
+
+    def _pages_for(self, tokens: int) -> int:
+        return -(-tokens // self.page_size)
+
+    def can_admit(self, prompt_len: int, max_new_tokens: int = 1) -> bool:
+        """True when the pool can cover this request's WORST case (prompt +
+        max_new_tokens - 1 positions) on top of every live request's
+        committed future growth.  Without preemption (DESIGN.md §7/8) this
+        admission gate is what keeps an oversubscribed pool from running
+        out of pages mid-decode: a request the gate rejects stays queued
+        until evictions free pages."""
+        self._require_paged()
+        committed = sum(
+            max(0, self._worst.get(s, 0) - len(self.pool.block_table(s)))
+            for s in self.pool.owners())
+        need = self._pages_for(prompt_len + max_new_tokens - 1)
+        return self.pool.free_pages - committed >= need
+
+    def begin_prefill(self, slot: int, prompt_len: int,
+                      max_new_tokens: int = 1) -> None:
+        """Allocate the slot's pages for a new request's prompt and commit
+        its worst-case decode growth (see ``can_admit``)."""
+        self._require_paged()
+        self.pool.free(slot)                # defensive: slot may be reused
+        self._decodable.discard(slot)
+        self.pool.allocate(slot, prompt_len)
+        self._worst[slot] = self._pages_for(prompt_len + max_new_tokens - 1)
+        self._set_table(slot)
+
+    def prefill_chunk(self, slot: int, tokens, start: int) -> int:
+        """One chunked-prefill pass for ``tokens`` at positions
+        start..start+S-1; returns the greedy token of the chunk's last
+        position (the request's first token when this is the final chunk)."""
+        self._require_paged()
+        chunk = np.asarray(tokens, np.int32)[None, :]
+        pos = np.asarray([start], np.int32)
+        bt = self.block_tables[slot:slot + 1]
+        logits = self._paged_call(chunk, pos, bt, phase="prefill")
+        return int(np.argmax(logits[0]))
+
+    def finish_prefill(self, slot: int) -> None:
+        """Mark a fully-prefilled slot decode-eligible."""
+        self._require_paged()
+        self._decodable.add(slot)
+
+    def _paged_decode(self, tokens, pos) -> np.ndarray:
+        """Paged decode step: extend decode-eligible slots' pages to cover
+        the incoming position, then ONE jitted paged pass (S=1) over the
+        full slot batch.  Ineligible slots' block-table rows are pointed at
+        the scratch page so their garbage lanes stay harmless."""
+        pos = np.asarray(pos)
+        for slot in sorted(self._decodable):
+            self.pool.extend(slot, int(pos[slot]) + 1)
+            self._set_table(slot)
+        bt = self.block_tables.copy()
+        for slot in range(self.num_slots):
+            if slot not in self._decodable:
+                bt[slot] = 0                # scratch page (kvpool.py)
+        logits = self._paged_call(
+            np.asarray(tokens, np.int32)[:, None],
+            np.asarray(pos, np.int32), bt, phase="decode")
+        return np.asarray(np.argmax(logits, -1), np.int32)
+
+    def _paged_call(self, tokens, pos, bt, phase: str) -> np.ndarray:
+        """(logits [B, v]) of one paged pass; updates the cache in place."""
+        raise NotImplementedError
+
+    def chunk_comm_ops(self, chunk_len: int, batch: int = 1) -> List[CommOp]:
+        """Predicted collectives for ONE prefill chunk of ``chunk_len``
+        tokens — the per-chunk rows of ``commodel.chunked_prefill_ops`` at
+        the backend's activation width.  Counts are chunk-length- and
+        batch-invariant; only message bytes scale."""
+        return chunked_prefill_ops(
+            self.cfg, chunk_len, chunk_len, self.t, self.p, batch=batch,
+            b=jnp.dtype(self.cfg.dtype).itemsize, gather_mode="allgather")
 
     def decode_comm_ops(self, batch: int = 1) -> List[CommOp]:
         """Predicted collectives for ONE decode step over ``batch`` rows:
@@ -108,17 +237,34 @@ class _BackendBase:
         for s in slots:
             if not 0 <= s < self.num_slots:
                 raise IndexError(f"slot {s} out of range")
+        if self.paged:
+            for s in slots:
+                self.pool.free(s)           # no-op for never-admitted slots
+                self.block_tables[s] = 0
+                self._decodable.discard(s)
+                self._worst.pop(s, None)
 
     # -- shared admission loop (template method) ---------------------------
     def prefill_into_slots(self, prompts, slots) -> np.ndarray:
         """Admit requests: one batch-1 prefill per prompt at its true
         length (row-wise identical to serving it solo), scattered into the
-        slot's batch row.  Returns the first greedy token per request."""
+        slot's batch row.  Returns the first greedy token per request.
+
+        In paged mode the prompt prefills straight into the slot's pages as
+        one maximal chunk — the non-chunked protocol entry point over the
+        chunked machinery (the scheduler's chunked path drives
+        ``begin_prefill``/``prefill_chunk``/``finish_prefill`` itself)."""
         first = np.zeros(len(slots), np.int32)
         for i, (prompt, slot) in enumerate(zip(prompts, slots)):
-            logits, small = self._prefill_one(self._as_prompt(prompt))
-            self._scatter(small, slot)
-            first[i] = self._first_token(logits)[0]
+            prompt = np.asarray(prompt, np.int32).reshape(-1)
+            if self.paged:
+                self.begin_prefill(slot, len(prompt))
+                first[i] = self.prefill_chunk(slot, prompt, 0)
+                self.finish_prefill(slot)
+            else:
+                logits, small = self._prefill_one(self._as_prompt(prompt))
+                self._scatter(small, slot)
+                first[i] = self._first_token(logits)[0]
         return first
 
     def _prefill_one(self, prompt):
@@ -143,21 +289,37 @@ class ModelBackend(_BackendBase):
     per-sequence positions through ``Model.decode_step``."""
 
     def __init__(self, cfg: ModelConfig, params, num_slots: int,
-                 max_len: int = 256):
-        super().__init__(cfg, num_slots, max_len, t=1, p=1)
+                 max_len: int = 256, paged: bool = False,
+                 page_size: int = 16, num_pages: Optional[int] = None):
+        super().__init__(cfg, num_slots, max_len, t=1, p=1, paged=paged,
+                         page_size=page_size, num_pages=num_pages)
         self.model = get_model(cfg)
         self.params = params
-        self.cache = self.model.init_cache(num_slots, max_len)
-        self._prefill = jax.jit(
-            functools.partial(self.model.prefill, max_len=max_len))
-        self._step = jax.jit(self.model.decode_step, donate_argnums=(1,))
-        self._write = jax.jit(_write_slot, donate_argnums=(0,))
+        if self.paged:
+            self.cache = self.model.init_paged_cache(self.pool.num_pages,
+                                                     self.page_size)
+            self._paged_fn = jax.jit(self.model.paged_step,
+                                     donate_argnums=(1,))
+        else:
+            self.cache = self.model.init_cache(num_slots, max_len)
+            self._prefill = jax.jit(
+                functools.partial(self.model.prefill, max_len=max_len))
+            self._step = jax.jit(self.model.decode_step, donate_argnums=(1,))
+            self._write = jax.jit(_write_slot, donate_argnums=(0,))
 
     def _prefill_one(self, prompt):
         logits, small, _ = self._prefill(self.params, prompt)
         return logits, small
 
+    def _paged_call(self, tokens, pos, bt, phase: str) -> np.ndarray:
+        logits, self.cache = self._paged_fn(
+            self.params, self.cache, jnp.asarray(tokens, jnp.int32),
+            jnp.asarray(pos, jnp.int32), jnp.asarray(bt, jnp.int32))
+        return np.asarray(logits)
+
     def decode_step(self, tokens, pos) -> np.ndarray:
+        if self.paged:
+            return self._paged_decode(tokens, pos)
         logits, self.cache = self._step(
             self.params, self.cache, jnp.asarray(tokens, jnp.int32),
             jnp.asarray(pos, jnp.int32))
@@ -170,31 +332,52 @@ class TPBackend(_BackendBase):
     1 logits all-gather per decode step, regardless of slot count."""
 
     def __init__(self, cfg: ModelConfig, params, num_slots: int,
-                 max_len: int = 256, t: int = 2, unroll: bool = False):
-        super().__init__(cfg, num_slots, max_len, t=t, p=1)
+                 max_len: int = 256, t: int = 2, unroll: bool = False,
+                 paged: bool = False, page_size: int = 16,
+                 num_pages: Optional[int] = None):
+        super().__init__(cfg, num_slots, max_len, t=t, p=1, paged=paged,
+                         page_size=page_size, num_pages=num_pages)
         if cfg.family != "dense":
             raise ValueError("explicit TP engine covers the dense family")
         self.params = params
         self.mesh = px.make_tp_mesh(t)
-        self.cache_w = get_model(cfg).cache_width(max_len)
-        self._prefill = px.tp_prefill(cfg, self.mesh, cache_w=self.cache_w,
-                                      unroll=unroll)
-        self._step = px.tp_decode_step(cfg, self.mesh, unroll=unroll,
-                                       vector_pos=True)
         shard = lambda sp: NamedSharding(self.mesh, sp)
-        self.cache = {
-            key: jax.device_put(
-                jnp.zeros((cfg.num_layers, num_slots, self.cache_w,
-                           cfg.num_kv_heads, cfg.head_dim),
-                          jnp.dtype(cfg.dtype)),
-                shard(P(None, None, None, "tp", None)))
-            for key in ("k", "v")}
-        self._write = jax.jit(_write_slot, donate_argnums=(0,))
+        kv_spec = shard(P(None, None, None, "tp", None))
+        if self.paged:
+            self._paged_fn = px.tp_paged_step(cfg, self.mesh, unroll=unroll)
+            self.cache = {
+                key: jax.device_put(
+                    jnp.zeros((cfg.num_layers, self.pool.num_pages,
+                               self.page_size, cfg.num_kv_heads,
+                               cfg.head_dim), jnp.dtype(cfg.dtype)), kv_spec)
+                for key in ("k", "v")}
+        else:
+            self.cache_w = get_model(cfg).cache_width(max_len)
+            self._prefill = px.tp_prefill(cfg, self.mesh,
+                                          cache_w=self.cache_w,
+                                          unroll=unroll)
+            self._step = px.tp_decode_step(cfg, self.mesh, unroll=unroll,
+                                           vector_pos=True)
+            self.cache = {
+                key: jax.device_put(
+                    jnp.zeros((cfg.num_layers, num_slots, self.cache_w,
+                               cfg.num_kv_heads, cfg.head_dim),
+                              jnp.dtype(cfg.dtype)), kv_spec)
+                for key in ("k", "v")}
+            self._write = jax.jit(_write_slot, donate_argnums=(0,))
 
     def _prefill_one(self, prompt):
         return self._prefill(self.params, prompt)
 
+    def _paged_call(self, tokens, pos, bt, phase: str) -> np.ndarray:
+        logits, self.cache = self._paged_fn(
+            self.params, self.cache, jnp.asarray(tokens, jnp.int32),
+            jnp.asarray(pos, jnp.int32), jnp.asarray(bt, jnp.int32))
+        return np.asarray(logits)
+
     def decode_step(self, tokens, pos) -> np.ndarray:
+        if self.paged:
+            return self._paged_decode(tokens, pos)
         logits, self.cache = self._step(
             self.params, self.cache, jnp.asarray(tokens, jnp.int32),
             jnp.asarray(pos, jnp.int32))
@@ -202,10 +385,23 @@ class TPBackend(_BackendBase):
 
     def decode_step_hlo(self) -> str:
         """Compiled HLO of the slot decode step (collective-count checks)."""
+        if self.paged:
+            return self.paged_step_hlo(q_len=1, batch=self.num_slots)
         tok = jax.ShapeDtypeStruct((self.num_slots,), jnp.int32)
         pos = jax.ShapeDtypeStruct((self.num_slots,), jnp.int32)
         return self._step.lower(self.params, self.cache, tok,
                                 pos).compile().as_text()
+
+    def paged_step_hlo(self, q_len: int, batch: int = 1) -> str:
+        """Compiled HLO of one paged pass at chunk length ``q_len`` — the
+        per-chunk (and, at q_len=1, per-decode-step) collective-count
+        check against ``commodel.chunked_prefill_ops``."""
+        self._require_paged()
+        tok = jax.ShapeDtypeStruct((batch, q_len), jnp.int32)
+        pos = jax.ShapeDtypeStruct((batch,), jnp.int32)
+        bt = jax.ShapeDtypeStruct((batch, self.pages_per_slot), jnp.int32)
+        return self._paged_fn.lower(self.params, self.cache, tok, pos,
+                                    bt).compile().as_text()
 
 
 class PPBackend(_BackendBase):
@@ -215,22 +411,34 @@ class PPBackend(_BackendBase):
 
     def __init__(self, cfg: ModelConfig, params, num_slots: int,
                  max_len: int = 256, t: int = 1, p: int = 2,
-                 unroll: bool = False, devices=None):
-        super().__init__(cfg, num_slots, max_len, t=t, p=p)
+                 unroll: bool = False, devices=None, paged: bool = False,
+                 page_size: int = 16, num_pages: Optional[int] = None):
+        super().__init__(cfg, num_slots, max_len, t=t, p=p, paged=paged,
+                         page_size=page_size, num_pages=num_pages)
         if cfg.family != "dense":
             raise ValueError("PipelineEngine covers the dense family")
         self.engine = px.PipelineEngine(cfg, t=t, p=p, unroll=unroll,
                                         devices=devices)
         self.staged = self.engine.prepare(params)
-        self.cache_w = get_model(cfg).cache_width(max_len)
         self.caches = []
         for s in range(p):
             lo, hi = px.stage_layer_range(cfg, p, s)
-            leaves = {
-                key: jnp.zeros((hi - lo, num_slots, self.cache_w,
-                                cfg.num_kv_heads, cfg.head_dim),
-                               jnp.dtype(cfg.dtype))
-                for key in ("k", "v")}
+            if self.paged:
+                # per-stage page pools share ONE block-table space: logical
+                # page j of a slot lives at physical page table[j] in every
+                # stage's [L_s, P, ps, kv, D] pool
+                leaves = {
+                    key: jnp.zeros((hi - lo, self.pool.num_pages,
+                                    self.page_size, cfg.num_kv_heads,
+                                    cfg.head_dim), jnp.dtype(cfg.dtype))
+                    for key in ("k", "v")}
+            else:
+                self.cache_w = get_model(cfg).cache_width(max_len)
+                leaves = {
+                    key: jnp.zeros((hi - lo, num_slots, self.cache_w,
+                                    cfg.num_kv_heads, cfg.head_dim),
+                                   jnp.dtype(cfg.dtype))
+                    for key in ("k", "v")}
             if t > 1:
                 leaves = {
                     key: jax.device_put(
@@ -251,7 +459,14 @@ class PPBackend(_BackendBase):
             self._writes[s](self.caches[s], small[s], jnp.int32(slot))
             for s in range(self.p)]
 
+    def _paged_call(self, tokens, pos, bt, phase: str) -> np.ndarray:
+        logits, self.caches = self.engine.paged_pass(
+            self.staged, self.caches, tokens, pos, bt, phase=phase)
+        return np.asarray(logits)
+
     def decode_step(self, tokens, pos) -> np.ndarray:
+        if self.paged:
+            return self._paged_decode(tokens, pos)
         logits, self.caches = self.engine.decode_once(
             self.staged, self.caches, jnp.asarray(tokens, jnp.int32),
             jnp.asarray(np.asarray(pos), jnp.int32))
@@ -262,6 +477,18 @@ class PPBackend(_BackendBase):
         self._drained = len(self.engine.transfers)
         return {"count": sum(r.count for r in recs),
                 "bytes": sum(r.bytes for r in recs)}
+
+    def stage_paged_hlo(self, stage: int, q_len: int = 1,
+                        batch: int = 1) -> str:
+        """Compiled HLO of one stage's paged pass at chunk length ``q_len``
+        — asserted against ``commodel.hybrid_stage_collectives`` (counts are
+        chunk-length-invariant, DESIGN.md §8)."""
+        self._require_paged()
+        tok = jnp.zeros((batch, q_len), jnp.int32)
+        pos = jnp.zeros((batch,), jnp.int32)
+        bt = jnp.zeros((batch, self.pages_per_slot), jnp.int32)
+        return self.engine.stage_paged_hlo(self.staged, self.caches, tok,
+                                           pos, bt, stage)
 
     def stage_decode_hlo(self, stage: int) -> str:
         """Compiled HLO of one stage's slot decode step (vector pos)."""
@@ -281,21 +508,27 @@ class PPBackend(_BackendBase):
 
 def make_backend(kind: str, cfg: ModelConfig, params, num_slots: int,
                  max_len: int = 256, t: int = 1, p: int = 1,
-                 unroll: bool = False) -> DecodeBackend:
+                 unroll: bool = False, paged: bool = False,
+                 page_size: int = 16,
+                 num_pages: Optional[int] = None) -> DecodeBackend:
     """Backend factory keyed by engine kind: "gspmd" | "tp" | "pp".
 
     Degenerate layouts are rejected, not coerced — a silently bumped t/p
     would attribute measured SLOs to a layout the caller never asked for.
+    ``paged=True`` swaps the contiguous slot cache for the KVPool-managed
+    page pools and enables chunked prefill (DESIGN.md §8).
     """
+    kw = dict(paged=paged, page_size=page_size, num_pages=num_pages)
     if kind == "gspmd":
-        return ModelBackend(cfg, params, num_slots, max_len)
+        return ModelBackend(cfg, params, num_slots, max_len, **kw)
     if kind == "tp":
         if t < 2:
             raise ValueError(f"tp backend needs t >= 2, got t={t}")
-        return TPBackend(cfg, params, num_slots, max_len, t=t, unroll=unroll)
+        return TPBackend(cfg, params, num_slots, max_len, t=t, unroll=unroll,
+                         **kw)
     if kind == "pp":
         if p < 2:
             raise ValueError(f"pp backend needs p >= 2, got p={p}")
         return PPBackend(cfg, params, num_slots, max_len, t=t, p=p,
-                         unroll=unroll)
+                         unroll=unroll, **kw)
     raise ValueError(f"unknown backend kind: {kind!r}")

@@ -7,7 +7,6 @@ new token for every sequence in the batch against a seq_len-deep KV cache.
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,187 @@
+"""Paged KV-cache block allocator (DESIGN.md §8).
+
+The slot backends used to pin every request to a contiguous ``max_len`` KV
+row — long-context traces either OOM the slot pool or waste most of it.  The
+pool instead carves the cache into fixed-size *pages* of ``page_size`` token
+positions each and hands requests pages on demand: a request's KV lives at
+the physical pages named by its *block table*, in logical order, and logical
+position ``q`` maps to physical row ``table[q // page_size] * page_size +
+q % page_size``.
+
+This module is the host-side bookkeeping only — pure Python over integers,
+no jax.  The device side (``models/layers.paged_gather`` and the engines'
+paged steps) consumes the block tables as [B, pages_per_seq] int32 arrays.
+
+Invariants (property-tested in tests/test_kvpool.py):
+
+  * a free page is never in any live block table, and a live page is owned
+    by exactly one owner unless it was explicitly shared (``fork``) — pages
+    are ref-counted, so shared prefixes free correctly;
+  * freed pages return to the free list and are reused (LIFO — the hottest
+    page comes back first);
+  * ``stats()`` always accounts for every page:
+    ``free_pages + allocated_pages == num_pages`` (page 0 is a reserved
+    scratch page, counted as allocated forever).
+
+Page 0 is **reserved**: it is never handed out, and backends point the block
+tables of inactive slots at it so a fused decode step's garbage writes for
+free slots land in scratch instead of corrupting a live page (the paged
+counterpart of "free slots compute garbage the scheduler ignores",
+DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+SCRATCH_PAGE = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolStats:
+    """Occupancy + fragmentation snapshot; fields sum to the pool size."""
+
+    num_pages: int
+    page_size: int
+    free_pages: int
+    allocated_pages: int          # includes the reserved scratch page
+    used_tokens: int              # token positions actually occupied
+    internal_frag_tokens: int     # allocated-but-unused tail positions
+
+    @property
+    def capacity_tokens(self) -> int:
+        return self.num_pages * self.page_size
+
+    @property
+    def utilization(self) -> float:
+        """Occupied fraction of the *allocated* (non-scratch) capacity."""
+        alloc = (self.allocated_pages - 1) * self.page_size
+        return self.used_tokens / alloc if alloc else 0.0
+
+
+class KVPool:
+    """Fixed-size-page KV allocator with per-owner block tables.
+
+    ``allocate(owner, num_tokens)`` claims pages for a new sequence,
+    ``extend(owner, new_len)`` grows it (decode crossing a page boundary),
+    ``free(owner)`` releases it, ``fork(owner, new_owner)`` shares the
+    current pages copy-on-nothing (both owners read the same prefix; the
+    pages free only when the last owner releases them).
+    """
+
+    def __init__(self, num_pages: int, page_size: int):
+        if num_pages < 2:
+            raise ValueError("need >= 2 pages (page 0 is reserved scratch)")
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        self.num_pages = int(num_pages)
+        self.page_size = int(page_size)
+        # LIFO free list, excluding the reserved scratch page 0
+        self._free: List[int] = list(range(num_pages - 1, 0, -1))
+        self._refcount: Dict[int, int] = {}      # physical page -> owners
+        self._tables: Dict[int, List[int]] = {}  # owner -> logical->physical
+        self._lengths: Dict[int, int] = {}       # owner -> tokens occupied
+
+    # ------------------------------------------------------------- helpers
+    def _pages_for(self, num_tokens: int) -> int:
+        return -(-num_tokens // self.page_size)      # ceil div
+
+    def _claim(self, n: int) -> List[int]:
+        if n > len(self._free):
+            raise MemoryError(
+                f"pool exhausted: need {n} pages, {len(self._free)} free")
+        pages = [self._free.pop() for _ in range(n)]
+        for pg in pages:
+            assert pg not in self._refcount, f"page {pg} double-assigned"
+            self._refcount[pg] = 1
+        return pages
+
+    # ------------------------------------------------------------ interface
+    def allocate(self, owner: int, num_tokens: int) -> List[int]:
+        """Claim pages covering ``num_tokens`` positions for a new owner;
+        returns the block table (logical order)."""
+        if owner in self._tables:
+            raise KeyError(f"owner {owner} already holds an allocation")
+        if num_tokens < 1:
+            raise ValueError(f"num_tokens must be >= 1, got {num_tokens}")
+        self._tables[owner] = self._claim(self._pages_for(num_tokens))
+        self._lengths[owner] = num_tokens
+        return list(self._tables[owner])
+
+    def extend(self, owner: int, new_len: int) -> List[int]:
+        """Grow an allocation to cover ``new_len`` positions (no-op when the
+        current last page still has room); returns the updated table.
+
+        Growing past a *shared* partial tail page is refused: the new
+        positions would be written into rows the other owner also reads
+        (there is no copy-on-write here — the pool is host bookkeeping and
+        cannot copy device pages).  A page-aligned shared prefix grows
+        fine: new positions land only on freshly-claimed exclusive pages.
+        """
+        table = self._tables[owner]
+        cur = self._lengths[owner]
+        if new_len < cur:
+            raise ValueError(
+                f"extend shrinks owner {owner}: {new_len} < {cur}")
+        if new_len > cur and cur % self.page_size != 0 and \
+                self._refcount[table[-1]] > 1:
+            raise ValueError(
+                f"owner {owner} grows into shared tail page {table[-1]} "
+                "(forked, not page-aligned) — copy it before extending")
+        need = self._pages_for(new_len) - len(table)
+        if need > 0:
+            table.extend(self._claim(need))
+        self._lengths[owner] = new_len
+        return list(table)
+
+    def fork(self, owner: int, new_owner: int) -> List[int]:
+        """Share ``owner``'s pages with ``new_owner`` (prefix sharing): both
+        tables name the same physical pages, refcounts bumped."""
+        if new_owner in self._tables:
+            raise KeyError(f"owner {new_owner} already holds an allocation")
+        table = self._tables[owner]
+        for pg in table:
+            self._refcount[pg] += 1
+        self._tables[new_owner] = list(table)
+        self._lengths[new_owner] = self._lengths[owner]
+        return list(table)
+
+    def free(self, owner: int) -> None:
+        """Release an owner; pages whose refcount hits zero rejoin the free
+        list (LIFO).  Freeing an unknown owner is a no-op — the scheduler
+        frees slots it may never have admitted into."""
+        table = self._tables.pop(owner, None)
+        if table is None:
+            return
+        del self._lengths[owner]
+        for pg in reversed(table):
+            self._refcount[pg] -= 1
+            if self._refcount[pg] == 0:
+                del self._refcount[pg]
+                self._free.append(pg)
+
+    # --------------------------------------------------------- introspection
+    def block_table(self, owner: int) -> List[int]:
+        return list(self._tables[owner])
+
+    def owners(self) -> List[int]:
+        return list(self._tables)
+
+    def length(self, owner: int) -> int:
+        return self._lengths[owner]
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def stats(self) -> PoolStats:
+        used = sum(self._lengths.values())
+        # a page shared by k owners is still ONE allocated physical page,
+        # but each owner's tail slack counts toward internal fragmentation
+        slack = sum(len(t) * self.page_size - self._lengths[o]
+                    for o, t in self._tables.items())
+        return PoolStats(
+            num_pages=self.num_pages, page_size=self.page_size,
+            free_pages=len(self._free),
+            allocated_pages=self.num_pages - len(self._free),
+            used_tokens=used, internal_frag_tokens=slack)

@@ -6,7 +6,6 @@ register it here; model code asks for it lazily.
 """
 from __future__ import annotations
 
-from typing import Optional
 
 _MESH = None
 

@@ -76,13 +76,15 @@ class VirtualClock:
 
 @dataclasses.dataclass
 class StepRecord:
-    """Communication of one scheduler iteration (one fused decode step)."""
+    """Communication of one scheduler iteration: one fused decode step, or
+    (chunked-prefill mode, DESIGN.md §8) one prefill chunk."""
 
     step: int
     n_active: int
-    collective_counts: Dict[str, int]     # predicted, per decode step
-    predicted_wire_bytes: float           # at batch=num_slots
+    collective_counts: Dict[str, int]     # predicted, per decode step/chunk
+    predicted_wire_bytes: float           # at batch=num_slots (decode) / 1
     measured_transfers: Dict[str, int]    # PP boundary hops since last step
+    phase: str = "decode"                 # "decode" | "prefill"
 
 
 def step_collective_counts(backend: DecodeBackend,
@@ -165,6 +167,15 @@ class _Active:
     metrics: RequestMetrics
 
 
+@dataclasses.dataclass
+class _Prefilling:
+    """A request whose prompt is mid-way through chunked prefill."""
+
+    req: Request
+    metrics: RequestMetrics
+    done: int = 0                 # prompt positions already prefilled
+
+
 class Scheduler:
     """Continuous batching over ``backend.num_slots`` KV-cache slots.
 
@@ -173,15 +184,37 @@ class Scheduler:
     the full slot batch with per-sequence positions, then eviction of
     finished sequences (EOS or length), freeing their slots for the next
     iteration's admissions.
+
+    ``chunk_size`` (paged backends only, DESIGN.md §8) turns prefill into
+    *chunked* prefill: admission only allocates the slot's pages, and each
+    iteration advances ONE prefilling request by one ``chunk_size``-token
+    pass before the decode step — so a long prompt no longer stalls running
+    slots for its whole prefill, only for one chunk.  Iterations with no
+    decoding slot skip the jitted decode step entirely (nothing useful would
+    run in it) and just advance prefill / wait for the next arrival.
     """
 
-    def __init__(self, backend: DecodeBackend, clock=None):
+    def __init__(self, backend: DecodeBackend, clock=None,
+                 chunk_size: int = None):
         self.backend = backend
         self.clock = clock if clock is not None else WallClock()
         self.num_slots = backend.num_slots
         self.queue: deque = deque()
         self.free: List[int] = list(range(self.num_slots))
         self.active: Dict[int, _Active] = {}
+        self.prefilling: Dict[int, _Prefilling] = {}   # slot -> state (FIFO)
+        self.chunk_size = chunk_size
+        if chunk_size is not None:
+            if chunk_size < 1:
+                raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
+            if not getattr(backend, "paged", False):
+                raise ValueError(
+                    "chunked prefill writes straight into KV pages; "
+                    "construct the backend with paged=True")
+            # per-chunk counts are chunk-length-invariant (commodel.
+            # chunked_prefill_ops) — compute once at the nominal size
+            self._chunk_counts = self._count(
+                backend.chunk_comm_ops(chunk_size))
         self.tokens = np.zeros(self.num_slots, np.int32)
         self.pos = np.zeros(self.num_slots, np.int64)
         self.finished: List[RequestMetrics] = []
@@ -195,9 +228,17 @@ class Scheduler:
             o.wire_bytes
             for o in backend.decode_comm_ops(batch=self.num_slots))
 
+    @staticmethod
+    def _count(ops) -> Dict[str, int]:
+        counts: Dict[str, int] = {}
+        for o in ops:
+            counts[o.collective] = counts.get(o.collective, 0) + o.count
+        return counts
+
     # ------------------------------------------------------------- intake
     def submit(self, requests) -> None:
         reqs = [requests] if isinstance(requests, Request) else list(requests)
+        paged = getattr(self.backend, "paged", False)
         for r in reqs:
             # the last generated token is never fed back, so the highest
             # cache position written is prompt_len + max_new_tokens - 2
@@ -207,6 +248,15 @@ class Scheduler:
                 raise ValueError(
                     f"request {r.rid} needs {need} cache positions "
                     f"> max_len {self.backend.max_len}")
+            if paged:
+                # a request the EMPTY pool couldn't hold would never pass
+                # the admission gate — reject it up front, don't deadlock
+                need_pages = -(-need // self.backend.page_size)
+                usable = self.backend.pool.num_pages - 1    # minus scratch
+                if need_pages > usable:
+                    raise ValueError(
+                        f"request {r.rid} needs {need_pages} pages "
+                        f"> pool capacity {usable}")
         self.queue.extend(reqs)
         # arrival order == admission order
         self.queue = deque(sorted(self.queue, key=lambda r: r.arrival))
@@ -223,15 +273,36 @@ class Scheduler:
         self.pos[slot] = 0
 
     def _admit_ready(self) -> None:
+        paged = getattr(self.backend, "paged", False)
         while self.free and self.queue and \
                 self.queue[0].arrival <= self.clock.now():
-            req = self.queue.popleft()
+            req = self.queue[0]
+            if paged and not self.backend.can_admit(req.prompt_len,
+                                                    req.max_new_tokens):
+                # a free slot but not enough pages for this request's worst
+                # case on top of live requests' committed growth: keep it
+                # queued (head-of-line — admission order stays arrival
+                # order) until evictions free pages
+                break
+            self.queue.popleft()
             slot = self.free.pop(0)
             m = RequestMetrics(rid=req.rid, prompt_len=req.prompt_len,
                                arrival=req.arrival,
                                admitted=self.clock.now())
-            first = int(self.backend.prefill_into_slots([req.prompt],
-                                                        [slot])[0])
+            if paged:
+                # admission claims the slot's pages and commits the decode
+                # budget; chunked mode then advances one chunk per
+                # iteration, non-chunked prefills as one maximal chunk
+                self.backend.begin_prefill(slot, req.prompt_len,
+                                           req.max_new_tokens)
+                if self.chunk_size is not None:
+                    self.prefilling[slot] = _Prefilling(req, m)
+                    continue
+                first = int(self.backend.prefill_chunk(slot, req.prompt, 0))
+                self.backend.finish_prefill(slot)
+            else:
+                first = int(self.backend.prefill_into_slots([req.prompt],
+                                                            [slot])[0])
             m.first_token = self.clock.now()
             m.tokens.append(first)
             self.active[slot] = _Active(req, m)
@@ -242,17 +313,58 @@ class Scheduler:
             elif req.max_new_tokens == 1:
                 self._finish(slot, "length", self.clock.now())
 
+    def _advance_prefill(self) -> None:
+        """Run ONE prefill chunk for the oldest mid-prefill request; on the
+        final chunk the request's first token is stamped (TTFT) and the slot
+        joins the decoding set."""
+        slot = next(iter(self.prefilling))
+        st = self.prefilling[slot]
+        start = st.done
+        end = min(start + self.chunk_size, st.req.prompt_len)
+        tok = self.backend.prefill_chunk(slot, st.req.prompt[start:end],
+                                         start)
+        st.done = end
+        self.step_log.append(StepRecord(
+            step=self._step_i, n_active=len(self.active),
+            collective_counts=dict(self._chunk_counts),
+            predicted_wire_bytes=sum(
+                o.wire_bytes
+                for o in self.backend.chunk_comm_ops(end - start)),
+            measured_transfers=self.backend.drain_transfers(),
+            phase="prefill"))
+        self._step_i += 1
+        if end < st.req.prompt_len:
+            return
+        del self.prefilling[slot]
+        self.backend.finish_prefill(slot)
+        now = self.clock.now()
+        st.metrics.first_token = now
+        st.metrics.tokens.append(tok)
+        self.active[slot] = _Active(st.req, st.metrics)
+        self.tokens[slot] = tok
+        self.pos[slot] = st.req.prompt_len
+        if st.req.eos_id is not None and tok == st.req.eos_id:
+            self._finish(slot, "eos", now)
+        elif st.req.max_new_tokens == 1:
+            self._finish(slot, "length", now)
+
     # ------------------------------------------------------------- stepping
     def step(self) -> bool:
         """One scheduler iteration; returns False when fully drained."""
-        if not self.queue and not self.active:
+        if not self.queue and not self.active and not self.prefilling:
             return False
         self._admit_ready()
         self.backend.drain_transfers()      # prefill hops: not decode traffic
+        if self.prefilling:
+            self._advance_prefill()
         if not self.active:
-            if self.queue:                  # idle until the next arrival
+            # nothing is decoding: skip the jitted decode step entirely — a
+            # fixed-capacity step over all-garbage lanes would burn a full
+            # model pass for nothing.  Only advance the clock (to the next
+            # arrival) when no prefill is in flight either.
+            if not self.prefilling and self.queue:
                 self.clock.wait_until(self.queue[0].arrival)
-            return bool(self.queue or self.active)
+            return bool(self.queue or self.active or self.prefilling)
         nxt = self.backend.decode_step(self.tokens, self.pos)
         now = self.clock.now()
         self.step_log.append(StepRecord(
@@ -271,7 +383,7 @@ class Scheduler:
                 self._finish(slot, "eos", now)
             elif st.metrics.num_generated >= st.req.max_new_tokens:
                 self._finish(slot, "length", now)
-        return bool(self.queue or self.active)
+        return bool(self.queue or self.active or self.prefilling)
 
     def run(self, requests=None) -> ServingReport:
         """Drive until every submitted request has finished."""

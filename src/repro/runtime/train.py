@@ -11,13 +11,11 @@ computes CE on the text suffix only (prefix patches carry no targets).
 """
 from __future__ import annotations
 
-import functools
-from typing import Callable, Dict
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
-from repro.config.base import ModelConfig
 from repro.models.transformer import Model
 from repro.optim.adamw import AdamW
 

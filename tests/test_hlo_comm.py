@@ -1,5 +1,5 @@
 """Unit tests for the HLO collective extractor (canned HLO snippets)."""
-from repro.core.hlo_comm import (HLOCollective, collective_wire_bytes,
+from repro.core.hlo_comm import (collective_wire_bytes,
                                  parse_hlo_collectives, summarize)
 from repro.core.hlo_cost import analyze_flops_bytes
 

@@ -1,0 +1,181 @@
+"""KVPool block-allocator invariants (ISSUE 4 satellite).
+
+Deterministic unit tests always run; hypothesis drives randomized
+alloc/extend/free/fork schedules against the same invariants when the
+optional dep is present:
+
+  * a page is never double-assigned (live tables are disjoint unless
+    explicitly shared via ``fork``);
+  * freed pages rejoin the free list and are reused;
+  * ``stats()`` accounts for every page: free + allocated == num_pages.
+"""
+import pytest
+
+from repro.runtime.kvpool import KVPool, SCRATCH_PAGE
+
+
+def _assert_invariants(pool: KVPool):
+    stats = pool.stats()
+    assert stats.free_pages + stats.allocated_pages == stats.num_pages
+    # every live (owner, logical-page) mapping points at a non-scratch page,
+    # and unshared pages appear in exactly one table
+    seen = {}
+    for owner in pool.owners():
+        for pg in pool.block_table(owner):
+            assert pg != SCRATCH_PAGE, f"owner {owner} maps scratch"
+            assert 0 < pg < pool.num_pages
+            seen.setdefault(pg, []).append(owner)
+    for pg, owners in seen.items():
+        assert pg not in pool._free, f"page {pg} live AND free"
+        assert pool._refcount[pg] == len(owners)
+    # per-owner capacity covers its length with < one page of slack
+    for owner in pool.owners():
+        cap = len(pool.block_table(owner)) * pool.page_size
+        assert pool.length(owner) <= cap < pool.length(owner) + pool.page_size
+
+
+# ---------------------------------------------------------------------------
+# deterministic
+# ---------------------------------------------------------------------------
+
+
+def test_allocate_extend_free_roundtrip():
+    pool = KVPool(num_pages=9, page_size=4)
+    t0 = pool.allocate(0, 6)                 # 2 pages
+    assert len(t0) == 2 and SCRATCH_PAGE not in t0
+    t1 = pool.allocate(1, 4)                 # 1 page
+    assert not set(t0) & set(t1), "double-assigned page"
+    _assert_invariants(pool)
+    # extend within the last page: no new page
+    assert pool.extend(0, 8) == t0
+    # crossing the boundary claims one more
+    t0b = pool.extend(0, 9)
+    assert len(t0b) == 3 and t0b[:2] == t0
+    _assert_invariants(pool)
+    pool.free(0)
+    pool.free(1)
+    assert pool.free_pages == 8              # all but scratch
+    _assert_invariants(pool)
+
+
+def test_freed_pages_are_reused():
+    pool = KVPool(num_pages=4, page_size=2)   # 3 usable pages
+    a = pool.allocate(0, 6)                  # takes all 3
+    with pytest.raises(MemoryError):
+        pool.allocate(1, 2)
+    pool.free(0)
+    b = pool.allocate(1, 6)
+    assert sorted(a) == sorted(b), "freed pages not reused"
+    # LIFO: the most recently freed page comes back first
+    pool.free(1)
+    last_freed = b[0]
+    assert pool.allocate(2, 2) == [last_freed]
+
+
+def test_double_allocate_and_shrink_rejected():
+    pool = KVPool(num_pages=4, page_size=2)
+    pool.allocate(0, 2)
+    with pytest.raises(KeyError):
+        pool.allocate(0, 2)
+    with pytest.raises(ValueError):
+        pool.extend(0, 1)
+    with pytest.raises(ValueError):
+        pool.allocate(1, 0)
+    pool.free(7)                             # unknown owner: no-op
+    _assert_invariants(pool)
+
+
+def test_fork_shares_pages_refcounted():
+    pool = KVPool(num_pages=6, page_size=4)
+    t = pool.allocate(0, 8)
+    assert pool.fork(0, 1) == t
+    _assert_invariants(pool)
+    pool.free(0)                             # pages stay live for owner 1
+    assert pool.free_pages == 3
+    assert pool.block_table(1) == t
+    pool.free(1)
+    assert pool.free_pages == 5
+    _assert_invariants(pool)
+
+
+def test_extend_into_shared_tail_page_refused():
+    """Growing a forked sequence whose tail page is shared AND partial
+    would write rows the other owner reads — refused (no copy-on-write);
+    a page-aligned shared prefix grows onto fresh exclusive pages."""
+    pool = KVPool(num_pages=8, page_size=4)
+    pool.allocate(0, 6)                      # tail page half-full
+    pool.fork(0, 1)
+    with pytest.raises(ValueError, match="shared tail"):
+        pool.extend(1, 7)
+    pool.extend(1, 6)                        # same length: no new rows, ok
+    pool.free(0)                             # sole owner again
+    assert len(pool.extend(1, 9)) == 3       # now growth is fine
+    _assert_invariants(pool)
+    # page-aligned fork: growth claims fresh pages, never touches shared
+    pool2 = KVPool(num_pages=8, page_size=4)
+    pool2.allocate(0, 8)
+    pool2.fork(0, 1)
+    t1 = pool2.extend(1, 9)
+    assert t1[:2] == pool2.block_table(0) and len(t1) == 3
+    _assert_invariants(pool2)
+
+
+def test_stats_fragmentation_accounting():
+    pool = KVPool(num_pages=8, page_size=4)
+    pool.allocate(0, 5)                      # 2 pages, 3 slack
+    pool.allocate(1, 4)                      # 1 page, 0 slack
+    s = pool.stats()
+    assert s.allocated_pages == 4            # 3 owned + scratch
+    assert s.free_pages == 4
+    assert s.used_tokens == 9
+    assert s.internal_frag_tokens == 3
+    assert s.capacity_tokens == 32
+    assert 0 < s.utilization <= 1
+
+
+def test_pool_too_small_rejected():
+    with pytest.raises(ValueError):
+        KVPool(num_pages=1, page_size=4)
+    with pytest.raises(ValueError):
+        KVPool(num_pages=4, page_size=0)
+
+
+# ---------------------------------------------------------------------------
+# randomized schedules (hypothesis, optional dep)
+# ---------------------------------------------------------------------------
+
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+    HAVE_HYP = True
+except ImportError:                           # pragma: no cover
+    HAVE_HYP = False
+
+
+if HAVE_HYP:
+    op = st.tuples(st.sampled_from(["alloc", "extend", "free", "fork"]),
+                   st.integers(0, 5), st.integers(1, 24))
+
+    @given(ops=st.lists(op, min_size=1, max_size=60),
+           num_pages=st.integers(2, 20), page_size=st.integers(1, 8))
+    @settings(max_examples=60, deadline=None)
+    def test_random_schedule_invariants(ops, num_pages, page_size):
+        pool = KVPool(num_pages, page_size)
+        for kind, owner, amount in ops:
+            try:
+                if kind == "alloc":
+                    pool.allocate(owner, amount)
+                elif kind == "extend":
+                    pool.extend(owner, amount)
+                elif kind == "fork":
+                    pool.fork(owner, owner + 10)
+                else:
+                    pool.free(owner)
+            except (KeyError, ValueError, MemoryError):
+                pass                          # rejected ops must not corrupt
+            _assert_invariants(pool)
+        for owner in list(pool.owners()):
+            pool.free(owner)
+        assert pool.free_pages == num_pages - 1
+        assert pool.stats().used_tokens == 0

@@ -91,7 +91,6 @@ def test_skip_matrix_matches_design():
 def test_cache_specs_mqa_falls_back_to_seq_sharding():
     """paligemma kv=1 can't shard heads 16-way: the cache length axis is
     sharded instead (sequence-parallel decode)."""
-    import jax.numpy as jnp
     cfg = get_config("paligemma-3b")
     model = get_model(cfg)
     mesh = jax.make_mesh((1, 1), ("data", "model"))

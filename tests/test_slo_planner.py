@@ -2,7 +2,6 @@
 recommendations (§V-C deployment guidance)."""
 import pytest
 
-from repro.config.base import H100_NODE
 from repro.configs import get_config
 from repro.core.planner import feasible_layouts, plan, recommend
 from repro.core.slo import predict_slo
