@@ -31,8 +31,9 @@ CHECKS = [
      ("decode_collective_counts",)),
     (os.path.join(REPO, "BENCH_serve.json"),
      os.path.join(REPO, "results", "BENCH_serve.dryrun.json"),
-     ("series", "arch", "backend", "tp", "pp", "paged"),
-     ("decode_collective_counts", "prefill_chunk_counts")),
+     ("series", "arch", "backend", "tp", "cp", "pp", "paged"),
+     ("decode_collective_counts", "prefill_chunk_counts",
+      "prefill_collective_counts")),
 ]
 
 

@@ -7,18 +7,23 @@ measurement — measured TTFT / TPOT / E2E sit next to the analytical
 ``core.slo.predict_slo`` prediction for the same layout, so the two sides of
 the paper's methodology (measure + model) face each other at request level.
 
-Two series (4-device host-platform mesh):
+Three series (4-device host-platform mesh):
 
-  short    gspmd / tp2 / pp2, contiguous slots, prompts 8–48 at three
-           arrival rates — the original throughput-vs-latency sweep
-  longctx  prompts spanning 16–512 (the regime where a contiguous
-           ``max_len`` slot pool wastes most of its memory): contiguous
-           vs ``paged=True`` + chunked prefill on the same trace — the
-           paged-vs-contiguous throughput series (DESIGN.md §8)
+  short       gspmd / tp2 / pp2, contiguous slots, prompts 8–48 at three
+              arrival rates — the original throughput-vs-latency sweep
+  longctx     prompts spanning 16–512 (the regime where a contiguous
+              ``max_len`` slot pool wastes most of its memory): contiguous
+              vs ``paged=True`` + chunked prefill on the same trace — the
+              paged-vs-contiguous throughput series (DESIGN.md §8)
+  cp-longctx  the same long-context trace through the explicit
+              single-stage engine at cp ∈ {1, 2, 4} (DESIGN.md §9):
+              per-prompt-length mean TTFT (``ttft_by_prompt_len``) shows
+              where sequence-sharded prefill starts paying for its ring
 
 Every record carries the *predicted* per-step decode collective counts (and,
-for paged runs, the per-chunk prefill counts) from ``commodel`` — these are
-deterministic and machine-independent, so CI's bench-regression gate
+for paged runs, the per-chunk prefill counts; for CP runs, the per-prefill
+counts with the ring rows) from ``commodel`` — these are deterministic and
+machine-independent, so CI's bench-regression gate
 (`benchmarks/check_baselines.py`) can diff them against the checked-in
 ``BENCH_serve.json`` without chasing timing noise.
 
@@ -74,11 +79,14 @@ def _measure(dry_run: bool = False):
     cfg = get_config(ARCH).reduced(num_layers=4)
     params = get_model(cfg).init(jax.random.PRNGKey(0))
 
-    def chunk_counts(backend, chunk):
+    def _count(ops):
         counts = {}
-        for o in backend.chunk_comm_ops(chunk):
+        for o in ops:
             counts[o.collective] = counts.get(o.collective, 0) + o.count
         return counts
+
+    def chunk_counts(backend, chunk):
+        return _count(backend.chunk_comm_ops(chunk))
 
     def run_series(series, kind, name, t, p, paged, chunk, num_slots,
                    max_len, traces, warm_lens, rates, sp_mean, sd_mean):
@@ -103,7 +111,7 @@ def _measure(dry_run: bool = False):
             s = report.summary()
             out.append({
                 "series": series, "arch": cfg.name, "backend": name,
-                "tp": t, "pp": p, "paged": paged,
+                "tp": t, "cp": 1, "pp": p, "paged": paged,
                 "chunk_size": chunk if paged else None,
                 "num_slots": num_slots, "rate_req_s": rate,
                 **s,
@@ -160,6 +168,47 @@ def _measure(dry_run: bool = False):
                               long_max, ltraces, lwarm, [0.0],
                               sum(long_lens) // 2,
                               sum(LONG_DECODE_LENS) // 2)
+
+    # -- CP prefill series: the same long-context closed trace through the
+    #    explicit single-stage engine at cp ∈ {1, 2, 4} — TTFT vs prompt
+    #    length is the payoff curve of sequence-sharded prefill
+    #    (DESIGN.md §9).  TPBackend at t=1, c=1 is the 1-device explicit
+    #    engine: the same code path as the c>1 points, so the TTFT deltas
+    #    are the ring's, not an engine swap's.
+    from repro.runtime.backends import TPBackend
+
+    for cdeg in ([1, 2] if dry_run else [1, 2, 4]):
+        backend = TPBackend(cfg, params, num_slots=num_slots,
+                            max_len=long_max, t=1, c=cdeg)
+        sched = lambda: Scheduler(backend)
+        wrng = np.random.default_rng(1)
+        sched().run([Request(rid=10_000 + j,
+                             prompt=wrng.integers(2, cfg.vocab_size, s),
+                             max_new_tokens=2)
+                     for j, s in enumerate(sorted(lwarm))])
+        report = sched().run(ltraces[0.0])
+        by_len = {}
+        for m in report.metrics:
+            by_len.setdefault(m.prompt_len, []).append(m.ttft)
+        pred = predict_slo(cfg, sum(long_lens) // 2,
+                           sum(LONG_DECODE_LENS) // 2, t=1, c=cdeg)
+        s = report.summary()
+        results.append({
+            "series": "cp-longctx", "arch": cfg.name,
+            "backend": f"cp{cdeg}", "tp": 1, "cp": cdeg, "pp": 1,
+            "paged": False, "chunk_size": None, "num_slots": num_slots,
+            "rate_req_s": 0.0, **s,
+            "ttft_by_prompt_len_s": {
+                str(k): float(np.mean(v))
+                for k, v in sorted(by_len.items())},
+            "decode_collective_counts":
+                step_collective_counts(backend, 1),
+            "prefill_collective_counts":
+                _count(backend.prefill_comm_ops(64)),
+            "predicted_ttft_s": pred.ttft,
+            "predicted_tpot_s": pred.tpot,
+            "predicted_e2e_s": pred.e2e,
+        })
     print("SERVEJSON:" + json.dumps(results))
 
 

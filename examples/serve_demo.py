@@ -10,7 +10,9 @@ the same layout.
     PYTHONPATH=src python examples/serve_demo.py --backend gspmd \
         --requests 8 --slots 4 --rate 4
     PYTHONPATH=src python examples/serve_demo.py --backend pp --pp 2
-        (explicit engines need devices: XLA_FLAGS=--xla_force_host_platform_device_count=4)
+    PYTHONPATH=src python examples/serve_demo.py --backend tp --tp 1 --cp 2
+        (explicit engines need devices: XLA_FLAGS=--xla_force_host_platform_device_count=4;
+         --cp > 1 sequence-shards each prefill over the cp mesh axis, DESIGN.md §9)
 """
 import argparse
 
@@ -32,6 +34,10 @@ def main():
                     choices=["gspmd", "tp", "pp"])
     ap.add_argument("--tp", type=int, default=None,
                     help="TP degree (default: 2 for --backend tp, else 1)")
+    ap.add_argument("--cp", type=int, default=1,
+                    help="context-parallel degree (explicit backends only): "
+                         "prefill is sequence-sharded over cp workers, "
+                         "decode untouched — DESIGN.md §9")
     ap.add_argument("--pp", type=int, default=2)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
@@ -42,17 +48,18 @@ def main():
     ap.add_argument("--max-len", type=int, default=96)
     args = ap.parse_args()
 
-    t = args.tp if args.tp is not None else (2 if args.backend == "tp" else 1)
+    t = args.tp if args.tp is not None else \
+        (2 if args.backend == "tp" and args.cp < 2 else 1)
     cfg = get_config(args.arch).reduced(num_layers=4)
     params = get_model(cfg).init(jax.random.PRNGKey(0))
     backend = make_backend(args.backend, cfg, params, num_slots=args.slots,
-                           max_len=args.max_len, t=t, p=args.pp)
+                           max_len=args.max_len, t=t, c=args.cp, p=args.pp)
     trace = make_poisson_trace(args.requests, args.rate, cfg.vocab_size,
                                prompt_lens=tuple(args.prompt_lens),
                                decode_lens=tuple(args.decode_lens),
                                seed=0, quantum=8)
-    print(f"{cfg.name}: backend={args.backend} t={backend.t} p={backend.p} "
-          f"slots={args.slots} requests={args.requests} "
+    print(f"{cfg.name}: backend={args.backend} t={backend.t} c={backend.c} "
+          f"p={backend.p} slots={args.slots} requests={args.requests} "
           f"rate={args.rate or 'closed'}")
 
     # warm the compile caches (one 2-token request per distinct bucketed
@@ -81,7 +88,7 @@ def main():
 
     sp = sum(args.prompt_lens) // 2
     sd = sum(args.decode_lens) // 2
-    pred = predict_slo(cfg, sp, sd, t=backend.t, p=backend.p)
+    pred = predict_slo(cfg, sp, sd, t=backend.t, p=backend.p, c=backend.c)
     print(f"analytical single-request prediction (s_p={sp}, s_d={sd}): "
           + pred.row())
 

@@ -20,7 +20,14 @@ Beyond-paper extensions (flagged, OFF for paper-parity):
   * MoE expert-parallel all-to-all (paper §VII future work),
   * SSM/RWKV state hand-off between pipeline stages,
   * gather_mode="allgather" — XLA has no gather-to-root collective, so the
-    TPU engine all-gathers the vocab shards instead (DESIGN.md §2).
+    TPU engine all-gathers the vocab shards instead (DESIGN.md §2),
+  * context parallelism (``cp_comm_ops``, ``comm_ops_for(c=...)``) — the
+    sequence axis sharded over a third mesh axis during *prefill only*
+    (DESIGN.md §9): per layer the c workers of a CP group ring-exchange
+    their K/V blocks in (c-1) collective-permute rounds of TWO tensors
+    each (K and V — the companion paper arXiv:2408.10197's sequence-
+    parallel exchange pattern), plus one [B, h] allreduce over the CP
+    group to hand the last position's hidden state to the logits head.
 """
 from __future__ import annotations
 
@@ -38,6 +45,7 @@ _WIRE_FACTOR = {
     "alltoall": lambda d: (d - 1) / d,
     "send": lambda d: 1.0,
     "recv": lambda d: 0.0,   # same bytes as the matching send (not double-charged)
+    "collectivepermute": lambda d: 1.0,   # ring hop: every rank ships its block
 }
 
 
@@ -166,20 +174,33 @@ def stage_layer_partition(L: int, p: int) -> List[int]:
 
 
 def hybrid_stage_collectives(cfg: ModelConfig, t: int, p: int,
-                             stage: int) -> dict:
+                             stage: int, c: int = 1,
+                             phase: str = "decode") -> dict:
     """Collective *counts per pass* visible in one stage's compiled module
     under the explicit hybrid engine (gather_mode="allgather"): 2·L_s
     allreduces per stage (+1 embedding psum on stage 0), 2 boundary
     redistribute all-gathers on every receiving stage, and the logits
-    all-gather on the last stage.  Counts are identical for a prefill pass
-    and a decode pass (only message shapes differ)."""
-    if t <= 1:
-        return {}
+    all-gather on the last stage.  TP counts are identical for a prefill
+    pass and a decode pass (only message shapes differ).
+
+    With context parallelism (``c > 1``) a *prefill* pass additionally
+    shows the stage's CP ring: 2·L_s·(c-1) collective-permutes (K and V
+    rotate around the stage's cp axis each of the c-1 rounds) plus, on the
+    last stage, the one allreduce that hands the final position's hidden
+    state to the head.  CP is prefill-only — decode passes run replicated
+    over the cp axis, so ``phase="decode"`` counts carry no CP term at any
+    c (DESIGN.md §9)."""
     L_s = stage_layer_partition(cfg.num_layers, p)[stage]
-    counts = {"allreduce": 2 * L_s + (1 if stage == 0 else 0)}
-    ag = (2 if stage > 0 else 0) + (1 if stage == p - 1 else 0)
-    if ag:
-        counts["allgather"] = ag
+    counts: dict = {}
+    if t > 1:
+        counts["allreduce"] = 2 * L_s + (1 if stage == 0 else 0)
+        ag = (2 if stage > 0 else 0) + (1 if stage == p - 1 else 0)
+        if ag:
+            counts["allgather"] = ag
+    if c > 1 and phase == "prefill":
+        counts["collectivepermute"] = 2 * L_s * (c - 1)
+        if stage == p - 1:
+            counts["allreduce"] = counts.get("allreduce", 0) + 1
     return counts
 
 
@@ -281,6 +302,50 @@ def chunked_prefill_ops(cfg: ModelConfig, s_p: int, chunk: int,
 
 
 # ---------------------------------------------------------------------------
+# Context parallelism — sequence-sharded prefill (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+
+def cp_shard_len(s_p: int, c: int) -> int:
+    """Per-worker sequence shard of a CP prefill: the engines pad the prompt
+    to a multiple of c, so every shard carries ``ceil(s_p / c)`` positions."""
+    return -(-s_p // c)
+
+
+def cp_comm_ops(cfg: ModelConfig, s_p: int, c: int, *, t: int = 1,
+                b: int = 2, batch: int = 1) -> List[CommOp]:
+    """Context-parallel prefill: per layer a ring exchange of the K/V blocks
+    over the c sequence shards, aggregated over all pipeline stages (the
+    same convention as the hybrid p2p rows).
+
+    Each of the c-1 ring rounds moves TWO tensors (K and V) of one shard's
+    [batch · s_p/c, kv_heads/t · head_dim] block per worker — kv heads stay
+    TP-sharded, so CP composes with TP without touching its collectives —
+    for 2·L·(c-1) collective-permutes per pass.  One extra [batch, h]
+    allreduce over the CP group hands the last position's hidden state to
+    the logits head (the position lives on one shard; the head runs
+    replicated).  CP is prefill-only: decode runs replicated over the cp
+    axis and contributes no decode-phase ops here (DESIGN.md §9).
+    """
+    if c <= 1:
+        return []
+    L, h = cfg.num_layers, cfg.d_model
+    shard = cp_shard_len(s_p, c)
+    kv_elems = (cfg.num_kv_heads // t) * cfg.head_dim
+    return [
+        CommOp("collectivepermute", "prefill", 2 * L * (c - 1),
+               (batch * shard, kv_elems), c, b),
+        CommOp("allreduce", "prefill", 1, (batch, h), c, b),
+    ]
+
+
+def v_cp(cfg: ModelConfig, s_p: int, c: int, t: int = 1, b: int = 2) -> float:
+    """CP ring volume in closed form (bytes): 2L(c-1) blocks of
+    ceil(s_p/c)·kv/t·D plus the last-hidden allreduce."""
+    return total_volume(cp_comm_ops(cfg, s_p, c, t=t, b=b))
+
+
+# ---------------------------------------------------------------------------
 # Beyond-paper extensions
 # ---------------------------------------------------------------------------
 
@@ -319,16 +384,22 @@ def ssm_pp_state_ops(cfg: ModelConfig, s_d: int, p: int, *, b: int = 2,
 
 
 def comm_ops_for(cfg: ModelConfig, s_p: int, s_d: int, t: int = 1, p: int = 1,
-                 e: int = 1, *, b: int = 2, batch: int = 1,
+                 e: int = 1, *, c: int = 1, b: int = 2, batch: int = 1,
                  gather_mode: str = "gather") -> List[CommOp]:
     """Full per-architecture comm prediction: paper terms + extensions.
 
     Encoder-only architectures have no decode phase (s_d forced to 1); MoE
-    architectures add expert-parallel all-to-all when e > 1.
+    architectures add expert-parallel all-to-all when e > 1.  Context
+    parallelism (``c > 1``, DESIGN.md §9) shards the *prefill* sequence
+    axis: the TP/PP prefill rows shrink to the ceil(s_p/c) shard each rank
+    actually processes, the CP ring rows (``cp_comm_ops``) are added, and
+    decode rows are untouched — decode runs replicated over the cp axis.
     """
     if not cfg.is_decoder:
         s_d = 1
-    ops = hybrid_comm_ops(cfg, s_p, s_d, t, p, b=b, batch=batch,
+    s_eff = cp_shard_len(s_p, c) if c > 1 else s_p
+    ops = hybrid_comm_ops(cfg, s_eff, s_d, t, p, b=b, batch=batch,
                           gather_mode=gather_mode)
-    ops += moe_comm_ops(cfg, s_p, s_d, e, b=b, batch=batch)
+    ops += cp_comm_ops(cfg, s_p, c, t=t, b=b, batch=batch)
+    ops += moe_comm_ops(cfg, s_eff, s_d, e, b=b, batch=batch)
     return ops

@@ -53,7 +53,8 @@ from repro.config.base import ModelConfig
 from repro.core.commodel import stage_layer_partition
 from repro.models.layers import apply_rope, decode_attn_mask, \
     decode_positions, gqa_attention, make_mask, mlp_apply, paged_attn_mask, \
-    paged_cache_update, paged_gather, rms_norm, ring_cache_update
+    paged_cache_update, paged_gather, ring_cache_update, ring_kv_assemble, \
+    rms_norm
 from repro.models.transformer import greedy_decode_host_loop, \
     greedy_decode_loop
 
@@ -70,6 +71,8 @@ def tp_param_specs(cfg: ModelConfig, tp_axis: str = "tp",
     Column-parallel: wq/wk/wv, w1/w3 (output dim sharded).  Row-parallel:
     wo, w2 (input dim sharded).  Vocab-parallel: embed, lm_head.
     With ``stage_axis``, block params gain a leading stage dimension.
+    ``tp_axis=None`` yields fully replicated specs (a t=1 engine on a
+    cp-only mesh).
     """
     st = (stage_axis,) if stage_axis else ()
     blk = {
@@ -146,6 +149,31 @@ def _tp_layer_full(cfg, pl, x, positions, mask, axis, heads_t: int,
     return x, cache
 
 
+def _cp_layer_full(cfg, pl, x, positions, mask, c: int, axis, heads_t: int,
+                   kv_t: int, cache_w=None):
+    """One transformer layer of a context-parallel prefill (DESIGN.md §9):
+    x is this worker's [B, S/c, h] sequence shard, ``positions`` its
+    absolute positions and ``mask`` the shard-offset causal [S/c, S] mask.
+    The K/V blocks ring-rotate around the "cp" axis (2·(c-1)
+    collective-permutes) so attention covers the full sequence in absolute
+    order — the monolithic layer's math, token for token.  TP psums
+    (``axis``) compose unchanged; the optional ring cache is built from
+    the assembled full-sequence K/V, identical on every cp worker."""
+    B, s_loc, _ = x.shape
+    xn = rms_norm(x, pl["ln1"], cfg.norm_eps)
+    q, k, v = _tp_layer_qkv(cfg, pl, xn, positions, heads_t, kv_t)
+    kf = ring_kv_assemble(k, "cp", c)
+    vf = ring_kv_assemble(v, "cp", c)
+    attn = gqa_attention(q, kf, vf, mask).reshape(B, s_loc,
+                                                  heads_t * cfg.head_dim)
+    x = _tp_layer_out(cfg, pl, x, attn, axis)
+    cache = None
+    if cache_w is not None:
+        from repro.models.blocks import build_ring_cache
+        cache = build_ring_cache(kf, vf, cache_w)
+    return x, cache
+
+
 def _tp_layer_step(cfg, pl, x, pos, cache, axis, heads_t: int, kv_t: int):
     """One decode step against a ring cache.  2 psums when TP-sharded.
     ``pos`` is a scalar (shared depth) or [B] per-sequence positions."""
@@ -205,6 +233,37 @@ def _logits_allgather(params, x_last, axis: str, vocab: int = None,
     return _mask_pad_vocab(logits, vocab)
 
 
+def _embed_tokens(cfg, params, tokens, axis):
+    """Embedding lookup: vocab-parallel psum when TP-sharded (``axis``
+    set), plain table lookup full-width otherwise."""
+    if axis is not None:
+        return _vocab_parallel_embed(params["embed"], tokens, axis)
+    return params["embed"][tokens]
+
+
+def _head(cfg, params, x_last, axis):
+    """Logits head on the last hidden state: vocab-sharded + all-gather
+    when TP-sharded, dense otherwise."""
+    if axis is not None:
+        return _logits_allgather(params, x_last, axis, cfg.vocab_size,
+                                 cfg.norm_eps)
+    xn = rms_norm(x_last, params["final_norm"], cfg.norm_eps)
+    return _mask_pad_vocab(xn @ params["lm_head"], cfg.vocab_size)
+
+
+def _cp_last_hidden(x, last, axis_cp: str):
+    """Hand the hidden state of absolute position ``last`` — owned by one
+    cp shard of the sequence-sharded x [B, S/c, h] — to every worker: the
+    owner contributes its row, everyone else zeros, one psum over the cp
+    axis (the '+1 allreduce' of ``commodel.cp_comm_ops``)."""
+    s_loc = x.shape[1]
+    off = jax.lax.axis_index(axis_cp) * s_loc
+    li = jnp.clip(last - off, 0, s_loc - 1)
+    row = jax.lax.dynamic_slice_in_dim(x, li, 1, axis=1)[:, 0, :]
+    owns = (last >= off) & (last < off + s_loc)
+    return jax.lax.psum(jnp.where(owns, row, 0), axis_cp)
+
+
 # ---------------------------------------------------------------------------
 # TP engine
 # ---------------------------------------------------------------------------
@@ -214,18 +273,42 @@ def make_tp_mesh(t: int) -> Mesh:
     return jax.make_mesh((t,), ("tp",))
 
 
-_TP_CACHE_SPEC = {"k": P(None, None, None, "tp", None),
-                  "v": P(None, None, None, "tp", None)}
+def make_tp_cp_mesh(t: int, c: int = 1) -> Mesh:
+    """Mesh for the single-stage engines on the (tp, cp) plane.  Degenerate
+    axes are dropped so t=1 or c=1 never leaves a size-1 axis that XLA
+    would emit degenerate collectives over; a fully degenerate (1, 1)
+    request still needs one named axis for the shard_map plumbing."""
+    shape = [s for s in ((t, "tp"), (c, "cp")) if s[0] > 1]
+    if not shape:
+        shape = [(1, "tp")]
+    return jax.make_mesh(tuple(s for s, _ in shape),
+                         tuple(n for _, n in shape))
+
+
+def _tp_axis_of(mesh: Mesh):
+    """(t, axis) of a mesh that may or may not carry a 'tp' axis; the axis
+    name is None when t == 1 so callers skip degenerate collectives."""
+    t = dict(mesh.shape).get("tp", 1)
+    return t, ("tp" if t > 1 else None)
+
+
+def _cache_spec(axis):
+    """[L, B, W, kv, D] cache specs with kv heads on ``axis`` (or fully
+    replicated for a t=1 engine); the per-stage [L_s, ...] caches use the
+    same spec — always cp-replicated, since CP prefill assembles the full
+    cache on every worker."""
+    return {"k": P(None, None, None, axis, None),
+            "v": P(None, None, None, axis, None)}
 
 
 def _tp_layers_full(cfg, params, x, positions, mask, heads_t, kv_t,
-                    cache_w, unroll: bool):
+                    cache_w, unroll: bool, axis="tp"):
     """All layers over a full sequence: unrolled (paper parity) or scanned."""
     if unroll:
         caches = []
         for l in range(cfg.num_layers):
             x, c = _tp_layer_full(cfg, _layer_slice(params["blocks"], l), x,
-                                  positions, mask, "tp", heads_t, kv_t,
+                                  positions, mask, axis, heads_t, kv_t,
                                   cache_w)
             caches.append(c)
         cache = None
@@ -234,40 +317,40 @@ def _tp_layers_full(cfg, params, x, positions, mask, heads_t, kv_t,
         return x, cache
 
     def body(h, pl):
-        h, c = _tp_layer_full(cfg, pl, h, positions, mask, "tp",
+        h, c = _tp_layer_full(cfg, pl, h, positions, mask, axis,
                               heads_t, kv_t, cache_w)
         return h, c
 
     return jax.lax.scan(body, x, params["blocks"])
 
 
-def _tp_layers_step(cfg, params, x, pos, cache, heads_t, kv_t, unroll: bool):
+def _tp_layers_step(cfg, params, x, pos, cache, heads_t, kv_t, unroll: bool,
+                    axis="tp"):
     """All layers for one decode token against the stacked [L,...] cache."""
     if unroll:
         new_cache = []
         for l in range(cfg.num_layers):
             x, c = _tp_layer_step(cfg, _layer_slice(params["blocks"], l), x,
-                                  pos, _layer_slice(cache, l), "tp",
+                                  pos, _layer_slice(cache, l), axis,
                                   heads_t, kv_t)
             new_cache.append(c)
         return x, jax.tree.map(lambda *xs: jnp.stack(xs), *new_cache)
 
     def body(h, inp):
         pl, cl = inp
-        h, c = _tp_layer_step(cfg, pl, h, pos, cl, "tp", heads_t, kv_t)
+        h, c = _tp_layer_step(cfg, pl, h, pos, cl, axis, heads_t, kv_t)
         return h, c
 
     return jax.lax.scan(body, x, (params["blocks"], cache))
 
 
 def _tp_single_step(cfg, params, cache, token, pos, heads_t, kv_t,
-                    unroll: bool):
+                    unroll: bool, axis="tp"):
     """One full decode step: embed psum + all layers + logits all-gather."""
-    x = _vocab_parallel_embed(params["embed"], token[:, None], "tp")
+    x = _embed_tokens(cfg, params, token[:, None], axis)
     x, cache = _tp_layers_step(cfg, params, x, pos, cache, heads_t, kv_t,
-                               unroll)
-    logits = _logits_allgather(params, x[:, 0, :], "tp", cfg.vocab_size,
-                               cfg.norm_eps)
+                               unroll, axis)
+    logits = _head(cfg, params, x[:, 0, :], axis)
     return logits, cache
 
 
@@ -278,24 +361,91 @@ def tp_prefill(cfg: ModelConfig, mesh: Mesh, cache_w: int = None,
     Collectives per call: (2L+1) allreduce + 1 allgather — Eq. 1 / Table III.
     ``unroll=False`` scans the layer stack (same schedule, O(1)-depth HLO).
     """
-    t = mesh.shape["tp"]
+    t, axis = _tp_axis_of(mesh)
     heads_t, kv_t = cfg.num_heads // t, cfg.num_kv_heads // t
-    specs = tp_param_specs(cfg)
+    specs = tp_param_specs(cfg, tp_axis=axis)
 
     def fn(params, tokens):
         B, S = tokens.shape
         positions = jnp.broadcast_to(jnp.arange(S), (B, S))
         mask = make_mask(S, S, window=cfg.sliding_window)
-        x = _vocab_parallel_embed(params["embed"], tokens, "tp")
+        x = _embed_tokens(cfg, params, tokens, axis)
         x, cache = _tp_layers_full(cfg, params, x, positions, mask,
-                                   heads_t, kv_t, cache_w, unroll)
-        logits = _logits_allgather(params, x[:, -1, :], "tp", cfg.vocab_size,
-                                   cfg.norm_eps)
+                                   heads_t, kv_t, cache_w, unroll, axis)
+        logits = _head(cfg, params, x[:, -1, :], axis)
         return logits, cache
 
-    out_cache_spec = None if cache_w is None else _TP_CACHE_SPEC
+    out_cache_spec = None if cache_w is None else _cache_spec(axis)
     return jax.jit(shard_map(
         fn, mesh=mesh, in_specs=(specs, P(None, None)),
+        out_specs=(P(None, None), out_cache_spec),
+        check_rep=False))
+
+
+def cp_prefill(cfg: ModelConfig, mesh: Mesh, cache_w: int = None,
+               unroll: bool = True):
+    """jit'd fn(params, tokens [B, S], last) -> (logits [B, v], cache|None)
+    — the context-parallel prefill (DESIGN.md §9).
+
+    The sequence axis is sharded over the mesh's "cp" axis (S must divide
+    by c; the backends pad prompts): every worker embeds and runs each
+    layer on its own [B, S/c, h] shard, with the layer's K/V blocks
+    ring-exchanged in (c-1) collective-permute rounds
+    (``layers.ring_kv_assemble``) so causal attention sees the full
+    assembled sequence in absolute order — which keeps the pass
+    token-identical to the single-group prefill (softmax reduces in the
+    monolithic order; only matmul tiling noise remains).  ``last``
+    (traced scalar) names
+    the true last prompt position; its hidden state reaches the head via
+    one psum over the cp axis.  Per-pass collectives therefore are the
+    (2L+1)-allreduce + 1-allgather TP schedule (when t > 1, message rows
+    shrunk to the shard) plus ``commodel.cp_comm_ops``: 2L(c-1)
+    collective-permutes + 1 cp allreduce.
+
+    The seeded ring cache is assembled FULL on every cp worker (the ring
+    already moved every block), so the cache comes out of the shard_map
+    replicated over cp and kv-sharded over tp — decode consumes it
+    unchanged, which is the whole gather-into-slots handoff.
+    """
+    t, axis = _tp_axis_of(mesh)
+    shape = dict(mesh.shape)
+    if "cp" not in shape:
+        raise ValueError("cp_prefill needs a mesh with a 'cp' axis "
+                         "(make_tp_cp_mesh with c > 1); use tp_prefill "
+                         "for c == 1")
+    c = shape["cp"]
+    heads_t, kv_t = cfg.num_heads // t, cfg.num_kv_heads // t
+    specs = tp_param_specs(cfg, tp_axis=axis)
+
+    def fn(params, tokens, last):
+        B, s_loc = tokens.shape
+        off = jax.lax.axis_index("cp") * s_loc
+        positions = jnp.broadcast_to(off + jnp.arange(s_loc), (B, s_loc))
+        mask = make_mask(s_loc, c * s_loc, q_offset=off,
+                         window=cfg.sliding_window)
+        x = _embed_tokens(cfg, params, tokens, axis)
+        if unroll:
+            caches = []
+            for l in range(cfg.num_layers):
+                x, cl = _cp_layer_full(cfg, _layer_slice(params["blocks"], l),
+                                       x, positions, mask, c, axis, heads_t,
+                                       kv_t, cache_w)
+                caches.append(cl)
+            cache = (jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+                     if cache_w is not None else None)
+        else:
+            def body(h, pl):
+                return _cp_layer_full(cfg, pl, h, positions, mask, c, axis,
+                                      heads_t, kv_t, cache_w)
+
+            x, cache = jax.lax.scan(body, x, params["blocks"])
+        x_last = _cp_last_hidden(x, last, "cp")
+        logits = _head(cfg, params, x_last, axis)
+        return logits, cache
+
+    out_cache_spec = None if cache_w is None else _cache_spec(axis)
+    return jax.jit(shard_map(
+        fn, mesh=mesh, in_specs=(specs, P(None, "cp"), P()),
         out_specs=(P(None, None), out_cache_spec),
         check_rep=False))
 
@@ -311,22 +461,24 @@ def tp_decode_step(cfg: ModelConfig, mesh: Mesh, unroll: bool = True,
     paper-parity mode keeps the cache alive for step-by-step comparisons).
     ``vector_pos`` traces ``pos`` as a replicated [B] vector of per-sequence
     positions (the continuous-batching DecodeBackend step) instead of the
-    scalar shared position.
+    scalar shared position.  On a mesh with a "cp" axis the step runs
+    replicated over it — context parallelism is prefill-only (DESIGN.md §9).
     """
-    t = mesh.shape["tp"]
+    t, axis = _tp_axis_of(mesh)
     heads_t, kv_t = cfg.num_heads // t, cfg.num_kv_heads // t
-    specs = tp_param_specs(cfg)
+    specs = tp_param_specs(cfg, tp_axis=axis)
+    cache_spec = _cache_spec(axis)
     donate = (not unroll) if donate is None else donate
 
     def fn(params, cache, token, pos):
         return _tp_single_step(cfg, params, cache, token, pos,
-                               heads_t, kv_t, unroll)
+                               heads_t, kv_t, unroll, axis)
 
     return jax.jit(shard_map(
         fn, mesh=mesh,
-        in_specs=(specs, _TP_CACHE_SPEC, P(None),
+        in_specs=(specs, cache_spec, P(None),
                   P(None) if vector_pos else P()),
-        out_specs=(P(None, None), _TP_CACHE_SPEC),
+        out_specs=(P(None, None), cache_spec),
         check_rep=False),
         donate_argnums=(1,) if donate else ())
 
@@ -344,21 +496,22 @@ def tp_generate(cfg: ModelConfig, mesh: Mesh, num_tokens: int,
     ``vector_pos`` takes per-sequence [B] start positions (each sequence
     advances from its own depth — ragged fused decode).
     """
-    t = mesh.shape["tp"]
+    t, axis = _tp_axis_of(mesh)
     heads_t, kv_t = cfg.num_heads // t, cfg.num_kv_heads // t
-    specs = tp_param_specs(cfg)
+    specs = tp_param_specs(cfg, tp_axis=axis)
+    cache_spec = _cache_spec(axis)
 
     def fn(params, cache, token, pos):
         return greedy_decode_loop(
             lambda c, tok, p: _tp_single_step(cfg, params, c, tok, p,
-                                              heads_t, kv_t, unroll),
+                                              heads_t, kv_t, unroll, axis),
             token, cache, pos, num_tokens)
 
     return jax.jit(shard_map(
         fn, mesh=mesh,
-        in_specs=(specs, _TP_CACHE_SPEC, P(None),
+        in_specs=(specs, cache_spec, P(None),
                   P(None) if vector_pos else P()),
-        out_specs=(P(None, None), _TP_CACHE_SPEC),
+        out_specs=(P(None, None), cache_spec),
         check_rep=False),
         donate_argnums=(1,))
 
@@ -376,37 +529,37 @@ def tp_paged_step(cfg: ModelConfig, mesh: Mesh, unroll: bool = False,
     adds data movement, never communication.  The [L, P, ps, kv/t, D] page
     pools are donated by default (in-place update across chunks and steps).
     """
-    t = mesh.shape["tp"]
+    t, axis = _tp_axis_of(mesh)
     heads_t, kv_t = cfg.num_heads // t, cfg.num_kv_heads // t
-    specs = tp_param_specs(cfg)
+    specs = tp_param_specs(cfg, tp_axis=axis)
+    cache_spec = _cache_spec(axis)
 
     def fn(params, cache, tokens, pos, bt):
-        x = _vocab_parallel_embed(params["embed"], tokens, "tp")
+        x = _embed_tokens(cfg, params, tokens, axis)
         if unroll:
             new_cache = []
             for l in range(cfg.num_layers):
                 x, c = _tp_layer_paged(cfg, _layer_slice(params["blocks"], l),
                                        x, pos, _layer_slice(cache, l), bt,
-                                       "tp", heads_t, kv_t)
+                                       axis, heads_t, kv_t)
                 new_cache.append(c)
             cache = jax.tree.map(lambda *xs: jnp.stack(xs), *new_cache)
         else:
             def body(h, inp):
                 pl, cl = inp
-                h, c = _tp_layer_paged(cfg, pl, h, pos, cl, bt, "tp",
+                h, c = _tp_layer_paged(cfg, pl, h, pos, cl, bt, axis,
                                        heads_t, kv_t)
                 return h, c
 
             x, cache = jax.lax.scan(body, x, (params["blocks"], cache))
-        logits = _logits_allgather(params, x[:, -1, :], "tp", cfg.vocab_size,
-                                   cfg.norm_eps)
+        logits = _head(cfg, params, x[:, -1, :], axis)
         return logits, cache
 
     return jax.jit(shard_map(
         fn, mesh=mesh,
-        in_specs=(specs, _TP_CACHE_SPEC, P(None, None), P(None),
+        in_specs=(specs, cache_spec, P(None, None), P(None),
                   P(None, None)),
-        out_specs=(P(None, None), _TP_CACHE_SPEC),
+        out_specs=(P(None, None), cache_spec),
         check_rep=False),
         donate_argnums=(1,) if donate else ())
 
@@ -452,17 +605,11 @@ def stage_layer_range(cfg: ModelConfig, p: int, s: int) -> Tuple[int, int]:
     return lo, lo + sizes[s]
 
 
-# per-stage KV cache: [L_s, B, W, kv, D] with kv heads sharded over the
-# stage's TP workers (matches _TP_CACHE_SPEC minus the global layer axis)
-_STAGE_CACHE_SPEC = {"k": P(None, None, None, "tp", None),
-                     "v": P(None, None, None, "tp", None)}
-
-
 class PipelineEngine:
-    """Single-request PP (t=1) or hybrid TP×PP (t>1) serving engine.
+    """Single-request PP (t=1) or hybrid TP×CP×PP (t·c>1) serving engine.
 
     Stage s owns layers ``stage_layer_range(cfg, p, s)`` on its own
-    ``t``-device mesh.  Boundary hand-off ships TWO tensors per hop
+    ``t·c``-device mesh.  Boundary hand-off ships TWO tensors per hop
     (hidden_states + residual, the vLLM pattern) of shape [S, h/t] per TP
     worker, logged in ``self.transfers``.  Within a stage the TP collectives
     (allreduce per row-parallel linear, embedding psum on stage 0, logits
@@ -477,33 +624,54 @@ class PipelineEngine:
     TransferRecord, the measured side of the paper's Table V decode rows
     and the ``(p−1)·2·(s_d−1)`` term of Eq. 2.
 
+    Context parallelism (``c > 1``, DESIGN.md §9) shards the *prefill*
+    sequence axis over each stage's "cp" mesh axis: stage layers run
+    ``_cp_layer_full`` (per-layer ring KV exchange), boundary pairs stay
+    sequence-sharded on the wire ([S/c, h/t] per worker), and the last
+    stage hands the final position's hidden state to the head with one cp
+    allreduce — per-stage prefill counts are
+    ``commodel.hybrid_stage_collectives(..., c, phase="prefill")``.
+    Decode and paged passes run REPLICATED over the cp axis (CP is
+    prefill-only): their per-rank collective counts are unchanged at any c.
+
     ``unroll=False`` scans each stage's layer slice instead of unrolling it
     (same collective schedule, trip-counted in the stage HLO — DESIGN.md §5).
     """
 
     def __init__(self, cfg: ModelConfig, t: int = 1, p: int = 2,
-                 devices=None, unroll: bool = True):
-        self.cfg, self.t, self.p = cfg, t, p
+                 devices=None, unroll: bool = True, c: int = 1):
+        self.cfg, self.t, self.p, self.c = cfg, t, p, c
         self.unroll = unroll
         devices = devices if devices is not None else jax.devices()
-        assert len(devices) >= t * p, f"need {t * p} devices"
-        self.meshes = [Mesh(np.asarray(devices[s * t:(s + 1) * t]), ("tp",))
+        assert len(devices) >= t * c * p, f"need {t * c * p} devices"
+        self.meshes = [self._stage_mesh(devices[s * t * c:(s + 1) * t * c])
                        for s in range(p)]
+        # shard_map whenever the stage mesh is non-trivial; a t=1 cp-only
+        # stage still needs it for the ring permutes (and decode runs the
+        # same fn replicated over cp — all-local, zero collectives)
+        self._mapped = t > 1 or c > 1
+        self._tp_axis = "tp" if t > 1 else None
+        self._param_specs = tp_param_specs(cfg, tp_axis=self._tp_axis)
+        self._stage_cache_spec = _cache_spec(self._tp_axis)
         self.transfers: list = []
         self._stage_fns = [self._build_stage(s) for s in range(p)]
         self._cache_stage_fns = {}      # cache_w -> per-stage prefill fns
         self._decode_stage_fns = {}     # vector_pos -> per-stage decode fns
         self._paged_stage_fns = None    # per-stage paged chunk/decode fns
 
-    # -- shared stage fragments (traced inside each stage's jit) -----------
-    def _embed_tokens(self, params, tokens):
-        if self.t > 1:
-            return _vocab_parallel_embed(params["embed"], tokens, "tp")
-        return params["embed"][tokens]
+    def _stage_mesh(self, devs) -> Mesh:
+        t, c = self.t, self.c
+        axes = [a for a in ((t, "tp"), (c, "cp")) if a[0] > 1]
+        if not axes:
+            axes = [(1, "tp")]
+        return Mesh(np.asarray(devs).reshape([s for s, _ in axes]),
+                    tuple(n for _, n in axes))
 
+    # -- shared stage fragments (traced inside each stage's jit) -----------
     def _boundary_in(self, x_or_tokens):
         """Merge a received (hidden, residual) pair; t>1 first redistributes
-        the h/t shards among the stage's TP workers (2 all-gathers)."""
+        the h/t shards among the stage's TP workers (2 all-gathers).  A
+        cp-sharded prefill pair stays sequence-sharded — no cp collective."""
         h1, h2 = x_or_tokens
         if self.t > 1:
             h1 = jax.lax.all_gather(h1, "tp", axis=-1, tiled=True)
@@ -521,93 +689,118 @@ class PipelineEngine:
         return x * 0.25, x * 0.75
 
     def _head_out(self, params, x_last):
-        cfg = self.cfg
-        if self.t > 1:
-            return _logits_allgather(params, x_last, "tp", cfg.vocab_size,
-                                     cfg.norm_eps)
-        xn = rms_norm(x_last, params["final_norm"], cfg.norm_eps)
-        return _mask_pad_vocab(xn @ params["lm_head"], cfg.vocab_size)
+        return _head(self.cfg, params, x_last, self._tp_axis)
 
     def _stage_blocks(self, params, lo, hi):
         return jax.tree.map(
             lambda a: jax.lax.slice_in_dim(a, lo, hi, axis=0),
             params["blocks"])
 
-    def _boundary_pair_spec(self):
-        """Sharding of the two-tensor [B, S|1, h/t] boundary pair."""
-        return (P(None, None, "tp" if self.t > 1 else None),) * 2
+    def _boundary_pair_spec(self, seq_shard: bool = False):
+        """Sharding of the two-tensor [B, S|1, h/t] boundary pair;
+        ``seq_shard`` marks a cp-sharded prefill pair (sequence axis on
+        "cp") — decode/paged pairs are cp-replicated."""
+        seq = "cp" if (seq_shard and self.c > 1) else None
+        return (P(None, seq, self._tp_axis),) * 2
 
-    def _boundary_specs(self, s: int):
+    def _boundary_specs(self, s: int, seq_shard: bool = False):
         first, last = s == 0, s == self.p - 1
-        pair = self._boundary_pair_spec()
-        in_x = P(None, None) if first else pair
+        pair = self._boundary_pair_spec(seq_shard)
+        tok = P(None, "cp" if (seq_shard and self.c > 1) else None)
+        in_x = tok if first else pair
         out = P(None, None) if last else pair
         return in_x, out
 
     # -- per-stage jitted computations -------------------------------------
     def _build_stage(self, s: int, cache_w: int = None):
         """Full-sequence stage fn; with ``cache_w`` it also emits the
-        stage's seeded [L_s, B, W, kv, D] ring cache."""
-        cfg, t, p = self.cfg, self.t, self.p
+        stage's seeded [L_s, B, W, kv, D] ring cache.  With c>1 the stage
+        runs the CP prefill branch: x sequence-sharded over "cp", per-layer
+        ring KV exchange, and an extra traced ``last`` argument naming the
+        true last prompt position for the head (DESIGN.md §9)."""
+        cfg, t, c, p = self.cfg, self.t, self.c, self.p
         lo, hi = stage_layer_range(cfg, p, s)
         heads_t, kv_t = cfg.num_heads // t, cfg.num_kv_heads // t
-        axis = "tp" if t > 1 else None
+        axis = self._tp_axis
         mesh = self.meshes[s]
-        first, last = s == 0, s == p - 1
+        first, last_stage = s == 0, s == p - 1
 
-        def fn(params, x_or_tokens):
-            x = (self._embed_tokens(params, x_or_tokens) if first
+        def fn(params, x_or_tokens, last=None):
+            x = (_embed_tokens(cfg, params, x_or_tokens, axis) if first
                  else self._boundary_in(x_or_tokens))
-            B, S = x.shape[:2]
-            positions = jnp.broadcast_to(jnp.arange(S), (B, S))
-            mask = make_mask(S, S, window=cfg.sliding_window)
+            B, s_loc = x.shape[:2]
+            if c > 1:
+                off = jax.lax.axis_index("cp") * s_loc
+                positions = jnp.broadcast_to(off + jnp.arange(s_loc),
+                                             (B, s_loc))
+                mask = make_mask(s_loc, c * s_loc, q_offset=off,
+                                 window=cfg.sliding_window)
+                layer = lambda pl, h: _cp_layer_full(
+                    cfg, pl, h, positions, mask, c, axis, heads_t, kv_t,
+                    cache_w)
+            else:
+                positions = jnp.broadcast_to(jnp.arange(s_loc), (B, s_loc))
+                mask = make_mask(s_loc, s_loc, window=cfg.sliding_window)
+                layer = lambda pl, h: _tp_layer_full(
+                    cfg, pl, h, positions, mask, axis, heads_t, kv_t,
+                    cache_w)
             if self.unroll:
                 caches = []
                 for l in range(lo, hi):
-                    x, c = _tp_layer_full(cfg, _layer_slice(params["blocks"],
-                                                            l),
-                                          x, positions, mask, axis, heads_t,
-                                          kv_t, cache_w)
-                    caches.append(c)
+                    x, cl = layer(_layer_slice(params["blocks"], l), x)
+                    caches.append(cl)
                 cache = (jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
                          if cache_w is not None else None)
             else:
                 def body(h, pl):
-                    h, c = _tp_layer_full(cfg, pl, h, positions, mask, axis,
-                                          heads_t, kv_t, cache_w)
-                    return h, c
+                    return layer(pl, h)
 
                 x, cache = jax.lax.scan(body, x,
                                         self._stage_blocks(params, lo, hi))
-            out = (self._head_out(params, x[:, -1, :]) if last
-                   else self._boundary_out(x))
+            if last_stage:
+                x_last = (_cp_last_hidden(x, last, "cp") if c > 1
+                          else x[:, -1, :])
+                out = self._head_out(params, x_last)
+            else:
+                out = self._boundary_out(x)
             return out if cache_w is None else (out, cache)
 
-        specs = tp_param_specs(cfg)
-        in_x_spec, out_spec = self._boundary_specs(s)
+        if c > 1:
+            # uniform (params, x, last) signature across stages keeps the
+            # driver simple; non-last stages ignore ``last``
+            stage_fn = fn
+        else:
+            stage_fn = lambda params, x_or_tokens: fn(params, x_or_tokens)
+        in_x_spec, out_spec = self._boundary_specs(s, seq_shard=True)
         full_out = (out_spec if cache_w is None
-                    else (out_spec, _STAGE_CACHE_SPEC))
-        if t > 1:
-            mapped = shard_map(fn, mesh=mesh, in_specs=(specs, in_x_spec),
+                    else (out_spec, self._stage_cache_spec))
+        extra_in = (P(),) if c > 1 else ()
+        if self._mapped:
+            mapped = shard_map(stage_fn, mesh=mesh,
+                               in_specs=(self._param_specs, in_x_spec)
+                               + extra_in,
                                out_specs=full_out, check_rep=False)
         else:
-            mapped = fn                     # single-device stage
+            mapped = stage_fn               # single-device stage
         return jax.jit(mapped), mesh
 
     def _build_decode_stage(self, s: int, vector_pos: bool = False):
         """One-token stage fn against the stage's donated ring cache.
         ``vector_pos`` traces ``pos`` as a replicated [B] per-sequence
-        vector (continuous batching) instead of the scalar shared depth."""
+        vector (continuous batching) instead of the scalar shared depth.
+        With c>1 the step runs replicated over the cp axis (CP is
+        prefill-only): all specs are cp-unsharded and the per-rank
+        collective counts are the c=1 stage's."""
         cfg, t, p = self.cfg, self.t, self.p
         lo, hi = stage_layer_range(cfg, p, s)
         heads_t, kv_t = cfg.num_heads // t, cfg.num_kv_heads // t
-        axis = "tp" if t > 1 else None
+        axis = self._tp_axis
         mesh = self.meshes[s]
         first, last = s == 0, s == p - 1
 
         def fn(params, cache, x_or_tokens, pos):
-            x = (self._embed_tokens(params, x_or_tokens[:, None]) if first
-                 else self._boundary_in(x_or_tokens))
+            x = (_embed_tokens(cfg, params, x_or_tokens[:, None], axis)
+                 if first else self._boundary_in(x_or_tokens))
             if self.unroll:
                 new_cache = []
                 for i, l in enumerate(range(lo, hi)):
@@ -629,15 +822,16 @@ class PipelineEngine:
                    else self._boundary_out(x))
             return out, cache
 
-        specs = tp_param_specs(cfg)
         _, out_spec = self._boundary_specs(s)
         in_x_spec = P(None) if first else self._boundary_pair_spec()
         pos_spec = P(None) if vector_pos else P()
-        if t > 1:
+        if self._mapped:
             mapped = shard_map(
                 fn, mesh=mesh,
-                in_specs=(specs, _STAGE_CACHE_SPEC, in_x_spec, pos_spec),
-                out_specs=(out_spec, _STAGE_CACHE_SPEC), check_rep=False)
+                in_specs=(self._param_specs, self._stage_cache_spec,
+                          in_x_spec, pos_spec),
+                out_specs=(out_spec, self._stage_cache_spec),
+                check_rep=False)
         else:
             mapped = fn
         # fast path donates the cache (in-place update); paper-parity mode
@@ -657,11 +851,11 @@ class PipelineEngine:
         cfg, t, p = self.cfg, self.t, self.p
         lo, hi = stage_layer_range(cfg, p, s)
         heads_t, kv_t = cfg.num_heads // t, cfg.num_kv_heads // t
-        axis = "tp" if t > 1 else None
+        axis = self._tp_axis
         first, last = s == 0, s == p - 1
 
         def fn(params, cache, x_or_tokens, pos, bt):
-            x = (self._embed_tokens(params, x_or_tokens) if first
+            x = (_embed_tokens(cfg, params, x_or_tokens, axis) if first
                  else self._boundary_in(x_or_tokens))
             if self.unroll:
                 new_cache = []
@@ -684,16 +878,16 @@ class PipelineEngine:
                    else self._boundary_out(x))
             return out, cache
 
-        specs = tp_param_specs(cfg)
         _, out_spec = self._boundary_specs(s)
         in_x_spec = (P(None, None) if first
                      else self._boundary_pair_spec())
-        if t > 1:
+        if self._mapped:
             mapped = shard_map(
                 fn, mesh=self.meshes[s],
-                in_specs=(specs, _STAGE_CACHE_SPEC, in_x_spec, P(None),
-                          P(None, None)),
-                out_specs=(out_spec, _STAGE_CACHE_SPEC), check_rep=False)
+                in_specs=(self._param_specs, self._stage_cache_spec,
+                          in_x_spec, P(None), P(None, None)),
+                out_specs=(out_spec, self._stage_cache_spec),
+                check_rep=False)
         else:
             mapped = fn
         donate = () if self.unroll else (1,)
@@ -720,60 +914,80 @@ class PipelineEngine:
 
     # -- driver --------------------------------------------------------------
     def _shard_params(self, params, mesh):
-        specs = tp_param_specs(self.cfg)
-        if self.t == 1:
-            specs = jax.tree.map(lambda _: P(), specs,
-                                 is_leaf=lambda x: isinstance(x, P))
         return jax.device_put(
             params, jax.tree.map(
-                lambda sp: NamedSharding(mesh, sp), specs,
+                lambda sp: NamedSharding(mesh, sp), self._param_specs,
                 is_leaf=lambda x: isinstance(x, P)))
 
     def prepare(self, params):
         """Place one param copy per stage (each stage reads its own layers)."""
         return [self._shard_params(params, m) for m in self.meshes]
 
-    def _move_boundary(self, out, s: int, phase: str, log: bool = True):
+    def _move_boundary(self, out, s: int, phase: str, log: bool = True,
+                       seq_shard: bool = False):
         """Ship the two-tensor boundary pair to stage s+1 (device_put,
-        DESIGN.md §3) and log one TransferRecord per tensor."""
+        DESIGN.md §3) and log one TransferRecord per tensor.  ``seq_shard``
+        marks a cp-sharded prefill pair: each worker then carries only its
+        [S/c, h/t] block, which is what the record charges."""
         nxt = self.meshes[s + 1]
-        spec = self._boundary_pair_spec()[0]
+        spec = self._boundary_pair_spec(seq_shard)[0]
         moved = tuple(jax.device_put(h, NamedSharding(nxt, spec))
                       for h in out)
+        c = self.c if (seq_shard and self.c > 1) else 1
         if log:
             for h in moved:
                 self.transfers.append(TransferRecord(
                     phase, 1,
-                    tuple(h.shape[:-1]) + (h.shape[-1] // self.t,),
+                    (h.shape[0], h.shape[1] // c, h.shape[-1] // self.t),
                     jnp.dtype(h.dtype).itemsize))
         return moved
 
-    def forward(self, staged_params, tokens, phase: str = "prefill"):
-        """Run one pass; logs (p-1)×2 transfers of [S, h/t] — Eq. 2 / Eq. 7."""
+    def _prefill_last(self, tokens, last):
+        """Validate/default the ``last`` index of a CP prefill pass."""
+        S = tokens.shape[1]
+        if self.c > 1 and S % self.c:
+            raise ValueError(
+                f"CP prefill shards the sequence over c={self.c}: pad the "
+                f"prompt to a multiple of c (got S={S})")
+        return jnp.int32(S - 1 if last is None else last)
+
+    def forward(self, staged_params, tokens, phase: str = "prefill",
+                last: int = None):
+        """Run one pass; logs (p-1)×2 transfers of [S, h/t] — Eq. 2 / Eq. 7.
+
+        With c>1 the pass is CP-sharded (DESIGN.md §9): S must divide by c
+        and ``last`` names the true last prompt position (default S-1) —
+        logits come from it, boundary hops carry [S/c, h/t] per worker."""
+        extra = (self._prefill_last(tokens, last),) if self.c > 1 else ()
         x = tokens
         for s in range(self.p):
             fn, _ = self._stage_fns[s]
-            out = fn(staged_params[s], x)
+            out = fn(staged_params[s], x, *extra)
             if s < self.p - 1:
-                x = self._move_boundary(out, s, phase)
+                x = self._move_boundary(out, s, phase, seq_shard=True)
             else:
                 return out
 
-    def prefill_with_cache(self, staged_params, tokens, cache_w: int):
+    def prefill_with_cache(self, staged_params, tokens, cache_w: int,
+                           last: int = None):
         """Prefill that seeds every stage's [L_s, B, W, kv, D] ring cache.
 
         Returns (last-position logits [B, v], per-stage cache list); logs
-        the same (p-1)×2 [S, h/t] prefill transfers as ``forward``.
+        the same (p-1)×2 [S, h/t] prefill transfers as ``forward`` ([S/c,
+        h/t] per worker under CP, where the seeded caches come out FULL on
+        every cp worker thanks to the ring assembly — the gather-into-slots
+        handoff, DESIGN.md §9).
         """
+        extra = (self._prefill_last(tokens, last),) if self.c > 1 else ()
         fns = self._cache_fns(cache_w)
         x = tokens
         caches = []
         for s in range(self.p):
             fn, _ = fns[s]
-            out, cache = fn(staged_params[s], x)
+            out, cache = fn(staged_params[s], x, *extra)
             caches.append(cache)
             if s < self.p - 1:
-                x = self._move_boundary(out, s, "prefill")
+                x = self._move_boundary(out, s, "prefill", seq_shard=True)
             else:
                 return out, caches
 
@@ -852,15 +1066,20 @@ class PipelineEngine:
         return out, state["caches"]
 
     # -- introspection -------------------------------------------------------
-    def stage_hlo(self, staged_params, tokens, s: int) -> str:
-        """Compiled HLO of stage s's prefill (collective-count validation)."""
+    def stage_hlo(self, staged_params, tokens, s: int,
+                  last: int = None) -> str:
+        """Compiled HLO of stage s's prefill (collective-count validation);
+        under CP the counts include the stage's ring permutes —
+        ``commodel.hybrid_stage_collectives(..., c, phase="prefill")``."""
+        extra = (self._prefill_last(tokens, last),) if self.c > 1 else ()
         x = tokens
         for i in range(s):
             fn, _ = self._stage_fns[i]
-            out = fn(staged_params[i], x)
-            x = self._move_boundary(out, i, "hlo", log=False)
+            out = fn(staged_params[i], x, *extra)
+            x = self._move_boundary(out, i, "hlo", log=False,
+                                    seq_shard=True)
         fn, _ = self._stage_fns[s]
-        return fn.lower(staged_params[s], x).compile().as_text()
+        return fn.lower(staged_params[s], x, *extra).compile().as_text()
 
     def stage_decode_hlo(self, staged_params, caches, token, pos,
                          s: int) -> str:

@@ -1,12 +1,16 @@
 """Automated parallelism selection (the paper's §VII 'future work', built).
 
 Given a model, a serving scenario (S_p, S_d, SLO weights) and a hardware
-profile, enumerate feasible (t, p) layouts, score each with the analytical
-SLO model, and return a ranked plan.  The ranking reproduces the paper's
-§V-C deployment guidance:
+profile, enumerate feasible (t, c, p) layouts, score each with the
+analytical SLO model, and return a ranked plan.  The ranking reproduces the
+paper's §V-C deployment guidance plus the sequence-parallel extension of
+the companion work (arXiv:2408.10197):
   * short sequences + intra-node ⇒ pure TP (TTFT-optimal),
   * long-form generation / bandwidth-constrained ⇒ PP (volume-optimal),
-  * moderate workloads ⇒ balanced hybrids; avoid unbalanced ones.
+  * moderate workloads ⇒ balanced hybrids; avoid unbalanced ones,
+  * long prompts whose prefill is compute-bound on one TP group ⇒ context
+    parallelism (CP shards the prefill sequence, DESIGN.md §9) — CP wins
+    TTFT there and is pure overhead on short prompts.
 """
 from __future__ import annotations
 
@@ -21,24 +25,42 @@ from repro.core.slo import DEFAULT_OVERHEADS, EngineOverheads, SLOReport, \
 @dataclasses.dataclass
 class PlanCandidate:
     tensor_parallel: int
+    context_parallel: int
     pipeline_parallel: int
     slo: SLOReport
     score: float
 
     @property
     def name(self) -> str:
-        return f"TP={self.tensor_parallel} PP={self.pipeline_parallel}"
+        return (f"TP={self.tensor_parallel} CP={self.context_parallel} "
+                f"PP={self.pipeline_parallel}")
+
+
+def _divisors(n: int) -> List[int]:
+    return [d for d in range(1, n + 1) if n % d == 0]
 
 
 def feasible_layouts(cfg: ModelConfig, world: int) -> List[tuple]:
+    """All (t, c, p) with t·c·p == world the system can actually run.
+
+    Constraints: the attention and kv heads must shard over t, and every
+    pipeline stage must own at least one layer — p <= num_layers.  An
+    INDIVISIBLE layer count is feasible: ``commodel.stage_layer_partition``
+    spreads the remainder over the early stages and the engines follow the
+    same split (PR 2), so the old ``num_layers % p == 0`` filter silently
+    excluded layouts the system serves fine (e.g. Llama-3.2-3B's 28 layers
+    at p=8).  CP adds no divisibility constraint of its own — prompts pad
+    to a multiple of c (DESIGN.md §9).
+    """
     outs = []
-    for t in [d for d in range(1, world + 1) if world % d == 0]:
-        p = world // t
+    for t in _divisors(world):
         if cfg.num_kv_heads % t or cfg.num_heads % t:
             continue
-        if cfg.num_layers % p:
-            continue
-        outs.append((t, p))
+        for c in _divisors(world // t):
+            p = world // (t * c)
+            if p > cfg.num_layers:
+                continue
+            outs.append((t, c, p))
     return outs
 
 
@@ -47,23 +69,23 @@ def plan(cfg: ModelConfig, world: int, s_p: int, s_d: int, *,
          ov: EngineOverheads = DEFAULT_OVERHEADS,
          objective: str = "e2e",
          volume_budget: Optional[float] = None) -> List[PlanCandidate]:
-    """Rank all feasible (t, p) layouts for ``world`` chips.
+    """Rank all feasible (t, c, p) layouts for ``world`` chips.
 
     objective: "ttft" | "tpot" | "e2e" | "volume".
     volume_budget: optional cap on comm wire bytes (models a bandwidth-
     constrained fabric — layouts above the cap are ranked last).
     """
     cands = []
-    for t, p in feasible_layouts(cfg, world):
-        slo = predict_slo(cfg, s_p, s_d, t, p, hw=hw, ov=ov)
+    for t, c, p in feasible_layouts(cfg, world):
+        slo = predict_slo(cfg, s_p, s_d, t, p, hw=hw, ov=ov, c=c)
         score = {
             "ttft": slo.ttft, "tpot": slo.tpot, "e2e": slo.e2e,
             "volume": slo.comm_volume,
         }[objective]
         if volume_budget is not None and slo.comm_volume > volume_budget:
             score = float("inf")
-        cands.append(PlanCandidate(t, p, slo, score))
-    cands.sort(key=lambda c: (c.score, c.slo.e2e))
+        cands.append(PlanCandidate(t, c, p, slo, score))
+    cands.sort(key=lambda x: (x.score, x.slo.e2e))
     return cands
 
 

@@ -25,7 +25,8 @@ import math
 from typing import Dict
 
 from repro.config.base import HardwareProfile, H100_NODE, ModelConfig
-from repro.core.commodel import CommOp, comm_ops_for
+from repro.core.commodel import CommOp, comm_ops_for, cp_comm_ops, \
+    cp_shard_len
 
 
 @dataclasses.dataclass(frozen=True)
@@ -40,6 +41,9 @@ class EngineOverheads:
     stage_overhead_prefill: float = 150e-3  # per pipeline stage per prefill
     stage_overhead_decode: float = 0.2e-3   # per stage per decode step
     cross_link_decode_overhead: float = 6e-3  # per cross-node pipeline link
+    cp_round_overhead: float = 50e-6  # per CP ring round per layer: the
+    #   eager-mode launch/sync of the blocking permute chain (DESIGN.md §9)
+    #   — what makes CP pure overhead on short prompts, amortized on long
 
 
 DEFAULT_OVERHEADS = EngineOverheads()
@@ -87,20 +91,37 @@ def split_p2p_count(count: int, p: int, cross_links: int):
 def predict_slo(cfg: ModelConfig, s_p: int, s_d: int, t: int = 1, p: int = 1,
                 hw: HardwareProfile = H100_NODE,
                 ov: EngineOverheads = DEFAULT_OVERHEADS,
-                batch: int = 1, dtype_bytes: int = 2) -> SLOReport:
-    """Predict TTFT/TPOT/E2E for a (t, p) layout of one inference request."""
+                batch: int = 1, dtype_bytes: int = 2,
+                c: int = 1) -> SLOReport:
+    """Predict TTFT/TPOT/E2E for a (t, c, p) layout of one inference
+    request.  Context parallelism (``c > 1``, DESIGN.md §9) divides the
+    prefill compute over t·c workers and adds the per-layer ring latency
+    (``commodel.cp_comm_ops``: 2L(c-1) permutes + 1 cp allreduce) to the
+    prefill communication; decode terms are untouched — the cp workers
+    replicate decode, so CP buys TTFT on long prompts and is pure overhead
+    on short ones (and on TPOT always)."""
     n_active = cfg.active_param_count()
-    world = t * p
+    world = t * c * p
     nodes = max(1, math.ceil(world / hw.intra_degree))
+    # placement puts each TP group on contiguous chips, so TP collectives
+    # cross nodes only when t itself outgrows the fast domain; the CP ring
+    # wraps the t-groups and crosses once the t·c stage group does
     tp_cross = t > hw.intra_degree
-    stages_per_node = max(1, hw.intra_degree // max(t, 1))
+    cp_cross = t * c > hw.intra_degree
     cross_links = max(0, min(p - 1, nodes - 1)) if p > 1 else 0
 
-    ops = comm_ops_for(cfg, s_p, s_d, t, p, batch=batch, b=dtype_bytes)
-    comm_volume = sum(o.wire_bytes for o in ops)
+    # CP ring ops timed separately (they cross at t·c, the rest at t)
+    cp_ops = cp_comm_ops(cfg, s_p, c, t=t, b=dtype_bytes, batch=batch)
+    ops = comm_ops_for(cfg, s_p, s_d, t, p, batch=batch, b=dtype_bytes) \
+        if c == 1 else comm_ops_for(cfg, cp_shard_len(s_p, c), s_d, t, p,
+                                    batch=batch, b=dtype_bytes)
+    comm_volume = sum(o.wire_bytes for o in ops + cp_ops)
 
     def phase_comm(phase: str) -> float:
         total = 0.0
+        for o in cp_ops:
+            if o.phase == phase:
+                total += _collective_time(o, hw, cp_cross)
         for o in ops:
             if o.phase != phase:
                 continue
@@ -120,10 +141,13 @@ def predict_slo(cfg: ModelConfig, s_p: int, s_d: int, t: int = 1, p: int = 1,
 
     eff = _prefill_eff(n_active, ov)
     prefill_flops = 2 * n_active * s_p * batch
-    # PP serializes stages: compute parallelism only over t
-    prefill_compute = prefill_flops / (max(t, 1) * hw.peak_flops * eff)
+    # PP serializes stages: compute parallelism over the t·c stage group
+    # (CP shards the prefill sequence — each worker runs s_p/c positions)
+    prefill_compute = prefill_flops / (max(t * c, 1) * hw.peak_flops * eff)
     ttft = (ov.request_overhead + prefill_compute + phase_comm("prefill")
-            + (p * ov.stage_overhead_prefill if p > 1 else 0.0))
+            + (p * ov.stage_overhead_prefill if p > 1 else 0.0)
+            + (2 * cfg.num_layers * (c - 1) * ov.cp_round_overhead
+               if c > 1 else 0.0))
 
     # decode: weight streaming at HBM bandwidth; stages serialized
     param_bytes = n_active * dtype_bytes

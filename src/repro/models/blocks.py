@@ -40,10 +40,20 @@ def build_ring_cache(k, v, w: int):
 
 def attention_apply(cfg: ModelConfig, p, xn, positions, mask,
                     cache=None, pos=None, build_cache_w=None, n_heads=None,
-                    block_table=None):
+                    block_table=None, cp_axis=None, cp_size: int = 1):
     """Self-attention over a normalized input xn [B,S,h].
 
     Returns (attn_out [B,S,n_heads*D], cache_out).
+
+    ``cp_axis`` switches a full-sequence pass to the context-parallel ring
+    branch (DESIGN.md §9; must run inside shard_map with that mesh axis):
+    xn is this worker's [B, S/c, h] sequence shard and ``positions`` its
+    absolute positions; the local K/V blocks rotate around the cp ring
+    (``layers.ring_kv_assemble``, 2·(c-1) collective-permutes) so queries
+    attend over the full assembled sequence, and ``mask`` must already be
+    the shard-offset causal mask ([S/c, S]).  A ``build_cache_w`` cache is
+    seeded from the assembled K/V, i.e. it comes out whole on every cp
+    worker — the gather-into-slots handoff needs no further collective.
     """
     n_heads = n_heads or cfg.num_heads
     B, S, _ = xn.shape
@@ -53,6 +63,12 @@ def attention_apply(cfg: ModelConfig, p, xn, positions, mask,
     v = (xn @ p["wv"]).reshape(B, S, Hkv, D)
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
+    if cp_axis is not None:
+        if cache is not None:
+            raise ValueError("context parallelism is prefill-only: decode "
+                             "runs replicated over the cp axis")
+        k = layers.ring_kv_assemble(k, cp_axis, cp_size)
+        v = layers.ring_kv_assemble(v, cp_axis, cp_size)
 
     if cache is not None and block_table is not None:
         # paged path (DESIGN.md §8): the chunk's K/V rows are scattered into
@@ -100,11 +116,11 @@ def init_dense_blocks(rng, cfg: ModelConfig, L: int, dtype):
 
 def dense_block_apply(cfg: ModelConfig, p, x, positions, mask,
                       cache=None, pos=None, build_cache_w=None,
-                      block_table=None):
+                      block_table=None, cp_axis=None, cp_size: int = 1):
     attn_out, cache_out = attention_apply(
         cfg, p, rms_norm(x, p["ln1"], cfg.norm_eps), positions, mask,
         cache=cache, pos=pos, build_cache_w=build_cache_w,
-        block_table=block_table)
+        block_table=block_table, cp_axis=cp_axis, cp_size=cp_size)
     x = x + attn_out @ p["wo"]
     x = x + mlp_apply(p, rms_norm(x, p["ln2"], cfg.norm_eps), cfg.activation)
     return x, cache_out, jnp.zeros((), jnp.float32)

@@ -195,6 +195,41 @@ def paged_attn_mask(kv_len: int, pos, q_len: int):
     return m[:, None, None, :, :]
 
 
+def ring_kv_assemble(blk, axis: str, c: int):
+    """Ring all-gather of per-shard K or V blocks over the ``axis`` mesh
+    axis, assembled in ABSOLUTE sequence order (DESIGN.md §9).
+
+    ``blk`` is this context-parallel worker's [B, S/c, Hkv, D] block of a
+    sequence sharded over c workers; after c-1 ``ppermute`` rounds — each
+    worker forwards the block it received last round to its ring successor
+    — every worker holds the full [B, S, Hkv, D] tensor, with the block
+    that originated on worker r at rows [r·S/c, (r+1)·S/c).  Because the
+    assembly is in absolute order, the assembled K/V is *bitwise* the
+    monolithic pass's and attention softmax-reduces over it in the same
+    order — CP prefill differs from the single-group path only by matmul
+    tiling noise (~1e-6, never a greedy-argmax flip), where the
+    overlap-friendly online-softmax formulation of ring attention would
+    reorder the reduction itself.
+
+    Communication: c-1 collective-permutes per call; a layer calls this
+    twice (K and V), giving the 2·L·(c-1) ring rows of
+    ``commodel.cp_comm_ops``.  Must run inside shard_map with ``axis`` in
+    the mesh.
+    """
+    idx = jax.lax.axis_index(axis)
+    s_loc = blk.shape[1]
+    full = jnp.zeros(blk.shape[:1] + (c * s_loc,) + blk.shape[2:], blk.dtype)
+    perm = [(i, (i + 1) % c) for i in range(c)]
+    cur = blk
+    for step in range(c):
+        src = (idx - step) % c
+        full = jax.lax.dynamic_update_slice_in_dim(full, cur, src * s_loc,
+                                                   axis=1)
+        if step < c - 1:
+            cur = jax.lax.ppermute(cur, axis, perm)
+    return full
+
+
 def ring_cache_update(cache_k, cache_v, k, v, pos):
     """Write this step's K/V row into slot ``pos % W`` of a ring cache.
 

@@ -48,6 +48,16 @@ memory.  Prefill becomes *chunked* — three extra methods drive it:
 decode-eligible slot's pages to cover the incoming position and points every
 ineligible slot's block-table row at the reserved scratch page 0, so the
 fixed-capacity step's garbage lanes can never corrupt a live page.
+
+Context parallelism (``c > 1`` on the explicit backends, DESIGN.md §9)
+changes ONLY how a request's prefill runs: the prompt is padded to a
+multiple of c, sequence-sharded over the mesh's cp axis, and each layer's
+K/V ring-exchanged (``parallel_exec.cp_prefill`` / the CP stage fns) — the
+ring assembles the FULL cache on every cp worker, so the seeded KV drops
+into the contiguous slot row via the ordinary ``_scatter``, or into the KV
+pages via ``_seed_pages``, and ``decode_step`` is untouched (it runs
+replicated over the cp axis).  CP and chunked prefill are alternative
+long-prompt strategies: ``Scheduler(chunk_size=...)`` rejects c>1 backends.
 """
 from __future__ import annotations
 
@@ -62,6 +72,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.config.base import ModelConfig
 from repro.core import parallel_exec as px
 from repro.core.commodel import CommOp, chunked_prefill_ops, comm_ops_for
+from repro.models.layers import paged_cache_update
 from repro.models.transformer import get_model
 from repro.runtime.kvpool import KVPool
 
@@ -74,6 +85,7 @@ class DecodeBackend(Protocol):
     num_slots: int
     max_len: int
     t: int
+    c: int
     p: int
 
     def prefill_into_slots(self, prompts: Sequence[np.ndarray],
@@ -97,18 +109,34 @@ def _write_slot(big, small, slot):
         big, small)
 
 
+def _seed_pages(pools, small, bt):
+    """Scatter a batch-1 contiguous cache {k,v: [L, 1, S, kv, D]} into the
+    KV page pools {k,v: [L, P, ps, kv, D]} at the pages ``bt`` [1, n]
+    names — the CP gather-into-pages handoff (DESIGN.md §9).  Pure data
+    movement on unsharded axes (kv heads keep their TP sharding), jitted
+    with the pools donated so the write happens in place."""
+    pos = jnp.zeros((1,), jnp.int32)
+
+    def per_layer(pk, pv, k, v):
+        return paged_cache_update(pk, pv, k, v, pos, bt)
+
+    ck, cv = jax.vmap(per_layer)(pools["k"], pools["v"],
+                                 small["k"], small["v"])
+    return {"k": ck, "v": cv}
+
+
 class _BackendBase:
     """Shared slot bookkeeping + predicted per-step communication."""
 
     def __init__(self, cfg: ModelConfig, num_slots: int, max_len: int,
                  t: int, p: int, paged: bool = False, page_size: int = 16,
-                 num_pages: Optional[int] = None):
+                 num_pages: Optional[int] = None, c: int = 1):
         if not cfg.is_decoder:
             raise ValueError(f"{cfg.name} is encoder-only: no decode")
         self.cfg = cfg
         self.num_slots = int(num_slots)
         self.max_len = int(max_len)
-        self.t, self.p = int(t), int(p)
+        self.t, self.c, self.p = int(t), int(c), int(p)
         self.paged = bool(paged)
         if self.paged:
             if cfg.family != "dense":
@@ -146,29 +174,42 @@ class _BackendBase:
     def _pages_for(self, tokens: int) -> int:
         return -(-tokens // self.page_size)
 
+    def _alloc_len(self, prompt_len: int) -> int:
+        """Cache positions a prompt claims up front: its true length, or the
+        CP-padded length (prompts pad to a multiple of c so the sequence
+        shards equally — the pad rows' garbage KV sits inside the slot's
+        own pages and decode overwrites each position before the causal
+        mask ever exposes it, DESIGN.md §9)."""
+        return prompt_len if self.c == 1 else \
+            -(-prompt_len // self.c) * self.c
+
     def can_admit(self, prompt_len: int, max_new_tokens: int = 1) -> bool:
         """True when the pool can cover this request's WORST case (prompt +
-        max_new_tokens - 1 positions) on top of every live request's
-        committed future growth.  Without preemption (DESIGN.md §7/8) this
-        admission gate is what keeps an oversubscribed pool from running
-        out of pages mid-decode: a request the gate rejects stays queued
-        until evictions free pages."""
+        max_new_tokens - 1 positions, or the CP-padded prompt if longer) on
+        top of every live request's committed future growth.  Without
+        preemption (DESIGN.md §7/8) this admission gate is what keeps an
+        oversubscribed pool from running out of pages mid-decode: a request
+        the gate rejects stays queued until evictions free pages."""
         self._require_paged()
         committed = sum(
             max(0, self._worst.get(s, 0) - len(self.pool.block_table(s)))
             for s in self.pool.owners())
-        need = self._pages_for(prompt_len + max_new_tokens - 1)
+        need = self._pages_for(max(self._alloc_len(prompt_len),
+                                   prompt_len + max_new_tokens - 1))
         return self.pool.free_pages - committed >= need
 
     def begin_prefill(self, slot: int, prompt_len: int,
                       max_new_tokens: int = 1) -> None:
-        """Allocate the slot's pages for a new request's prompt and commit
-        its worst-case decode growth (see ``can_admit``)."""
+        """Allocate the slot's pages for a new request's prompt (CP-padded
+        when c > 1) and commit its worst-case decode growth
+        (see ``can_admit``)."""
         self._require_paged()
         self.pool.free(slot)                # defensive: slot may be reused
         self._decodable.discard(slot)
-        self.pool.allocate(slot, prompt_len)
-        self._worst[slot] = self._pages_for(prompt_len + max_new_tokens - 1)
+        self.pool.allocate(slot, self._alloc_len(prompt_len))
+        self._worst[slot] = self._pages_for(
+            max(self._alloc_len(prompt_len),
+                prompt_len + max_new_tokens - 1))
         self._set_table(slot)
 
     def prefill_chunk(self, slot: int, tokens, start: int) -> int:
@@ -176,11 +217,34 @@ class _BackendBase:
         start..start+S-1; returns the greedy token of the chunk's last
         position (the request's first token when this is the final chunk)."""
         self._require_paged()
+        if self.c > 1:
+            raise RuntimeError(
+                "chunked prefill and context parallelism are alternative "
+                "long-prompt strategies; a c>1 backend prefills "
+                "monolithically via prefill_whole (DESIGN.md §9)")
         chunk = np.asarray(tokens, np.int32)[None, :]
         pos = np.asarray([start], np.int32)
         bt = self.block_tables[slot:slot + 1]
         logits = self._paged_call(chunk, pos, bt, phase="prefill")
         return int(np.argmax(logits[0]))
+
+    def prefill_whole(self, slot: int, tokens) -> int:
+        """Monolithic prefill of one request into its allocated pages:
+        one maximal chunk at c == 1, or — under context parallelism — one
+        sequence-sharded CP pass whose assembled full KV is scattered into
+        the slot's pages (``_seed_pages``).  Returns the first greedy
+        token; ``begin_prefill`` must have run."""
+        self._require_paged()
+        tokens = np.asarray(tokens, np.int32).reshape(-1)
+        if self.c == 1:
+            return self.prefill_chunk(slot, tokens, 0)
+        logits, small = self._prefill_one(tokens)
+        self._seed_slot_pages(small, slot)
+        return int(np.argmax(np.asarray(logits)[0]))
+
+    def _seed_slot_pages(self, small, slot: int) -> None:
+        """Write a batch-1 contiguous cache into the slot's pages."""
+        raise NotImplementedError
 
     def finish_prefill(self, slot: int) -> None:
         """Mark a fully-prefilled slot decode-eligible."""
@@ -223,11 +287,26 @@ class _BackendBase:
         the decode-phase rows of ``comm_ops_for`` at s_d=2 (one step past
         the prefill token), gather_mode="allgather" (the XLA engines), at
         the backend's actual activation width — so predicted bytes sit on
-        the same scale as the measured TransferRecords."""
-        ops = comm_ops_for(self.cfg, 1, 2, self.t, self.p, batch=batch,
+        the same scale as the measured TransferRecords.  Independent of c:
+        context parallelism is prefill-only (DESIGN.md §9)."""
+        ops = comm_ops_for(self.cfg, 1, 2, self.t, self.p, c=self.c,
+                           batch=batch,
                            b=jnp.dtype(self.cfg.dtype).itemsize,
                            gather_mode="allgather")
         return [o for o in ops if o.phase == "decode"]
+
+    def prefill_comm_ops(self, prompt_len: int,
+                         batch: int = 1) -> List[CommOp]:
+        """Predicted collectives for ONE monolithic prefill pass of a
+        ``prompt_len``-token prompt at the backend's (t, c, p) layout —
+        under CP this carries the per-layer ring rows of
+        ``commodel.cp_comm_ops`` plus the TP/PP rows at the padded
+        ceil(prompt_len/c) shard each rank processes."""
+        ops = comm_ops_for(self.cfg, prompt_len, 1, self.t, self.p,
+                           c=self.c, batch=batch,
+                           b=jnp.dtype(self.cfg.dtype).itemsize,
+                           gather_mode="allgather")
+        return [o for o in ops if o.phase == "prefill"]
 
     def drain_transfers(self) -> dict:
         """Inter-stage bytes moved since the last drain (PP only)."""
@@ -247,28 +326,47 @@ class _BackendBase:
     # -- shared admission loop (template method) ---------------------------
     def prefill_into_slots(self, prompts, slots) -> np.ndarray:
         """Admit requests: one batch-1 prefill per prompt at its true
-        length (row-wise identical to serving it solo), scattered into the
-        slot's batch row.  Returns the first greedy token per request.
+        length (row-wise identical to serving it solo; CP-padded and
+        sequence-sharded when c > 1), scattered into the slot's batch row.
+        Returns the first greedy token per request.
 
-        In paged mode the prompt prefills straight into the slot's pages as
-        one maximal chunk — the non-chunked protocol entry point over the
-        chunked machinery (the scheduler's chunked path drives
-        ``begin_prefill``/``prefill_chunk``/``finish_prefill`` itself)."""
+        In paged mode the prompt prefills straight into the slot's pages
+        as one maximal chunk (one CP pass when c > 1) — the non-chunked
+        protocol entry point over the chunked machinery (the scheduler's
+        chunked path drives ``begin_prefill``/``prefill_chunk``/
+        ``finish_prefill`` itself)."""
         first = np.zeros(len(slots), np.int32)
         for i, (prompt, slot) in enumerate(zip(prompts, slots)):
             prompt = np.asarray(prompt, np.int32).reshape(-1)
             if self.paged:
                 self.begin_prefill(slot, len(prompt))
-                first[i] = self.prefill_chunk(slot, prompt, 0)
+                first[i] = self.prefill_whole(slot, prompt)
                 self.finish_prefill(slot)
             else:
-                logits, small = self._prefill_one(self._as_prompt(prompt))
+                logits, small = self._prefill_one(prompt)
                 self._scatter(small, slot)
                 first[i] = self._first_token(logits)[0]
         return first
 
+    def _pad_prompt(self, prompt):
+        """(CP-padded prompt, true-last-position index): pads with token 0
+        to a multiple of c so the sequence axis shards equally.  The pad
+        positions' KV rows are garbage the causal mask hides until decode
+        overwrites them position by position (DESIGN.md §9)."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        padded = np.pad(prompt, (0, (-len(prompt)) % self.c))
+        # sliding-window configs serve prompts beyond max_len (the ring
+        # cache keeps the last W positions) — same waiver as the
+        # scheduler's admission check
+        if not self.paged and len(padded) > self.max_len \
+                and not self.cfg.sliding_window:
+            raise ValueError(
+                f"CP-padded prompt ({len(padded)}) exceeds max_len "
+                f"{self.max_len}")
+        return padded, len(prompt) - 1
+
     def _prefill_one(self, prompt):
-        """(logits [1, v], seeded batch-1 cache) for one prompt."""
+        """(logits [1, v], seeded batch-1 cache) for one raw 1-D prompt."""
         raise NotImplementedError
 
     def _scatter(self, small, slot: int) -> None:
@@ -308,7 +406,7 @@ class ModelBackend(_BackendBase):
             self._write = jax.jit(_write_slot, donate_argnums=(0,))
 
     def _prefill_one(self, prompt):
-        logits, small, _ = self._prefill(self.params, prompt)
+        logits, small, _ = self._prefill(self.params, self._as_prompt(prompt))
         return logits, small
 
     def _paged_call(self, tokens, pos, bt, phase: str) -> np.ndarray:
@@ -329,20 +427,30 @@ class ModelBackend(_BackendBase):
 class TPBackend(_BackendBase):
     """Explicit tensor-parallel engine (core/parallel_exec.py) behind the
     protocol: shard_map with hand-placed collectives — (2L+1) allreduce +
-    1 logits all-gather per decode step, regardless of slot count."""
+    1 logits all-gather per decode step, regardless of slot count.
+
+    ``c > 1`` adds context parallelism on the same mesh (axes tp × cp;
+    t=1 with c>1 is the pure-CP layout): prefill runs ``cp_prefill`` on
+    the CP-padded prompt — per-layer ring KV exchange, one cp allreduce
+    for the last hidden state — and the ring-assembled full cache lands in
+    the slot row (contiguous) or the slot's pages (paged) exactly like a
+    c=1 prefill's.  The decode step is the same jitted fn at any c, run
+    replicated over the cp axis (DESIGN.md §9)."""
 
     def __init__(self, cfg: ModelConfig, params, num_slots: int,
                  max_len: int = 256, t: int = 2, unroll: bool = False,
                  paged: bool = False, page_size: int = 16,
-                 num_pages: Optional[int] = None):
-        super().__init__(cfg, num_slots, max_len, t=t, p=1, paged=paged,
-                         page_size=page_size, num_pages=num_pages)
+                 num_pages: Optional[int] = None, c: int = 1):
+        super().__init__(cfg, num_slots, max_len, t=t, p=1, c=c,
+                         paged=paged, page_size=page_size,
+                         num_pages=num_pages)
         if cfg.family != "dense":
             raise ValueError("explicit TP engine covers the dense family")
         self.params = params
-        self.mesh = px.make_tp_mesh(t)
+        self._unroll = unroll
+        self.mesh = px.make_tp_cp_mesh(t, c)
         shard = lambda sp: NamedSharding(self.mesh, sp)
-        kv_spec = shard(P(None, None, None, "tp", None))
+        kv_spec = shard(P(None, None, None, "tp" if t > 1 else None, None))
         if self.paged:
             self._paged_fn = px.tp_paged_step(cfg, self.mesh, unroll=unroll)
             self.cache = {
@@ -351,11 +459,19 @@ class TPBackend(_BackendBase):
                                self.page_size, cfg.num_kv_heads,
                                cfg.head_dim), jnp.dtype(cfg.dtype)), kv_spec)
                 for key in ("k", "v")}
+            if c > 1:
+                self._cp_fns = {}       # padded prompt len -> cp_prefill fn
+                self._seed = jax.jit(_seed_pages, donate_argnums=(0,))
         else:
             self.cache_w = get_model(cfg).cache_width(max_len)
-            self._prefill = px.tp_prefill(cfg, self.mesh,
-                                          cache_w=self.cache_w,
-                                          unroll=unroll)
+            if c > 1:
+                self._prefill = px.cp_prefill(cfg, self.mesh,
+                                              cache_w=self.cache_w,
+                                              unroll=unroll)
+            else:
+                self._prefill = px.tp_prefill(cfg, self.mesh,
+                                              cache_w=self.cache_w,
+                                              unroll=unroll)
             self._step = px.tp_decode_step(cfg, self.mesh, unroll=unroll,
                                            vector_pos=True)
             self.cache = {
@@ -366,8 +482,26 @@ class TPBackend(_BackendBase):
                 for key in ("k", "v")}
             self._write = jax.jit(_write_slot, donate_argnums=(0,))
 
+    def _cp_fn(self, cache_w: int):
+        """CP prefill fn seeding a width-``cache_w`` staging cache (paged
+        mode sizes it to the padded prompt so the page scatter writes
+        exactly the allocated rows)."""
+        if cache_w not in self._cp_fns:
+            self._cp_fns[cache_w] = px.cp_prefill(
+                self.cfg, self.mesh, cache_w=cache_w, unroll=self._unroll)
+        return self._cp_fns[cache_w]
+
     def _prefill_one(self, prompt):
-        return self._prefill(self.params, prompt)
+        if self.c > 1:
+            padded, last = self._pad_prompt(prompt)
+            fn = self._cp_fn(len(padded)) if self.paged else self._prefill
+            return fn(self.params, self._as_prompt(padded), jnp.int32(last))
+        return self._prefill(self.params, self._as_prompt(prompt))
+
+    def _seed_slot_pages(self, small, slot: int) -> None:
+        n = len(self.pool.block_table(slot))
+        bt = jnp.asarray(self.block_tables[slot:slot + 1, :n])
+        self.cache = self._seed(self.cache, small, bt)
 
     def _paged_call(self, tokens, pos, bt, phase: str) -> np.ndarray:
         logits, self.cache = self._paged_fn(
@@ -392,6 +526,20 @@ class TPBackend(_BackendBase):
         return self._step.lower(self.params, self.cache, tok,
                                 pos).compile().as_text()
 
+    def prefill_hlo(self, prompt_len: int) -> str:
+        """Compiled HLO of one batch-1 prefill at a (CP-padded) prompt
+        length — under c>1 the module shows the per-layer ring permutes
+        and the cp allreduce next to the TP schedule, asserted against
+        ``prefill_comm_ops`` / ``commodel.cp_comm_ops``."""
+        if self.c > 1 and prompt_len % self.c:
+            raise ValueError(f"prompt_len must be a multiple of c={self.c}")
+        tok = jax.ShapeDtypeStruct((1, prompt_len), jnp.int32)
+        if self.c > 1:
+            fn = (self._cp_fn(prompt_len) if self.paged else self._prefill)
+            last = jax.ShapeDtypeStruct((), jnp.int32)
+            return fn.lower(self.params, tok, last).compile().as_text()
+        return self._prefill.lower(self.params, tok).compile().as_text()
+
     def paged_step_hlo(self, q_len: int, batch: int = 1) -> str:
         """Compiled HLO of one paged pass at chunk length ``q_len`` — the
         per-chunk (and, at q_len=1, per-decode-step) collective-count
@@ -405,19 +553,26 @@ class TPBackend(_BackendBase):
 
 
 class PPBackend(_BackendBase):
-    """PipelineEngine (pure PP when t=1, hybrid TP×PP when t>1) behind the
-    protocol: per-stage slot caches, one decode step = one token through all
-    p stages with (p-1)·2 logged boundary transfers."""
+    """PipelineEngine (pure PP when t=1, hybrid TP×CP×PP otherwise) behind
+    the protocol: per-stage slot caches, one decode step = one token through
+    all p stages with (p-1)·2 logged boundary transfers.
+
+    ``c > 1`` CP-shards each stage's prefill over the stage's cp mesh axis
+    (boundary hops shrink to [S/c, h/t] per worker); the ring-assembled
+    per-stage caches land in the stage slot rows or page pools, and decode
+    runs the unchanged per-stage steps replicated over cp (DESIGN.md §9)."""
 
     def __init__(self, cfg: ModelConfig, params, num_slots: int,
                  max_len: int = 256, t: int = 1, p: int = 2,
                  unroll: bool = False, devices=None, paged: bool = False,
-                 page_size: int = 16, num_pages: Optional[int] = None):
-        super().__init__(cfg, num_slots, max_len, t=t, p=p, paged=paged,
-                         page_size=page_size, num_pages=num_pages)
+                 page_size: int = 16, num_pages: Optional[int] = None,
+                 c: int = 1):
+        super().__init__(cfg, num_slots, max_len, t=t, p=p, c=c,
+                         paged=paged, page_size=page_size,
+                         num_pages=num_pages)
         if cfg.family != "dense":
             raise ValueError("PipelineEngine covers the dense family")
-        self.engine = px.PipelineEngine(cfg, t=t, p=p, unroll=unroll,
+        self.engine = px.PipelineEngine(cfg, t=t, p=p, c=c, unroll=unroll,
                                         devices=devices)
         self.staged = self.engine.prepare(params)
         self.caches = []
@@ -439,25 +594,40 @@ class PPBackend(_BackendBase):
                                     cfg.num_kv_heads, cfg.head_dim),
                                    jnp.dtype(cfg.dtype))
                     for key in ("k", "v")}
-            if t > 1:
+            if t > 1 or c > 1:
                 leaves = {
                     key: jax.device_put(
-                        a, NamedSharding(self.engine.meshes[s],
-                                         P(None, None, None, "tp", None)))
+                        a, NamedSharding(
+                            self.engine.meshes[s],
+                            P(None, None, None,
+                              "tp" if t > 1 else None, None)))
                     for key, a in leaves.items()}
             self.caches.append(leaves)
         self._writes = [jax.jit(_write_slot, donate_argnums=(0,))
                         for _ in range(p)]
+        if self.paged and c > 1:
+            self._seed = jax.jit(_seed_pages, donate_argnums=(0,))
         self._drained = 0              # transfer-log cursor
 
     def _prefill_one(self, prompt):
-        return self.engine.prefill_with_cache(self.staged, prompt,
-                                              cache_w=self.cache_w)
+        if self.c > 1:
+            padded, last = self._pad_prompt(prompt)
+            w = len(padded) if self.paged else self.cache_w
+            return self.engine.prefill_with_cache(
+                self.staged, self._as_prompt(padded), cache_w=w, last=last)
+        return self.engine.prefill_with_cache(
+            self.staged, self._as_prompt(prompt), cache_w=self.cache_w)
 
     def _scatter(self, small, slot: int) -> None:
         self.caches = [
             self._writes[s](self.caches[s], small[s], jnp.int32(slot))
             for s in range(self.p)]
+
+    def _seed_slot_pages(self, small, slot: int) -> None:
+        n = len(self.pool.block_table(slot))
+        bt = jnp.asarray(self.block_tables[slot:slot + 1, :n])
+        self.caches = [self._seed(self.caches[s], small[s], bt)
+                       for s in range(self.p)]
 
     def _paged_call(self, tokens, pos, bt, phase: str) -> np.ndarray:
         logits, self.caches = self.engine.paged_pass(
@@ -510,25 +680,34 @@ def make_backend(kind: str, cfg: ModelConfig, params, num_slots: int,
                  max_len: int = 256, t: int = 1, p: int = 1,
                  unroll: bool = False, paged: bool = False,
                  page_size: int = 16,
-                 num_pages: Optional[int] = None) -> DecodeBackend:
+                 num_pages: Optional[int] = None,
+                 c: int = 1) -> DecodeBackend:
     """Backend factory keyed by engine kind: "gspmd" | "tp" | "pp".
 
-    Degenerate layouts are rejected, not coerced — a silently bumped t/p
+    Degenerate layouts are rejected, not coerced — a silently bumped t/c/p
     would attribute measured SLOs to a layout the caller never asked for.
     ``paged=True`` swaps the contiguous slot cache for the KVPool-managed
-    page pools and enables chunked prefill (DESIGN.md §8).
+    page pools and enables chunked prefill (DESIGN.md §8).  ``c > 1`` adds
+    context-parallel prefill on the explicit engines (DESIGN.md §9): the
+    pure-CP layout (t=1, c>1, p=1) goes through the "tp" kind — the
+    single-stage explicit engine on a cp-only mesh.
     """
     kw = dict(paged=paged, page_size=page_size, num_pages=num_pages)
     if kind == "gspmd":
+        if c > 1:
+            raise ValueError(
+                "context parallelism needs the explicit engines — use the "
+                "tp (single-stage) or pp backend with c > 1")
         return ModelBackend(cfg, params, num_slots, max_len, **kw)
     if kind == "tp":
-        if t < 2:
-            raise ValueError(f"tp backend needs t >= 2, got t={t}")
-        return TPBackend(cfg, params, num_slots, max_len, t=t, unroll=unroll,
-                         **kw)
+        if t < 2 and c < 2:
+            raise ValueError(
+                f"tp backend needs t >= 2 or c >= 2, got t={t} c={c}")
+        return TPBackend(cfg, params, num_slots, max_len, t=t, c=c,
+                         unroll=unroll, **kw)
     if kind == "pp":
         if p < 2:
             raise ValueError(f"pp backend needs p >= 2, got p={p}")
-        return PPBackend(cfg, params, num_slots, max_len, t=t, p=p,
+        return PPBackend(cfg, params, num_slots, max_len, t=t, c=c, p=p,
                          unroll=unroll, **kw)
     raise ValueError(f"unknown backend kind: {kind!r}")

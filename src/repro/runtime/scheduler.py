@@ -211,6 +211,11 @@ class Scheduler:
                 raise ValueError(
                     "chunked prefill writes straight into KV pages; "
                     "construct the backend with paged=True")
+            if getattr(backend, "c", 1) > 1:
+                raise ValueError(
+                    "chunked prefill and context parallelism are "
+                    "alternative long-prompt strategies (DESIGN.md §9); "
+                    "a c>1 backend prefills monolithically")
             # per-chunk counts are chunk-length-invariant (commodel.
             # chunked_prefill_ops) — compute once at the nominal size
             self._chunk_counts = self._count(
@@ -239,10 +244,13 @@ class Scheduler:
     def submit(self, requests) -> None:
         reqs = [requests] if isinstance(requests, Request) else list(requests)
         paged = getattr(self.backend, "paged", False)
+        c = getattr(self.backend, "c", 1)
         for r in reqs:
             # the last generated token is never fed back, so the highest
-            # cache position written is prompt_len + max_new_tokens - 2
-            need = r.prompt_len + r.max_new_tokens - 1
+            # cache position written is prompt_len + max_new_tokens - 2;
+            # CP pads the prompt to a multiple of c (DESIGN.md §9)
+            need = max(r.prompt_len + r.max_new_tokens - 1,
+                       -(-r.prompt_len // c) * c)
             w = self.backend.cfg.sliding_window
             if need > self.backend.max_len and not w:
                 raise ValueError(
@@ -293,12 +301,13 @@ class Scheduler:
                 # admission claims the slot's pages and commits the decode
                 # budget; chunked mode then advances one chunk per
                 # iteration, non-chunked prefills as one maximal chunk
+                # (one sequence-sharded CP pass on a c>1 backend)
                 self.backend.begin_prefill(slot, req.prompt_len,
                                            req.max_new_tokens)
                 if self.chunk_size is not None:
                     self.prefilling[slot] = _Prefilling(req, m)
                     continue
-                first = int(self.backend.prefill_chunk(slot, req.prompt, 0))
+                first = int(self.backend.prefill_whole(slot, req.prompt))
                 self.backend.finish_prefill(slot)
             else:
                 first = int(self.backend.prefill_into_slots([req.prompt],

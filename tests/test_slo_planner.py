@@ -65,27 +65,120 @@ class TestFig10Hybrid:
 
 class TestPlanner:
     def test_feasible_layouts_respect_divisibility(self):
-        for t, p in feasible_layouts(L3, 8):
+        for t, c, p in feasible_layouts(L3, 8):
+            assert t * c * p == 8
             assert L3.num_kv_heads % t == 0
-            assert L3.num_layers % p == 0
+            assert p <= L3.num_layers
+
+    def test_indivisible_layer_counts_are_feasible(self):
+        """Satellite fix: PR 2's ``stage_layer_partition`` made p ∤ L legal
+        in the engines (remainder spread over early stages), so the planner
+        must enumerate those layouts — Llama-3.2-3B has 28 layers and p=8
+        used to be silently excluded."""
+        from repro.core.commodel import stage_layer_partition
+        assert L3.num_layers == 28
+        layouts = feasible_layouts(L3, 8)
+        assert (1, 1, 8) in layouts                   # 28 % 8 != 0
+        assert (2, 1, 4) in layouts
+        for t, c, p in layouts:
+            sizes = stage_layer_partition(L3.num_layers, p)
+            assert sum(sizes) == L3.num_layers        # every layer assigned
+            assert min(sizes) >= 1                    # no empty stage
+        # a p > num_layers layout would leave empty stages: still rejected
+        import dataclasses
+        tiny = dataclasses.replace(L3, num_layers=4)
+        assert all(p <= 4 for _, _, p in feasible_layouts(tiny, 8))
+        # and the scored plan ranks the indivisible layout, not just lists it
+        cands = plan(L3, 8, 128, 128, objective="e2e")
+        assert any(c.pipeline_parallel == 8 for c in cands)
 
     def test_short_sequence_prefers_tp(self):
-        """Paper §V-C: interactive short-seq workloads ⇒ pure TP."""
+        """Paper §V-C: interactive short-seq workloads ⇒ pure TP — CP in
+        the enumeration must NOT displace it (pure overhead at S_p=128)."""
         best = recommend(L13, 8, 128, 128, objective="ttft")
         assert best.pipeline_parallel == 1
+        assert best.context_parallel == 1
         assert best.tensor_parallel == 8
 
-    def test_volume_objective_prefers_pp(self):
-        """Paper §V-C: bandwidth-constrained fabric ⇒ PP."""
-        best = recommend(L13, 8, 128, 2048, objective="volume")
-        assert best.tensor_parallel == 1
-        assert best.pipeline_parallel == 8
+    def test_long_prompt_prefers_cp(self):
+        """arXiv:2408.10197 / DESIGN.md §9: a prefill-dominated long-prompt
+        workload shards the sequence — the TTFT-best 8-chip layout carries
+        c > 1 once the prompt is long enough."""
+        best = recommend(L13, 8, 16384, 128, objective="ttft")
+        assert best.context_parallel > 1
+        assert best.pipeline_parallel == 1            # PP only hurts TTFT
 
-    def test_volume_budget_excludes_tp(self):
+    def test_volume_objective_prefers_pp_among_non_cp(self):
+        """Paper §V-C: bandwidth-constrained fabric ⇒ PP.  With CP in the
+        enumeration the global volume optimum may replicate decode over the
+        cp axis (zero decode comm — a real 'prefill-sharded' config), but
+        among the paper's own (t, p) plane PP=8 must stay volume-optimal
+        and the overall winner can only improve on it."""
+        cands = plan(L13, 8, 128, 2048, objective="volume")
+        non_cp = [x for x in cands if x.context_parallel == 1]
+        assert non_cp[0].tensor_parallel == 1
+        assert non_cp[0].pipeline_parallel == 8
+        assert cands[0].slo.comm_volume <= non_cp[0].slo.comm_volume
+
+    def test_volume_budget_excludes_over_budget_with_cp(self):
+        """Satellite: volume_budget still ranks over-budget layouts last
+        with CP in the enumeration — every in-budget candidate (any c)
+        respects the cap and precedes every over-budget one."""
+        budget = 120 * 2**20
         cands = plan(L13, 8, 128, 512, objective="e2e",
-                     volume_budget=50 * 2**20)
-        feasible = [c for c in cands if c.score != float("inf")]
-        assert all(c.slo.comm_volume <= 50 * 2**20 for c in feasible)
+                     volume_budget=budget)
+        feasible = [x for x in cands if x.score != float("inf")]
+        assert feasible, "some layout must fit the budget"
+        assert all(x.slo.comm_volume <= budget for x in feasible)
+        over = [x for x in cands if x.score == float("inf")]
+        assert all(cands.index(f) < cands.index(o)
+                   for f in feasible for o in over)
+
+
+class TestCPScaling:
+    """DESIGN.md §9 SLO guidance: CP wins TTFT on long prompts, is pure
+    overhead on short ones, and never touches decode."""
+
+    def test_ttft_improves_with_cp_on_long_prompts(self):
+        vals = [predict_slo(L13, 8192, 128, t=2, c=c).ttft
+                for c in (1, 2, 4, 8)]
+        assert vals == sorted(vals, reverse=True)     # strictly improving
+        assert vals[-1] < vals[0] / 3                 # and substantially
+
+    def test_cp_is_overhead_on_short_prompts_at_fixed_chips(self):
+        """At a fixed 8-chip budget and short prompts, trading TP degree
+        for CP degree must not beat pure TP (the ring + extra allreduce
+        buy nothing a bigger allreduce group didn't already)."""
+        base = predict_slo(L13, 64, 128, t=8, c=1).ttft
+        for t, c in ((4, 2), (2, 4), (1, 8)):
+            assert predict_slo(L13, 64, 128, t=t, c=c).ttft >= base
+
+    def test_decode_terms_independent_of_cp(self):
+        for c in (2, 4):
+            r1 = predict_slo(L13, 2048, 256, t=2, c=1)
+            rc = predict_slo(L13, 2048, 256, t=2, c=c)
+            assert rc.tpot == pytest.approx(r1.tpot)
+            assert rc.breakdown["decode_comm_per_tok"] == pytest.approx(
+                r1.breakdown["decode_comm_per_tok"])
+
+    def test_ttft_monotone_in_cp_property(self):
+        """Hypothesis sweep of the satellite claim: for long prompts, TTFT
+        is non-increasing in the CP degree at a fixed TP degree."""
+        pytest.importorskip("hypothesis")
+        import hypothesis.strategies as st
+        from hypothesis import given, settings
+
+        @given(sp=st.integers(min_value=4096, max_value=65536),
+               t=st.sampled_from([1, 2, 4]),
+               ci=st.integers(min_value=0, max_value=2))
+        @settings(max_examples=60, deadline=None)
+        def check(sp, t, ci):
+            c_lo, c_hi = (1, 2, 4)[ci], (2, 4, 8)[ci]
+            lo = predict_slo(L13, sp, 128, t=t, c=c_lo).ttft
+            hi = predict_slo(L13, sp, 128, t=t, c=c_hi).ttft
+            assert hi <= lo + 1e-12
+
+        check()
 
 
 class TestSLOSanity:
