@@ -31,10 +31,53 @@ CHECKS = [
      ("decode_collective_counts",)),
     (os.path.join(REPO, "BENCH_serve.json"),
      os.path.join(REPO, "results", "BENCH_serve.dryrun.json"),
-     ("series", "arch", "backend", "tp", "cp", "pp", "paged"),
+     ("series", "arch", "backend", "tp", "cp", "pp", "paged", "admission"),
      ("decode_collective_counts", "prefill_chunk_counts",
-      "prefill_collective_counts")),
+      "prefill_collective_counts", "recompute_collective_counts")),
 ]
+
+SERVE_DRY = os.path.join(REPO, "results", "BENCH_serve.dryrun.json")
+
+
+def check_overload_ordering(dry_path=SERVE_DRY):
+    """Gate the overload series (DESIGN.md §10) WITHIN the dry-run file:
+    optimistic admission must pack at least as many tokens into each fused
+    decode step as conservative on the same trace, conservative must never
+    preempt, and every optimistic preemption must have logged exactly one
+    recompute pass.  ``tokens_per_decode_step`` is trace-size-dependent, so
+    it is compared between the two fresh records, never against the
+    checked-in full-series baseline."""
+    if not os.path.exists(dry_path):
+        return [f"{dry_path} missing — run the --dry-run bench first"]
+    with open(dry_path) as f:
+        recs = [r for r in json.load(f) if r.get("series") == "overload"]
+    by_adm = {r.get("admission"): r for r in recs}
+    if set(by_adm) != {"conservative", "optimistic"}:
+        return [f"overload series incomplete: got {sorted(by_adm)}"]
+    cons, opt = by_adm["conservative"], by_adm["optimistic"]
+    failures = []
+    if opt["tokens_per_decode_step"] < cons["tokens_per_decode_step"]:
+        failures.append(
+            "overload: optimistic admission packs FEWER tokens per decode "
+            f"step than conservative ({opt['tokens_per_decode_step']:.3f} "
+            f"< {cons['tokens_per_decode_step']:.3f}) — preemption "
+            "recovery is costing more steps than overcommit saves")
+    if cons["preemptions"] != 0:
+        failures.append(
+            f"overload: conservative admission preempted "
+            f"{cons['preemptions']} times — its worst-case page "
+            "commitment should make mid-decode exhaustion impossible")
+    if opt["recompute_steps"] != opt["preemptions"]:
+        failures.append(
+            f"overload: {opt['preemptions']} preemptions but "
+            f"{opt['recompute_steps']} recompute StepRecords — every "
+            "preemption must log exactly one recompute pass")
+    for rec in (cons, opt):
+        if rec["total_tokens"] != cons["total_tokens"]:
+            failures.append(
+                "overload: admission policies produced different token "
+                "totals on the same trace — greedy determinism broken")
+    return failures
 
 
 def _index(records, key_fields):
@@ -74,13 +117,14 @@ def main():
     failures = []
     for baseline, dry, keys, counts in CHECKS:
         failures += check(baseline, dry, keys, counts)
+    failures += check_overload_ordering()
     if failures:
         print("BASELINE DRIFT — predicted collective counts changed:")
         for f in failures:
             print(f"  {f}")
         sys.exit(1)
     print("baseline check OK: predicted collective counts match "
-          "BENCH_decode.json / BENCH_serve.json")
+          "BENCH_decode.json / BENCH_serve.json, overload ordering holds")
 
 
 if __name__ == "__main__":

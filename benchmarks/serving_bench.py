@@ -7,7 +7,7 @@ measurement — measured TTFT / TPOT / E2E sit next to the analytical
 ``core.slo.predict_slo`` prediction for the same layout, so the two sides of
 the paper's methodology (measure + model) face each other at request level.
 
-Three series (4-device host-platform mesh):
+Four series (4-device host-platform mesh):
 
   short       gspmd / tp2 / pp2, contiguous slots, prompts 8–48 at three
               arrival rates — the original throughput-vs-latency sweep
@@ -19,6 +19,15 @@ Three series (4-device host-platform mesh):
               single-stage engine at cp ∈ {1, 2, 4} (DESIGN.md §9):
               per-prompt-length mean TTFT (``ttft_by_prompt_len``) shows
               where sequence-sharded prefill starts paying for its ring
+  overload    an EOS-heavy closed trace (``eos_prob``) on an oversubscribed
+              page pool, conservative vs optimistic admission (DESIGN.md
+              §10): optimistic packs more requests per fused decode step
+              and pays with preemption-by-recompute — check_baselines
+              gates ``tokens_per_decode_step`` (optimistic ≥ conservative,
+              compared within the dry-run file: it is trace-dependent, so
+              it is not diffed against the full-series baseline) and the
+              recompute collective counts; the run completing at all is
+              the zero-MemoryError-escapes assertion
 
 Every record carries the *predicted* per-step decode collective counts (and,
 for paged runs, the per-chunk prefill counts; for CP runs, the per-prefill
@@ -59,6 +68,14 @@ LONG_REQUESTS = 8
 LONG_QUANTUM = 32
 CHUNK_SIZE = 64
 PAGE_SIZE = 16
+
+# overload series: EOS-heavy mix on a pool that cannot hold every slot's
+# worst case at once (DESIGN.md §10)
+OV_REQUESTS = 16
+OV_PROMPT_LENS = (8, 32)
+OV_DECODE_LENS = (6, 20)
+OV_MAX_LEN = 64
+OV_EOS_PROB = 0.3
 
 
 def _measure(dry_run: bool = False):
@@ -209,6 +226,75 @@ def _measure(dry_run: bool = False):
             "predicted_tpot_s": pred.tpot,
             "predicted_e2e_s": pred.e2e,
         })
+    # -- overload series: conservative vs optimistic admission on an
+    #    oversubscribed pool, EOS-heavy closed trace (DESIGN.md §10).  Both
+    #    policies serve the identical trace to completion (greedy decode is
+    #    deterministic, so both produce identical token streams — the bench
+    #    finishing IS the zero-MemoryError-escapes check); optimistic packs
+    #    more live requests per fused step and pays in recompute passes.
+    from repro.core.commodel import preemption_recompute_ops
+    from repro.core.slo import predict_goodput
+
+    ov_n = DRY_REQUESTS if dry_run else OV_REQUESTS
+    otrace = make_poisson_trace(ov_n, 0.0, cfg.vocab_size,
+                                prompt_lens=OV_PROMPT_LENS,
+                                decode_lens=OV_DECODE_LENS, seed=13,
+                                quantum=8, eos_prob=OV_EOS_PROB)
+    pages_worst = -(-(OV_PROMPT_LENS[1] + OV_DECODE_LENS[1] - 1)
+                    // PAGE_SIZE)
+    # ~40% of worst-case parity: each request still fits alone (the
+    # max() floor is the livelock-freedom condition — a lone survivor can
+    # always finish), but the full slot set cannot, so optimistic
+    # admission must actually preempt when the EOS-heavy mix's tail
+    # requests run their whole budget
+    ov_pages = 1 + max(pages_worst, num_slots * pages_worst * 2 // 5)
+    owarm = sorted({r.prompt_len for r in otrace})
+    eos_mean = float(np.mean([r.eos_pos if r.eos_pos is not None
+                              else r.max_new_tokens for r in otrace]))
+    for admission in ("conservative", "optimistic"):
+        backend = make_backend("gspmd", cfg, params, num_slots=num_slots,
+                               max_len=OV_MAX_LEN, paged=True,
+                               page_size=PAGE_SIZE, num_pages=ov_pages)
+        sched = lambda: Scheduler(backend, admission=admission)
+        wrng = np.random.default_rng(1)
+        sched().run([Request(rid=10_000 + j,
+                             prompt=wrng.integers(2, cfg.vocab_size, s),
+                             max_new_tokens=2)
+                     for j, s in enumerate(owarm)])
+        report = sched().run(otrace)
+        s = report.summary()
+        decode_steps = len([r for r in report.steps
+                            if r.phase == "decode"])
+        gp = predict_goodput(
+            cfg, sum(OV_PROMPT_LENS) // 2, sum(OV_DECODE_LENS) // 2,
+            num_slots=num_slots,
+            capacity_tokens=(ov_pages - 1) * PAGE_SIZE,
+            eos_mean=eos_mean, admission=admission)
+        results.append({
+            "series": "overload", "arch": cfg.name,
+            "backend": f"gspmd-paged-{admission}", "tp": 1, "cp": 1,
+            "pp": 1, "paged": True, "chunk_size": None,
+            "admission": admission, "num_slots": num_slots,
+            "rate_req_s": 0.0, **s,
+            "pool_pages": ov_pages, "eos_prob": OV_EOS_PROB,
+            "decode_steps": decode_steps,
+            "recompute_steps": len([r for r in report.steps
+                                    if r.phase == "recompute"]),
+            # deterministic packing metric: counts are clock-independent on
+            # a closed trace, so this is gatable (within one file) while
+            # wall-clock throughput is not
+            "tokens_per_decode_step":
+                s["total_tokens"] / max(decode_steps, 1),
+            "decode_collective_counts":
+                step_collective_counts(backend, 1),
+            # recompute collectives == a prefill's (counts are prefix-
+            # length-invariant; only bytes scale)
+            "recompute_collective_counts":
+                _count(preemption_recompute_ops(cfg, 32, 1, 1,
+                                                gather_mode="allgather")),
+            "predicted_goodput_tok_s": gp.goodput_tok_s,
+            "predicted_preempt_rate": gp.preempt_rate,
+        })
     print("SERVEJSON:" + json.dumps(results))
 
 
@@ -257,8 +343,9 @@ def main(dry_run: bool = False):
     mode = (f"dry-run smoke, {DRY_REQUESTS} reqs, {DRY_SLOTS} slots"
             if dry_run
             else f"{N_REQUESTS} reqs × {RATES}, {NUM_SLOTS} slots")
-    print(f"Continuous-batching serving — gspmd/tp2/pp2 + paged, short & "
-          f"long-context traces ({mode}, Poisson arrivals)")
+    print(f"Continuous-batching serving — gspmd/tp2/pp2 + paged, short, "
+          f"long-context & overload-admission traces ({mode}, "
+          f"Poisson arrivals)")
     rs = rows(dry_run)
     for r in rs:
         print(f"  {r[0]:60s} {r[2]}")

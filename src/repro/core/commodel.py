@@ -403,3 +403,22 @@ def comm_ops_for(cfg: ModelConfig, s_p: int, s_d: int, t: int = 1, p: int = 1,
     ops += cp_comm_ops(cfg, s_p, c, t=t, b=b, batch=batch)
     ops += moe_comm_ops(cfg, s_eff, s_d, e, b=b, batch=batch)
     return ops
+
+
+def preemption_recompute_ops(cfg: ModelConfig, prefix_len: int, t: int = 1,
+                             p: int = 1, *, c: int = 1, b: int = 2,
+                             batch: int = 1,
+                             gather_mode: str = "gather") -> List[CommOp]:
+    """Collectives of ONE preemption's recompute pass (DESIGN.md §10).
+
+    Preemption-by-recompute re-admits an evicted request by re-prefilling
+    its prompt + generated prefix (``prefix_len`` positions) in one
+    monolithic pass — so the recovery cost is exactly a prefill's
+    communication, with no decode rows: the prefill-phase rows of
+    ``comm_ops_for`` at ``s_p = prefix_len``.  The scheduler logs these
+    counts on each phase="recompute" StepRecord, extending the house
+    invariant (predicted == compiled == measured) to the failure path.
+    """
+    ops = comm_ops_for(cfg, prefix_len, 1, t, p, c=c, b=b, batch=batch,
+                       gather_mode=gather_mode)
+    return [o for o in ops if o.phase == "prefill"]

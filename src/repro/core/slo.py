@@ -165,3 +165,100 @@ def predict_slo(cfg: ModelConfig, s_p: int, s_d: int, t: int = 1, p: int = 1,
         "decode_comm_per_tok": decode_comm,
         "nodes": nodes, "tp_cross": tp_cross, "cross_links": cross_links,
     })
+
+
+# ---------------------------------------------------------------------------
+# goodput under overload (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+
+def recompute_time(cfg: ModelConfig, prefix_len: int, t: int = 1, p: int = 1,
+                   hw: HardwareProfile = H100_NODE,
+                   ov: EngineOverheads = DEFAULT_OVERHEADS,
+                   batch: int = 1, dtype_bytes: int = 2,
+                   c: int = 1) -> float:
+    """Wall time of ONE preemption's recompute pass: the TTFT of a
+    ``prefix_len``-token prefill minus the per-request frontend overhead
+    (the request is already tokenized and scheduled — recovery re-runs the
+    model, not the frontend).  The communication inside is
+    ``commodel.preemption_recompute_ops``."""
+    rep = predict_slo(cfg, prefix_len, 1, t, p, hw=hw, ov=ov, batch=batch,
+                      dtype_bytes=dtype_bytes, c=c)
+    return max(0.0, rep.ttft - ov.request_overhead)
+
+
+@dataclasses.dataclass
+class GoodputReport:
+    """Predicted serving capacity of one admission policy under a given
+    request mix and KV-cache budget."""
+
+    concurrency: int          # requests decoding at once (slot- or page-bound)
+    preempt_rate: float       # expected preemptions per request
+    recompute_s: float        # wall cost of one recompute pass
+    service_s: float          # per-request service time incl. recovery
+    goodput_tok_s: float      # useful tokens completed per second
+    breakdown: Dict[str, float]
+
+    def row(self) -> str:
+        return (f"conc {self.concurrency:3d}  preempt/req "
+                f"{self.preempt_rate:5.2f}  service {self.service_s:6.3f} s  "
+                f"goodput {self.goodput_tok_s:8.1f} tok/s")
+
+
+def predict_goodput(cfg: ModelConfig, s_p: int, s_d: int, *,
+                    num_slots: int, capacity_tokens: int,
+                    eos_mean: float = None, admission: str = "conservative",
+                    t: int = 1, p: int = 1,
+                    hw: HardwareProfile = H100_NODE,
+                    ov: EngineOverheads = DEFAULT_OVERHEADS,
+                    dtype_bytes: int = 2, c: int = 1) -> GoodputReport:
+    """Goodput of a slot/page-bound serving engine under overload.
+
+    The request mix decodes ``eos_mean`` tokens on average (early stop;
+    defaults to the full budget ``s_d``) but commits ``s_d`` at admission.
+    Conservative admission reserves each request's worst case
+    (``s_p + s_d - 1`` cache positions), so concurrency is bound by
+    ``capacity_tokens // worst`` even though most requests never grow that
+    far — the stranded-capacity effect.  Optimistic admission packs by the
+    *actual* footprint (``s_p + eos_mean - 1``) and pays for the
+    overcommit with preemptions: when the expected live footprint
+    ``concurrency × actual`` exceeds capacity, the overflow fraction is
+    recovered by recompute passes of the mean preempted prefix
+    (``recompute_time``).  Goodput divides useful tokens by the per-request
+    service time including that recovery tax — the quantity the overload
+    series of benchmarks/serving_bench.py measures."""
+    if admission not in ("conservative", "optimistic"):
+        raise ValueError(f"unknown admission policy {admission!r}")
+    n_eff = float(s_d if eos_mean is None else min(eos_mean, s_d))
+    if n_eff < 1:
+        raise ValueError(f"eos_mean must be >= 1, got {eos_mean}")
+    worst = s_p + s_d - 1
+    actual = s_p + n_eff - 1.0
+    if admission == "conservative":
+        concurrency = min(num_slots, capacity_tokens // worst)
+        preempt_rate = 0.0
+    else:
+        # optimistic admits on CURRENT need (the prompt's pages) — so the
+        # admitted set is prompt-bound, its live footprint can overflow
+        # capacity, and the overflow is recovered by preemption
+        admitted = min(num_slots, int(capacity_tokens // s_p))
+        preempt_rate = max(0.0, admitted * actual / capacity_tokens - 1.0)
+        # steady-state decoding set is what the actual footprint sustains
+        concurrency = min(admitted, int(capacity_tokens // actual))
+    concurrency = max(concurrency, 1) if capacity_tokens >= worst else 0
+    if concurrency == 0:
+        return GoodputReport(0, 0.0, 0.0, float("inf"), 0.0,
+                             {"worst_tokens": worst, "actual_tokens": actual})
+    base = predict_slo(cfg, s_p, int(round(n_eff)), t, p, hw=hw, ov=ov,
+                       batch=concurrency, dtype_bytes=dtype_bytes, c=c)
+    # a preemption strikes mid-decode: mean recomputed prefix is the prompt
+    # plus half the decoded tokens
+    rec = recompute_time(cfg, int(s_p + n_eff / 2), t, p, hw=hw, ov=ov,
+                         dtype_bytes=dtype_bytes, c=c)
+    service = base.e2e + preempt_rate * rec
+    goodput = concurrency * n_eff / service
+    return GoodputReport(
+        concurrency=int(concurrency), preempt_rate=preempt_rate,
+        recompute_s=rec, service_s=service, goodput_tok_s=goodput,
+        breakdown={"worst_tokens": float(worst), "actual_tokens": actual,
+                   "e2e_s": base.e2e, "recovery_s": preempt_rate * rec})

@@ -183,14 +183,26 @@ class _BackendBase:
         return prompt_len if self.c == 1 else \
             -(-prompt_len // self.c) * self.c
 
-    def can_admit(self, prompt_len: int, max_new_tokens: int = 1) -> bool:
+    def can_admit(self, prompt_len: int, max_new_tokens: int = 1,
+                  optimistic: bool = False) -> bool:
         """True when the pool can cover this request's WORST case (prompt +
         max_new_tokens - 1 positions, or the CP-padded prompt if longer) on
         top of every live request's committed future growth.  Without
         preemption (DESIGN.md §7/8) this admission gate is what keeps an
         oversubscribed pool from running out of pages mid-decode: a request
-        the gate rejects stays queued until evictions free pages."""
+        the gate rejects stays queued until evictions free pages.
+
+        ``optimistic=True`` (DESIGN.md §10) gates only on the request's
+        CURRENT need — the pages its prompt/prefix claims at ``begin_prefill``
+        — ignoring everyone's future decode growth.  Mid-decode page
+        exhaustion then becomes possible and is the scheduler's problem
+        (preemption-by-recompute); the payoff is that EOS-heavy traffic no
+        longer strands pool capacity on decode budgets that never
+        materialize."""
         self._require_paged()
+        if optimistic:
+            return self.pool.free_pages >= \
+                self._pages_for(self._alloc_len(prompt_len))
         committed = sum(
             max(0, self._worst.get(s, 0) - len(self.pool.block_table(s)))
             for s in self.pool.owners())

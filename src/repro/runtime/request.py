@@ -3,10 +3,22 @@
 The paper's SLO study is about *serving*: requests with distinct arrival
 times, prompt lengths and decode budgets.  This module is the request-level
 vocabulary the continuous-batching scheduler (runtime/scheduler.py) consumes:
-a :class:`Request` (prompt + decode budget + arrival time), the
-:class:`RequestMetrics` record (TTFT / TPOT / E2E — the paper's Fig. 8–10
-quantities, measured instead of predicted), and a Poisson trace generator for
-benchmarks/serving_bench.py.
+a :class:`Request` (prompt + decode budget + arrival time + optional
+deadlines), the :class:`RequestMetrics` record (TTFT / TPOT / E2E — the
+paper's Fig. 8–10 quantities, measured instead of predicted), and a Poisson
+trace generator for benchmarks/serving_bench.py.
+
+Finish-reason taxonomy (DESIGN.md §10):
+
+  ``"length"``     decode budget exhausted (``max_new_tokens``) — normal.
+  ``"eos"``        the model emitted ``eos_id`` (or the emulated early stop
+                   ``eos_pos`` was reached) — normal, early.
+  ``"deadline"``   shed: the request could no longer meet its
+                   ``deadline`` / ``ttft_deadline``; tokens generated so
+                   far are kept.
+  ``"cancelled"``  shed by an explicit ``Scheduler.cancel(rid)``.
+  ``"error"``      a permanent fault (or exhausted retries) killed the
+                   request mid-flight.
 """
 from __future__ import annotations
 
@@ -24,6 +36,18 @@ class Request:
     (0.0 = queued before the run starts).  ``eos_id`` stops decode early when
     the model emits it; ``max_new_tokens`` always bounds the decode length
     (first token from prefill included).
+
+    ``eos_pos`` is the *emulated* early stop: finish with reason "eos" after
+    that many generated tokens.  Synthetic traces need it because greedy
+    streams from randomly-initialized weights have no designated EOS token —
+    it exercises the exact same early-eviction path (the one that strands
+    conservative-admission capacity, DESIGN.md §10) with a deterministic,
+    trace-controlled stop.
+
+    ``deadline`` / ``ttft_deadline`` are SLO budgets in seconds *relative to
+    arrival*: miss either and the scheduler sheds the request mid-flight
+    with ``finish_reason="deadline"`` instead of spending capacity on an
+    answer nobody is waiting for.
     """
 
     rid: int
@@ -31,6 +55,9 @@ class Request:
     max_new_tokens: int
     arrival: float = 0.0
     eos_id: Optional[int] = None
+    eos_pos: Optional[int] = None    # emulated EOS after N generated tokens
+    deadline: Optional[float] = None       # E2E budget, seconds from arrival
+    ttft_deadline: Optional[float] = None  # first-token budget, from arrival
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
@@ -38,6 +65,12 @@ class Request:
             raise ValueError(f"request {self.rid}: empty prompt")
         if self.max_new_tokens < 1:
             raise ValueError(f"request {self.rid}: max_new_tokens < 1")
+        if self.eos_pos is not None and self.eos_pos < 1:
+            raise ValueError(f"request {self.rid}: eos_pos < 1")
+        for name in ("deadline", "ttft_deadline"):
+            v = getattr(self, name)
+            if v is not None and v <= 0:
+                raise ValueError(f"request {self.rid}: {name} must be > 0")
 
     @property
     def prompt_len(self) -> int:
@@ -53,11 +86,13 @@ class RequestMetrics:
     rid: int
     prompt_len: int
     arrival: float
-    admitted: float = 0.0            # prefill start (queueing delay ends)
+    admitted: float = 0.0            # FIRST prefill start (queue delay ends)
     first_token: float = 0.0         # TTFT reference point
     finished: float = 0.0
     tokens: List[int] = dataclasses.field(default_factory=list)
-    finish_reason: str = ""          # "length" | "eos"
+    finish_reason: str = ""          # taxonomy in the module docstring
+    preemptions: int = 0             # times evicted + recomputed (§10)
+    retries: int = 0                 # transient-fault retries while active
 
     @property
     def num_generated(self) -> int:
@@ -91,7 +126,8 @@ class RequestMetrics:
 
 def make_poisson_trace(n_requests: int, rate: float, vocab_size: int,
                        prompt_lens=(8, 64), decode_lens=(4, 32),
-                       seed: int = 0, quantum: int = 1) -> List[Request]:
+                       seed: int = 0, quantum: int = 1,
+                       eos_prob: float = 0.0) -> List[Request]:
     """Mixed-length request trace with Poisson arrivals at ``rate`` req/s.
 
     Prompt and decode lengths are drawn uniformly from the given inclusive
@@ -100,19 +136,32 @@ def make_poisson_trace(n_requests: int, rate: float, vocab_size: int,
     (or <= 0) makes every request arrive at t=0 (closed-batch mode).
     ``quantum`` rounds prompt lengths down to a multiple (vLLM-style shape
     bucketing: each distinct prompt length compiles one batch-1 prefill).
+
+    ``eos_prob`` makes the trace EOS-heavy: each request's emulated early
+    stop (``Request.eos_pos``) is drawn geometrically with per-token stop
+    probability ``eos_prob``, truncated by the decode budget — so requests
+    commit their full ``max_new_tokens`` worst case at admission but mostly
+    finish far earlier, exactly the mix that strands conservative-admission
+    capacity (DESIGN.md §10).
     """
     rng = np.random.default_rng(seed)
     if rate and np.isfinite(rate) and rate > 0:
         arrivals = np.cumsum(rng.exponential(1.0 / rate, n_requests))
     else:
         arrivals = np.zeros(n_requests)
+    if not 0.0 <= eos_prob < 1.0:
+        raise ValueError(f"eos_prob must be in [0, 1), got {eos_prob}")
     reqs = []
     for i in range(n_requests):
         s_p = int(rng.integers(prompt_lens[0], prompt_lens[1] + 1))
         if quantum > 1:
             s_p = max(prompt_lens[0], (s_p // quantum) * quantum)
         n_d = int(rng.integers(decode_lens[0], decode_lens[1] + 1))
+        eos_pos = None
+        if eos_prob > 0.0:
+            stop = int(rng.geometric(eos_prob))
+            eos_pos = stop if stop < n_d else None
         prompt = rng.integers(2, vocab_size, s_p).astype(np.int32)
         reqs.append(Request(rid=i, prompt=prompt, max_new_tokens=n_d,
-                            arrival=float(arrivals[i])))
+                            arrival=float(arrivals[i]), eos_pos=eos_pos))
     return reqs

@@ -5,10 +5,38 @@ study actually exercises: a fixed pool of KV-cache *slots*, admission of
 queued requests into freed slots between decode steps (each admission is one
 batch-1 prefill scattered into the slot row), one fused decode step per
 iteration over the whole slot batch with per-sequence positions, and
-EOS/length-based eviction.  What it deliberately does NOT reproduce from
-vLLM: paged KV blocks (slots are contiguous rows; paging is a later PR),
-chunked/piggybacked prefill (prefill runs alone between decode steps), and
-preemption/swapping (admission only when a slot is free) — see DESIGN.md §7.
+EOS/length-based eviction.
+
+Robustness layer (DESIGN.md §10).  The scheduler survives the traffic mixes
+that oversubscribe it instead of only modeling the sunny day:
+
+  * **Admission policy.**  ``admission="conservative"`` (default) commits
+    every paged request's worst-case decode budget up front — mid-decode
+    page exhaustion is impossible, but EOS-heavy traffic strands pool
+    capacity on budgets that never materialize.  ``admission="optimistic"``
+    admits on *current* need (the prompt's pages) and recovers from the
+    resulting pressure by preemption.
+  * **Preemption-by-recompute.**  When ``KVPool.extend`` hits
+    ``MemoryError`` mid-decode, the youngest active request is preempted:
+    pages and slot freed, the request requeued *retaining its generated
+    tokens*.  Re-admission re-prefills prompt + generated prefix in one
+    pass; greedy decode is deterministic, so the recompute's final-position
+    token must equal the last token generated before preemption (asserted
+    at runtime — the token-identity invariant), and the stream continues
+    bitwise identical to an uninterrupted run.  Each recompute pass is
+    logged as a phase="recompute" StepRecord carrying the predicted prefill
+    collectives of the prefix (``commodel.preemption_recompute_ops``) next
+    to the measured PP transfers.
+  * **Deadlines & cancellation.**  ``Request.deadline`` /
+    ``ttft_deadline`` shed hopeless requests mid-flight
+    (finish_reason="deadline"); ``Scheduler.cancel(rid)`` shed them on
+    demand ("cancelled").
+  * **Fault tolerance.**  With a ``runtime.faults.FaultInjector`` attached,
+    injected faults at the decode/prefill/pool/pp_transfer sites are
+    absorbed: transient failures retry with exponential backoff (visible on
+    the virtual clock), permanent ones finish the affected requests with
+    finish_reason="error", injected pool exhaustion takes the preemption
+    path, and transfer delays stretch the clock.
 
 The scheduler measures the quantities ``core.slo.predict_slo`` predicts —
 per-request TTFT / TPOT / E2E — and records per-step communication: predicted
@@ -21,14 +49,15 @@ decode step correct for a varying active set — so it is asserted against
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import time
-from collections import deque
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
 from repro.runtime.backends import DecodeBackend
+from repro.runtime.faults import PermanentFault, TransientFault
 from repro.runtime.request import Request, RequestMetrics
 
 
@@ -76,15 +105,18 @@ class VirtualClock:
 
 @dataclasses.dataclass
 class StepRecord:
-    """Communication of one scheduler iteration: one fused decode step, or
-    (chunked-prefill mode, DESIGN.md §8) one prefill chunk."""
+    """Communication of one scheduler iteration: one fused decode step, one
+    prefill chunk (chunked-prefill mode, DESIGN.md §8), or one preemption's
+    recompute pass (DESIGN.md §10)."""
 
     step: int
     n_active: int
-    collective_counts: Dict[str, int]     # predicted, per decode step/chunk
+    collective_counts: Dict[str, int]     # predicted, per decode step/pass
     predicted_wire_bytes: float           # at batch=num_slots (decode) / 1
     measured_transfers: Dict[str, int]    # PP boundary hops since last step
-    phase: str = "decode"                 # "decode" | "prefill"
+    phase: str = "decode"                 # "decode" | "prefill" | "recompute"
+    rid: Optional[int] = None             # request, for prefill/recompute
+    prefix_len: Optional[int] = None      # recomputed positions (recompute)
 
 
 def step_collective_counts(backend: DecodeBackend,
@@ -123,6 +155,9 @@ def assert_counts_batch_invariant(backend: DecodeBackend) -> None:
 # ---------------------------------------------------------------------------
 
 
+_NORMAL_FINISH = ("length", "eos")
+
+
 @dataclasses.dataclass
 class ServingReport:
     metrics: List[RequestMetrics]
@@ -137,6 +172,14 @@ class ServingReport:
     def throughput(self) -> float:
         return self.total_tokens / self.wall_time if self.wall_time else 0.0
 
+    @property
+    def preemptions(self) -> int:
+        return sum(m.preemptions for m in self.metrics)
+
+    @property
+    def retries(self) -> int:
+        return sum(m.retries for m in self.metrics)
+
     def tokens_by_rid(self) -> Dict[int, List[int]]:
         return {m.rid: list(m.tokens) for m in self.metrics}
 
@@ -144,7 +187,9 @@ class ServingReport:
         def _pct(vals, q):
             return float(np.percentile(vals, q)) if vals else 0.0
 
-        ttfts = [m.ttft for m in self.metrics]
+        # shed requests may never have produced a first token — keep their
+        # zero-initialized first_token out of the TTFT statistics
+        ttfts = [m.ttft for m in self.metrics if m.num_generated > 0]
         tpots = [m.tpot for m in self.metrics if m.num_generated > 1]
         e2es = [m.e2e for m in self.metrics]
         return {
@@ -158,6 +203,10 @@ class ServingReport:
             "tpot_p95_s": _pct(tpots, 95),
             "e2e_mean_s": float(np.mean(e2es)) if e2es else 0.0,
             "e2e_p95_s": _pct(e2es, 95),
+            "preemptions": self.preemptions,
+            "retries": self.retries,
+            "shed": len([m for m in self.metrics
+                         if m.finish_reason not in _NORMAL_FINISH]),
         }
 
 
@@ -165,25 +214,30 @@ class ServingReport:
 class _Active:
     req: Request
     metrics: RequestMetrics
+    seq: int = 0                  # admission sequence (preemption order)
 
 
 @dataclasses.dataclass
 class _Prefilling:
-    """A request whose prompt is mid-way through chunked prefill."""
+    """A request whose prompt (or recompute prefix) is mid-way through
+    chunked prefill."""
 
     req: Request
     metrics: RequestMetrics
-    done: int = 0                 # prompt positions already prefilled
+    prefix: np.ndarray            # tokens being prefilled (prompt, or
+    #                               prompt + generated prefix on recompute)
+    done: int = 0                 # prefix positions already prefilled
+    resume: Optional[List[int]] = None   # generated tokens (recompute only)
 
 
 class Scheduler:
     """Continuous batching over ``backend.num_slots`` KV-cache slots.
 
-    One ``step()`` = admit every arrived request a free slot can take
-    (batch-1 prefill each, TTFT stamped), then ONE fused decode step over
-    the full slot batch with per-sequence positions, then eviction of
-    finished sequences (EOS or length), freeing their slots for the next
-    iteration's admissions.
+    One ``step()`` = shed expired requests, admit every arrived request a
+    free slot can take (batch-1 prefill each, TTFT stamped), then ONE fused
+    decode step over the full slot batch with per-sequence positions, then
+    eviction of finished sequences (EOS or length), freeing their slots for
+    the next iteration's admissions.
 
     ``chunk_size`` (paged backends only, DESIGN.md §8) turns prefill into
     *chunked* prefill: admission only allocates the slot's pages, and each
@@ -192,18 +246,39 @@ class Scheduler:
     slots for its whole prefill, only for one chunk.  Iterations with no
     decoding slot skip the jitted decode step entirely (nothing useful would
     run in it) and just advance prefill / wait for the next arrival.
+
+    ``admission`` ("conservative" | "optimistic"), ``faults``,
+    ``retry_limit`` and ``retry_backoff`` are the robustness knobs —
+    DESIGN.md §10 and the module docstring.
     """
 
     def __init__(self, backend: DecodeBackend, clock=None,
-                 chunk_size: int = None):
+                 chunk_size: int = None, admission: str = "conservative",
+                 faults=None, retry_limit: int = 3,
+                 retry_backoff: float = 0.05):
         self.backend = backend
         self.clock = clock if clock is not None else WallClock()
         self.num_slots = backend.num_slots
-        self.queue: deque = deque()
+        self.queue: List[Request] = []     # sorted by arrival, FIFO in ties
         self.free: List[int] = list(range(self.num_slots))
         self.active: Dict[int, _Active] = {}
         self.prefilling: Dict[int, _Prefilling] = {}   # slot -> state (FIFO)
         self.chunk_size = chunk_size
+        if admission not in ("conservative", "optimistic"):
+            raise ValueError(
+                f"admission must be 'conservative' or 'optimistic', "
+                f"got {admission!r}")
+        if admission == "optimistic" and not getattr(backend, "paged", False):
+            raise ValueError(
+                "optimistic admission relaxes the KV-page commitment; "
+                "contiguous slot backends have nothing to overcommit — "
+                "construct the backend with paged=True")
+        self.admission = admission
+        self.faults = faults
+        if retry_limit < 0:
+            raise ValueError(f"retry_limit must be >= 0, got {retry_limit}")
+        self.retry_limit = int(retry_limit)
+        self.retry_backoff = float(retry_backoff)
         if chunk_size is not None:
             if chunk_size < 1:
                 raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
@@ -225,6 +300,12 @@ class Scheduler:
         self.finished: List[RequestMetrics] = []
         self.step_log: List[StepRecord] = []
         self._step_i = 0
+        self._rids: set = set()            # every rid this run has seen
+        self._preempted: Dict[int, RequestMetrics] = {}  # rid -> metrics
+        self._adm_seq = 0
+        self._total_tokens = 0
+        self._last_sig = None
+        self._idle_iters = 0
         # the batch-invariance the fixed-capacity step relies on (paper
         # Tables III–VI: no batch term in any count column)
         assert_counts_batch_invariant(backend)
@@ -245,7 +326,13 @@ class Scheduler:
         reqs = [requests] if isinstance(requests, Request) else list(requests)
         paged = getattr(self.backend, "paged", False)
         c = getattr(self.backend, "c", 1)
+        seen: set = set()
         for r in reqs:
+            if r.rid in self._rids or r.rid in seen:
+                raise ValueError(
+                    f"duplicate rid {r.rid}: already submitted this run "
+                    f"(per-request metrics and token streams key on rid)")
+            seen.add(r.rid)
             # the last generated token is never fed back, so the highest
             # cache position written is prompt_len + max_new_tokens - 2;
             # CP pads the prompt to a multiple of c (DESIGN.md §9)
@@ -265,9 +352,98 @@ class Scheduler:
                     raise ValueError(
                         f"request {r.rid} needs {need_pages} pages "
                         f"> pool capacity {usable}")
-        self.queue.extend(reqs)
-        # arrival order == admission order
-        self.queue = deque(sorted(self.queue, key=lambda r: r.arrival))
+        for r in reqs:
+            self._rids.add(r.rid)
+            self._enqueue(r)
+
+    def _enqueue(self, req: Request) -> None:
+        """Sorted insert by arrival time — O(log n) search + one list
+        insert, replacing the old full re-sort per submit.  ``insort`` is
+        right-biased, so equal arrivals keep FIFO submission order (and a
+        preempted request requeues behind same-arrival peers)."""
+        bisect.insort(self.queue, req, key=lambda r: r.arrival)
+
+    # ------------------------------------------------------------- lifecycle
+    def cancel(self, rid: int) -> bool:
+        """Cancel a request wherever it currently lives — queued, mid-
+        prefill, or actively decoding.  Generated tokens are kept and the
+        request finishes with ``finish_reason="cancelled"``.  Returns False
+        when the rid is unknown or already finished (cancellation raced
+        completion — the tokens already exist either way)."""
+        now = self.clock.now()
+        for i, req in enumerate(self.queue):
+            if req.rid == rid:
+                del self.queue[i]
+                self._shed_queued(req, "cancelled", now)
+                return True
+        for slot, st in list(self.prefilling.items()):
+            if st.req.rid == rid:
+                self._abort_prefill(slot, "cancelled", now)
+                return True
+        for slot, st in list(self.active.items()):
+            if st.req.rid == rid:
+                self._finish(slot, "cancelled", now)
+                return True
+        return False
+
+    @staticmethod
+    def _expired(req: Request, now: float, pre_first_token: bool) -> bool:
+        if req.deadline is not None and now > req.arrival + req.deadline:
+            return True
+        return pre_first_token and req.ttft_deadline is not None \
+            and now > req.arrival + req.ttft_deadline
+
+    def _shed_queued(self, req: Request, reason: str, now: float) -> None:
+        """Finish a request straight out of the queue (deadline/cancel).
+        A preempted request keeps the tokens it generated before eviction."""
+        m = self._preempted.pop(req.rid, None)
+        if m is None:
+            m = RequestMetrics(rid=req.rid, prompt_len=req.prompt_len,
+                               arrival=req.arrival)
+        m.finished = now
+        m.finish_reason = reason
+        self.finished.append(m)
+
+    def _abort_prefill(self, slot: int, reason: str, now: float) -> None:
+        st = self.prefilling.pop(slot)
+        self.backend.free_slots([slot])
+        self.free.append(slot)
+        st.metrics.finished = now
+        st.metrics.finish_reason = reason
+        self.finished.append(st.metrics)
+
+    def _shed_expired(self, now: float) -> None:
+        """Drop every queued / mid-prefill request that can no longer meet
+        its deadline — head-of-line or not, capacity spent on it is wasted."""
+        for req in [r for r in self.queue
+                    if self._expired(r, now, r.rid not in self._preempted)]:
+            self.queue.remove(req)
+            self._shed_queued(req, "deadline", now)
+        for slot, st in list(self.prefilling.items()):
+            if self._expired(st.req, now, st.resume is None):
+                self._abort_prefill(slot, "deadline", now)
+
+    # ------------------------------------------------------------- faults
+    def _apply_fault(self, site: str) -> None:
+        if self.faults is None:
+            return
+        f = self.faults.draw(site)
+        if f is None:
+            return
+        if f.kind == "delay":
+            self.clock.wait_until(self.clock.now() + f.delay_s)
+        elif f.kind == "oom":
+            raise MemoryError(f"injected fault at {site}")
+        elif f.kind == "transient":
+            raise TransientFault(f"injected fault at {site}")
+        else:
+            raise PermanentFault(f"injected fault at {site}")
+
+    def _backoff(self, attempt: int) -> None:
+        """Exponential backoff before retry attempt N (1-based), on the
+        scheduler clock so virtual-clock tests see the waits."""
+        self.clock.wait_until(self.clock.now()
+                              + self.retry_backoff * 2.0 ** (attempt - 1))
 
     # ------------------------------------------------------------- admission
     def _finish(self, slot: int, reason: str, now: float) -> None:
@@ -280,58 +456,184 @@ class Scheduler:
         self.tokens[slot] = 0
         self.pos[slot] = 0
 
+    def _preempt_youngest(self) -> None:
+        """Evict the most recently admitted active request: free its pages
+        and slot, requeue it retaining its generated tokens (re-admission
+        recomputes the prefix — DESIGN.md §10)."""
+        slot = max(self.active, key=lambda s: self.active[s].seq)
+        st = self.active.pop(slot)
+        st.metrics.preemptions += 1
+        self._preempted[st.req.rid] = st.metrics
+        self.backend.free_slots([slot])
+        self.free.append(slot)
+        self.tokens[slot] = 0
+        self.pos[slot] = 0
+        self._enqueue(st.req)
+
+    def _run_prefill(self, slot: int, prefix: np.ndarray,
+                     metrics: RequestMetrics) -> Optional[int]:
+        """One whole-prefix prefill pass with fault injection + bounded
+        retry; returns the final position's greedy token, or None when the
+        request errored out (caller frees the slot)."""
+        paged = getattr(self.backend, "paged", False)
+        attempt = 0
+        while True:
+            try:
+                self._apply_fault("prefill")
+                if paged:
+                    tok = int(self.backend.prefill_whole(slot, prefix))
+                    self.backend.finish_prefill(slot)
+                else:
+                    tok = int(self.backend.prefill_into_slots(
+                        [prefix], [slot])[0])
+                return tok
+            except TransientFault:
+                attempt += 1
+                if attempt > self.retry_limit:
+                    return None
+                metrics.retries += 1
+                self._backoff(attempt)
+            except PermanentFault:
+                return None
+
+    def _stop_reason(self, req: Request,
+                     metrics: RequestMetrics) -> Optional[str]:
+        """Normal finish check after a token append: model EOS, emulated
+        EOS (``eos_pos``), or exhausted decode budget."""
+        if req.eos_id is not None and metrics.tokens[-1] == req.eos_id:
+            return "eos"
+        if req.eos_pos is not None and \
+                metrics.num_generated >= req.eos_pos:
+            return "eos"
+        if metrics.num_generated >= req.max_new_tokens:
+            return "length"
+        return None
+
     def _admit_ready(self) -> None:
         paged = getattr(self.backend, "paged", False)
+        optimistic = self.admission == "optimistic"
         while self.free and self.queue and \
                 self.queue[0].arrival <= self.clock.now():
             req = self.queue[0]
-            if paged and not self.backend.can_admit(req.prompt_len,
-                                                    req.max_new_tokens):
-                # a free slot but not enough pages for this request's worst
-                # case on top of live requests' committed growth: keep it
-                # queued (head-of-line — admission order stays arrival
-                # order) until evictions free pages
-                break
-            self.queue.popleft()
-            slot = self.free.pop(0)
-            m = RequestMetrics(rid=req.rid, prompt_len=req.prompt_len,
-                               arrival=req.arrival,
-                               admitted=self.clock.now())
-            if paged:
-                # admission claims the slot's pages and commits the decode
-                # budget; chunked mode then advances one chunk per
-                # iteration, non-chunked prefills as one maximal chunk
-                # (one sequence-sharded CP pass on a c>1 backend)
-                self.backend.begin_prefill(slot, req.prompt_len,
-                                           req.max_new_tokens)
-                if self.chunk_size is not None:
-                    self.prefilling[slot] = _Prefilling(req, m)
-                    continue
-                first = int(self.backend.prefill_whole(slot, req.prompt))
-                self.backend.finish_prefill(slot)
+            state = self._preempted.get(req.rid)
+            if state is None:
+                prefix_len = req.prompt_len
+                budget = req.max_new_tokens
             else:
-                first = int(self.backend.prefill_into_slots([req.prompt],
-                                                            [slot])[0])
-            m.first_token = self.clock.now()
-            m.tokens.append(first)
-            self.active[slot] = _Active(req, m)
-            self.tokens[slot] = first
+                # recompute prefix: prompt + all generated tokens but the
+                # last (which was emitted, never fed back) — total worst
+                # case positions are unchanged from first admission
+                prefix_len = req.prompt_len + len(state.tokens) - 1
+                budget = req.max_new_tokens - len(state.tokens) + 1
+            if paged and not self.backend.can_admit(prefix_len, budget,
+                                                    optimistic=optimistic):
+                # a free slot but not enough pages: keep it queued
+                # (head-of-line — admission order stays arrival order)
+                # until evictions free pages.  Optimistic admission only
+                # needs the prefix's pages now; the decode budget is
+                # covered by preemption instead of reservation.
+                break
+            self.queue.pop(0)
+            slot = self.free.pop(0)
+            self._adm_seq += 1
+            if state is None:
+                m = RequestMetrics(rid=req.rid, prompt_len=req.prompt_len,
+                                   arrival=req.arrival,
+                                   admitted=self.clock.now())
+                prefix = req.prompt
+                resume = None
+            else:
+                m = self._preempted.pop(req.rid)
+                prefix = np.concatenate(
+                    [req.prompt, np.asarray(m.tokens[:-1], np.int32)])
+                resume = list(m.tokens)
+            if paged:
+                self.backend.begin_prefill(slot, len(prefix), budget)
+                if self.chunk_size is not None:
+                    self.prefilling[slot] = _Prefilling(req, m, prefix=prefix,
+                                                        resume=resume)
+                    continue
+            if resume is not None:
+                # isolate the recompute pass's measured boundary hops
+                self.backend.drain_transfers()
+            tok = self._run_prefill(slot, prefix, m)
+            if tok is None:
+                self.backend.free_slots([slot])
+                self.free.append(slot)
+                m.finished = self.clock.now()
+                m.finish_reason = "error"
+                self.finished.append(m)
+                continue
+            now = self.clock.now()
+            if resume is not None:
+                self._log_recompute(req.rid, len(prefix))
+                self._resume_active(slot, req, m, resume, len(prefix), tok)
+                continue
+            m.first_token = now
+            m.tokens.append(tok)
+            self._total_tokens += 1
+            self.active[slot] = _Active(req, m, seq=self._adm_seq)
+            self.tokens[slot] = tok
             self.pos[slot] = req.prompt_len
-            if req.eos_id is not None and first == req.eos_id:
-                self._finish(slot, "eos", self.clock.now())
-            elif req.max_new_tokens == 1:
-                self._finish(slot, "length", self.clock.now())
+            reason = self._stop_reason(req, m)
+            if reason:
+                self._finish(slot, reason, now)
+
+    def _log_recompute(self, rid: int, prefix_len: int) -> None:
+        ops = self.backend.prefill_comm_ops(prefix_len)
+        self.step_log.append(StepRecord(
+            step=self._step_i, n_active=len(self.active),
+            collective_counts=self._count(ops),
+            predicted_wire_bytes=sum(o.wire_bytes for o in ops),
+            measured_transfers=self.backend.drain_transfers(),
+            phase="recompute", rid=rid, prefix_len=prefix_len))
+        self._step_i += 1
+
+    def _resume_active(self, slot: int, req: Request, m: RequestMetrics,
+                       resume: List[int], prefix_len: int,
+                       tok: int) -> None:
+        """Rejoin the decoding set after a recompute pass.  The pass's
+        final-position greedy token must be bitwise the last token the
+        request generated before preemption — greedy decode is
+        deterministic, so anything else means the recomputed KV diverged."""
+        if tok != resume[-1]:
+            raise RuntimeError(
+                f"preemption token-identity violated for rid {req.rid}: "
+                f"recompute of {prefix_len} positions produced token {tok}, "
+                f"stream had {resume[-1]}")
+        self.active[slot] = _Active(req, m, seq=self._adm_seq)
+        self.tokens[slot] = resume[-1]
+        self.pos[slot] = prefix_len
+        # metrics keep their original admitted/first_token stamps: TTFT
+        # already happened; preemption shows up in TPOT/E2E, where the
+        # recompute actually costs
 
     def _advance_prefill(self) -> None:
         """Run ONE prefill chunk for the oldest mid-prefill request; on the
         final chunk the request's first token is stamped (TTFT) and the slot
-        joins the decoding set."""
+        joins the decoding set.  A recompute prefix (``resume``) re-chunks
+        the same way, logging phase="recompute" records."""
         slot = next(iter(self.prefilling))
         st = self.prefilling[slot]
         start = st.done
-        end = min(start + self.chunk_size, st.req.prompt_len)
-        tok = self.backend.prefill_chunk(slot, st.req.prompt[start:end],
-                                         start)
+        end = min(start + self.chunk_size, len(st.prefix))
+        attempt = 0
+        while True:
+            try:
+                self._apply_fault("prefill")
+                tok = self.backend.prefill_chunk(
+                    slot, st.prefix[start:end], start)
+                break
+            except TransientFault:
+                attempt += 1
+                if attempt > self.retry_limit:
+                    self._abort_prefill(slot, "error", self.clock.now())
+                    return
+                st.metrics.retries += 1
+                self._backoff(attempt)
+            except PermanentFault:
+                self._abort_prefill(slot, "error", self.clock.now())
+                return
         st.done = end
         self.step_log.append(StepRecord(
             step=self._step_i, n_active=len(self.active),
@@ -340,28 +642,75 @@ class Scheduler:
                 o.wire_bytes
                 for o in self.backend.chunk_comm_ops(end - start)),
             measured_transfers=self.backend.drain_transfers(),
-            phase="prefill"))
+            phase="prefill" if st.resume is None else "recompute",
+            rid=st.req.rid,
+            prefix_len=None if st.resume is None else len(st.prefix)))
         self._step_i += 1
-        if end < st.req.prompt_len:
+        if end < len(st.prefix):
             return
         del self.prefilling[slot]
         self.backend.finish_prefill(slot)
         now = self.clock.now()
+        self._adm_seq += 1
+        if st.resume is not None:
+            self._resume_active(slot, st.req, st.metrics, st.resume,
+                                len(st.prefix), int(tok))
+            return
         st.metrics.first_token = now
-        st.metrics.tokens.append(tok)
-        self.active[slot] = _Active(st.req, st.metrics)
-        self.tokens[slot] = tok
+        st.metrics.tokens.append(int(tok))
+        self._total_tokens += 1
+        self.active[slot] = _Active(st.req, st.metrics, seq=self._adm_seq)
+        self.tokens[slot] = int(tok)
         self.pos[slot] = st.req.prompt_len
-        if st.req.eos_id is not None and tok == st.req.eos_id:
-            self._finish(slot, "eos", now)
-        elif st.req.max_new_tokens == 1:
-            self._finish(slot, "length", now)
+        reason = self._stop_reason(st.req, st.metrics)
+        if reason:
+            self._finish(slot, reason, now)
 
     # ------------------------------------------------------------- stepping
+    def _error_active(self, why: str) -> None:
+        now = self.clock.now()
+        for slot in list(self.active):
+            self._finish(slot, "error", now)
+
+    def _recovered_decode(self) -> Optional[np.ndarray]:
+        """The fused decode step behind the recovery ladder: preemption on
+        pool exhaustion, bounded backoff retries on transient faults,
+        error-finish on permanent ones.  Returns the next-token vector, or
+        None when this iteration's decode was abandoned."""
+        attempt = 0
+        while True:
+            try:
+                if self.faults is not None:
+                    if self.backend.p > 1:
+                        self._apply_fault("pp_transfer")
+                    self._apply_fault("pool")
+                    self._apply_fault("decode")
+                return self.backend.decode_step(self.tokens, self.pos)
+            except MemoryError:
+                if len(self.active) < 2:
+                    # nothing else to preempt: the pages are held by
+                    # mid-prefill slots (their owner frees them by
+                    # finishing) or the fault was injected — stall this
+                    # iteration instead of thrashing the lone request
+                    return None
+                self._preempt_youngest()
+            except TransientFault:
+                attempt += 1
+                if attempt > self.retry_limit:
+                    self._error_active("retries exhausted")
+                    return None
+                for st in self.active.values():
+                    st.metrics.retries += 1
+                self._backoff(attempt)
+            except PermanentFault:
+                self._error_active("permanent fault")
+                return None
+
     def step(self) -> bool:
         """One scheduler iteration; returns False when fully drained."""
         if not self.queue and not self.active and not self.prefilling:
             return False
+        self._shed_expired(self.clock.now())
         self._admit_ready()
         self.backend.drain_transfers()      # prefill hops: not decode traffic
         if self.prefilling:
@@ -373,8 +722,10 @@ class Scheduler:
             # arrival) when no prefill is in flight either.
             if not self.prefilling and self.queue:
                 self.clock.wait_until(self.queue[0].arrival)
-            return bool(self.queue or self.active or self.prefilling)
-        nxt = self.backend.decode_step(self.tokens, self.pos)
+            return self._next(True)
+        nxt = self._recovered_decode()
+        if nxt is None:
+            return self._next(True)
         now = self.clock.now()
         self.step_log.append(StepRecord(
             step=self._step_i, n_active=len(self.active),
@@ -386,13 +737,38 @@ class Scheduler:
             st = self.active[slot]
             tok = int(nxt[slot])
             st.metrics.tokens.append(tok)
+            self._total_tokens += 1
             self.tokens[slot] = tok
             self.pos[slot] += 1
-            if st.req.eos_id is not None and tok == st.req.eos_id:
-                self._finish(slot, "eos", now)
-            elif st.metrics.num_generated >= st.req.max_new_tokens:
-                self._finish(slot, "length", now)
-        return bool(self.queue or self.active or self.prefilling)
+            reason = self._stop_reason(st.req, st.metrics)
+            if reason:
+                self._finish(slot, reason, now)
+            elif self._expired(st.req, now, pre_first_token=False):
+                self._finish(slot, "deadline", now)
+        return self._next(bool(self.queue or self.active or self.prefilling))
+
+    def _next(self, more: bool) -> bool:
+        """Stall guard: a live scheduler must change *something* every
+        iteration — admit, prefill, decode, finish, preempt, or move the
+        clock.  A signature frozen for thousands of iterations means a
+        logic bug (or a pathological 100%-fault injector), and an explicit
+        error beats an infinite loop."""
+        if not more:
+            return False
+        sig = (len(self.queue), len(self.active), len(self.prefilling),
+               len(self.finished), self._total_tokens, self._step_i,
+               self.clock.now())
+        if sig == self._last_sig:
+            self._idle_iters += 1
+            if self._idle_iters > 10_000:
+                raise RuntimeError(
+                    "scheduler stalled: no progress in 10000 iterations "
+                    f"(queue={len(self.queue)} active={len(self.active)} "
+                    f"prefilling={len(self.prefilling)})")
+        else:
+            self._idle_iters = 0
+            self._last_sig = sig
+        return True
 
     def run(self, requests=None) -> ServingReport:
         """Drive until every submitted request has finished."""
@@ -406,6 +782,8 @@ class Scheduler:
             steps=self.step_log, wall_time=self.clock.now() - t0)
         self.finished, self.step_log = [], []
         self._step_i = 0
+        self._rids = set()
+        self._last_sig, self._idle_iters = None, 0
         return report
 
 

@@ -1,0 +1,483 @@
+"""Robustness layer: token identity under adversity (ISSUE 6 acceptance).
+
+1. Preemption-by-recompute: an optimistic-admission run on an oversubscribed
+   pool preempts mid-decode and every request's final token stream is bitwise
+   identical to an uninterrupted solo run — at (t,p) ∈ {(1,1),(2,1),(1,2)}
+   paged.  Each preemption's recompute collectives are logged as
+   phase="recompute" StepRecords whose counts match
+   ``commodel.preemption_recompute_ops`` and (p>1) whose measured boundary
+   transfers ship exactly the predicted bytes.
+2. Retry-after-transient-fault runs are token-identical, with the backoff
+   visible on the virtual clock; permanent faults finish with
+   ``finish_reason="error"`` and leak nothing.
+3. Deadlines shed hopeless requests mid-flight; ``cancel(rid)`` works at
+   every lifecycle stage.
+4. Chaos suite (hypothesis): under random seeded fault schedules the
+   scheduler always terminates, surviving requests are token-identical to
+   the fault-free run, and the pool leaks zero pages.
+"""
+import functools
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import commodel as cm
+from repro.models.transformer import get_model
+from repro.runtime.backends import make_backend
+from repro.runtime.engine import InferenceEngine
+from repro.runtime.faults import Fault, FaultInjector, SITES
+from repro.runtime.request import Request
+from repro.runtime.scheduler import Scheduler, VirtualClock
+
+needs_mesh = pytest.mark.skipif(len(jax.devices()) < 4,
+                                reason="needs 4 host-platform devices")
+
+MAX_LEN = 64
+PAGE = 4
+
+# the three ISSUE layouts; the pool (10 pages = 9 usable × 4 positions) is
+# oversubscribed against the trace's 13-page worst case, so optimistic
+# admission must preempt to finish
+LAYOUTS = [
+    pytest.param("gspmd", dict(), id="t1p1"),
+    pytest.param("tp", dict(t=2), marks=needs_mesh, id="t2p1"),
+    pytest.param("pp", dict(t=1, p=2), marks=needs_mesh, id="t1p2"),
+]
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("llama32-3b").reduced(num_layers=2)
+    params = get_model(cfg).init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _requests(cfg):
+    rng = np.random.default_rng(0)
+    lens = [(7, 10), (11, 8), (5, 12), (9, 6)]
+    return [Request(rid=i,
+                    prompt=rng.integers(2, cfg.vocab_size, s).astype(np.int32),
+                    max_new_tokens=n)
+            for i, (s, n) in enumerate(lens)]
+
+
+def _solo_reference(cfg, params, req):
+    eng = InferenceEngine(cfg, params, max_len=MAX_LEN, decode_chunk=1)
+    out = eng.generate(jnp.asarray(req.prompt)[None, :],
+                       max_new_tokens=req.max_new_tokens)
+    return np.asarray(out)[0].tolist()
+
+
+def _refs(cfg, params):
+    return {r.rid: _solo_reference(cfg, params, r) for r in _requests(cfg)}
+
+
+# ---------------------------------------------------------------------------
+# fault injector: determinism, independence, scripting
+# ---------------------------------------------------------------------------
+
+
+def test_injector_schedule_is_seed_deterministic():
+    def schedule(seed):
+        inj = FaultInjector(seed=seed, rates={"decode": 0.3, "pool": 0.3})
+        for _ in range(50):
+            inj.draw("decode")
+            inj.draw("pool")
+        return inj.injected
+
+    a, b = schedule(7), schedule(7)
+    assert a == b and len(a) > 0
+    assert schedule(8) != a, "different seeds must differ"
+
+
+def test_injector_sites_are_independent_streams():
+    """Extra draws at one site must not shift another site's schedule."""
+    inj1 = FaultInjector(seed=3, rates={"decode": 0.4, "prefill": 0.4},
+                         max_faults=None)
+    inj2 = FaultInjector(seed=3, rates={"decode": 0.4, "prefill": 0.4},
+                         max_faults=None)
+    for _ in range(30):
+        inj1.draw("decode")
+    for _ in range(200):                    # perturb an unrelated site
+        inj2.draw("prefill")
+    for _ in range(30):
+        inj2.draw("decode")
+    dec = lambda inj: [(s, i, f) for s, i, f in inj.injected if s == "decode"]
+    assert dec(inj1) == dec(inj2)
+
+
+def test_injector_max_faults_bounds_schedule():
+    inj = FaultInjector(seed=0, rates={"decode": 1.0}, max_faults=5)
+    got = [inj.draw("decode") for _ in range(20)]
+    assert sum(f is not None for f in got) == 5
+    assert all(f is None for f in got[5:])
+
+
+def test_injector_scripted_exact_coordinates():
+    plan = {("decode", 3): Fault("decode", "transient"),
+            ("pool", 0): Fault("pool", "oom")}
+    inj = FaultInjector.scripted(plan)
+    hits = [(s, i) for s in ("decode", "pool") for i in range(6)
+            if inj.draw(s) is not None]
+    assert hits == [("decode", 3), ("pool", 0)]
+    assert [(s, i) for s, i, _ in inj.injected] == [("decode", 3),
+                                                    ("pool", 0)]
+
+
+def test_fault_validation():
+    with pytest.raises(ValueError):
+        Fault("nowhere", "transient")
+    with pytest.raises(ValueError):
+        Fault("pool", "transient")           # pool only injects oom
+    with pytest.raises(ValueError):
+        Fault("decode", "delay")             # delays live on the transfer
+    with pytest.raises(ValueError):
+        FaultInjector(rates={"bogus": 0.1})
+    with pytest.raises(ValueError):
+        FaultInjector.scripted({("decode", 0): Fault("prefill", "transient")})
+    assert set(SITES) == {"decode", "prefill", "pool", "pp_transfer"}
+
+
+# ---------------------------------------------------------------------------
+# acceptance 1: preemption-by-recompute token identity, 3 layouts
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind,kw", LAYOUTS)
+def test_preempted_streams_bitwise_identical(setup, kind, kw):
+    """Optimistic admission on an oversubscribed pool: preemptions happen,
+    every final token stream equals the undisturbed solo run, recompute
+    StepRecords carry commodel's predicted counts, and the pool drains to
+    zero leaked pages."""
+    cfg, params = setup
+    refs = _refs(cfg, params)
+    backend = make_backend(kind, cfg, params, num_slots=3, max_len=MAX_LEN,
+                           paged=True, page_size=PAGE, num_pages=10, **kw)
+    sched = Scheduler(backend, clock=VirtualClock(), admission="optimistic")
+    report = sched.run(_requests(cfg))
+
+    got = report.tokens_by_rid()
+    for r in _requests(cfg):
+        assert got[r.rid] == refs[r.rid], \
+            f"{kind}{kw}: preempted request {r.rid} diverged"
+    assert report.preemptions > 0, "pool pressure must have preempted"
+    assert all(m.finish_reason == "length" for m in report.metrics)
+
+    # one recompute record per preemption, counts == commodel at the
+    # recorded prefix length
+    recs = [s for s in report.steps if s.phase == "recompute"]
+    assert len(recs) == report.preemptions
+    t, p = kw.get("t", 1), kw.get("p", 1)
+    for rec in recs:
+        ops = cm.preemption_recompute_ops(cfg, rec.prefix_len, t, p,
+                                          gather_mode="allgather")
+        want = {}
+        for o in ops:
+            want[o.collective] = want.get(o.collective, 0) + o.count
+        assert rec.collective_counts == want, \
+            f"recompute counts diverge from commodel at {rec.prefix_len}"
+
+    # zero page leak
+    assert backend.pool.stats().used_tokens == 0
+    assert backend.pool.free_pages == backend.pool.num_pages - 1
+    assert not backend.pool.owners()
+
+
+@needs_mesh
+def test_recompute_measured_transfers_match_commodel(setup):
+    """(1,2) paged: each recompute pass ships exactly the boundary bytes
+    the comm model predicts for a prefill of the recomputed prefix — the
+    house invariant extended to the failure path."""
+    cfg, params = setup
+    backend = make_backend("pp", cfg, params, num_slots=3, max_len=MAX_LEN,
+                           t=1, p=2, paged=True, page_size=PAGE, num_pages=10)
+    report = Scheduler(backend, clock=VirtualClock(),
+                       admission="optimistic").run(_requests(cfg))
+    recs = [s for s in report.steps if s.phase == "recompute"]
+    assert recs, "expected preemptions under this pool"
+    for rec in recs:
+        # measured TransferRecords are host-side f32 (b=4), batch-1 pass
+        send = [o for o in cm.preemption_recompute_ops(
+                    cfg, rec.prefix_len, 1, 2, b=4,
+                    gather_mode="allgather")
+                if o.collective == "send"][0]
+        assert rec.measured_transfers["count"] == send.count
+        assert rec.measured_transfers["bytes"] == send.total_msg_bytes
+
+
+def test_scripted_pool_fault_forces_one_preemption(setup):
+    """An injected pool OOM takes the identical recovery path as real
+    exhaustion: exactly one preemption, streams still bitwise identical."""
+    cfg, params = setup
+    refs = _refs(cfg, params)
+    backend = make_backend("gspmd", cfg, params, num_slots=2, max_len=MAX_LEN,
+                           paged=True, page_size=PAGE)
+    inj = FaultInjector.scripted({("pool", 3): Fault("pool", "oom")})
+    report = Scheduler(backend, clock=VirtualClock(),
+                       faults=inj).run(_requests(cfg)[:2])
+    assert report.preemptions == 1
+    assert len(inj.injected) == 1
+    got = report.tokens_by_rid()
+    for r in _requests(cfg)[:2]:
+        assert got[r.rid] == refs[r.rid]
+    assert backend.pool.stats().used_tokens == 0
+
+
+def test_preemption_with_chunked_prefill(setup):
+    """Recompute prefixes re-prefill through the chunked path too: chunk
+    records are tagged phase="recompute" and identity still holds."""
+    cfg, params = setup
+    refs = _refs(cfg, params)
+    backend = make_backend("gspmd", cfg, params, num_slots=3, max_len=MAX_LEN,
+                           paged=True, page_size=PAGE, num_pages=10)
+    report = Scheduler(backend, clock=VirtualClock(), chunk_size=4,
+                       admission="optimistic").run(_requests(cfg))
+    got = report.tokens_by_rid()
+    for r in _requests(cfg):
+        assert got[r.rid] == refs[r.rid]
+    assert report.preemptions > 0
+    recs = [s for s in report.steps if s.phase == "recompute"]
+    assert len(recs) >= report.preemptions
+    # each preemption's prefix re-chunks at chunk_size=4: every
+    # (rid, prefix_len) group is a whole number of ceil(prefix/4) passes
+    groups = {}
+    for s in recs:
+        groups[(s.rid, s.prefix_len)] = groups.get(
+            (s.rid, s.prefix_len), 0) + 1
+    for (rid, plen), n in groups.items():
+        assert n % -(-plen // 4) == 0, \
+            f"rid {rid}: {n} chunk records for a {plen}-token prefix"
+    assert backend.pool.stats().used_tokens == 0
+
+
+# ---------------------------------------------------------------------------
+# acceptance 2: transient retry identity + permanent errors
+# ---------------------------------------------------------------------------
+
+
+def test_transient_decode_fault_retried_identically(setup):
+    """A transient decode fault is absorbed by retry-with-backoff: streams
+    identical, per-request retry counters bumped, and the backoff wait is
+    visible on the virtual clock."""
+    cfg, params = setup
+    refs = _refs(cfg, params)
+    backend = make_backend("gspmd", cfg, params, num_slots=2, max_len=MAX_LEN)
+    inj = FaultInjector.scripted({
+        ("decode", 2): Fault("decode", "transient"),
+        ("decode", 5): Fault("decode", "transient")})
+    clock = VirtualClock()
+    report = Scheduler(backend, clock=clock, faults=inj,
+                       retry_backoff=0.1).run(_requests(cfg)[:2])
+    got = report.tokens_by_rid()
+    for r in _requests(cfg)[:2]:
+        assert got[r.rid] == refs[r.rid]
+    assert report.retries >= 2
+    assert clock.now() >= 0.2, "two 0.1 s backoffs must show on the clock"
+
+
+def test_transient_prefill_fault_retried_identically(setup):
+    cfg, params = setup
+    refs = _refs(cfg, params)
+    backend = make_backend("gspmd", cfg, params, num_slots=2, max_len=MAX_LEN)
+    inj = FaultInjector.scripted({("prefill", 1):
+                                  Fault("prefill", "transient")})
+    clock = VirtualClock()
+    report = Scheduler(backend, clock=clock, faults=inj,
+                       retry_backoff=0.05).run(_requests(cfg)[:2])
+    got = report.tokens_by_rid()
+    for r in _requests(cfg)[:2]:
+        assert got[r.rid] == refs[r.rid]
+    assert report.retries == 1 and clock.now() >= 0.05
+
+
+def test_permanent_prefill_fault_errors_one_request(setup):
+    """A permanent fault during one request's prefill kills only that
+    request ("error"); its slot and pages free, everyone else unaffected."""
+    cfg, params = setup
+    refs = _refs(cfg, params)
+    backend = make_backend("gspmd", cfg, params, num_slots=2, max_len=MAX_LEN,
+                           paged=True, page_size=PAGE)
+    inj = FaultInjector.scripted({("prefill", 1):
+                                  Fault("prefill", "permanent")})
+    report = Scheduler(backend, clock=VirtualClock(),
+                       faults=inj).run(_requests(cfg))
+    by = {m.rid: m for m in report.metrics}
+    dead = [m.rid for m in report.metrics if m.finish_reason == "error"]
+    assert len(dead) == 1
+    for r in _requests(cfg):
+        if r.rid not in dead:
+            assert by[r.rid].tokens == refs[r.rid]
+            assert by[r.rid].finish_reason == "length"
+    assert backend.pool.stats().used_tokens == 0
+
+
+def test_exhausted_retries_finish_with_error(setup):
+    """retry_limit bounds the backoff loop: a fault that keeps firing past
+    it finishes the active set with "error" instead of spinning forever."""
+    cfg, params = setup
+    backend = make_backend("gspmd", cfg, params, num_slots=1, max_len=MAX_LEN)
+    plan = {("decode", i): Fault("decode", "transient") for i in range(10)}
+    inj = FaultInjector.scripted(plan)
+    report = Scheduler(backend, clock=VirtualClock(), faults=inj,
+                       retry_limit=2).run(_requests(cfg)[:1])
+    m = report.metrics[0]
+    assert m.finish_reason == "error"
+    assert m.retries == 2
+    assert m.num_generated >= 1, "the prefill token predates the fault"
+
+
+@needs_mesh
+def test_pp_transfer_delay_stretches_clock_not_tokens(setup):
+    """A pipeline-boundary latency spike is absorbed as pure wall time."""
+    cfg, params = setup
+    refs = _refs(cfg, params)
+    backend = make_backend("pp", cfg, params, num_slots=2, max_len=MAX_LEN,
+                           t=1, p=2)
+    inj = FaultInjector.scripted({("pp_transfer", 1):
+                                  Fault("pp_transfer", "delay",
+                                        delay_s=0.25)})
+    clock = VirtualClock()
+    report = Scheduler(backend, clock=clock,
+                       faults=inj).run(_requests(cfg)[:2])
+    got = report.tokens_by_rid()
+    for r in _requests(cfg)[:2]:
+        assert got[r.rid] == refs[r.rid]
+    assert clock.now() >= 0.25
+
+
+# ---------------------------------------------------------------------------
+# acceptance 3: deadlines and cancellation
+# ---------------------------------------------------------------------------
+
+
+def test_deadline_sheds_queued_request(setup):
+    cfg, params = setup
+    rng = np.random.default_rng(1)
+    backend = make_backend("gspmd", cfg, params, num_slots=1, max_len=MAX_LEN)
+    hog = Request(rid=0, prompt=rng.integers(2, cfg.vocab_size, 8),
+                  max_new_tokens=6)
+    doomed = Request(rid=1, prompt=rng.integers(2, cfg.vocab_size, 8),
+                     max_new_tokens=4, ttft_deadline=0.5)
+    clock = VirtualClock()
+    sched = Scheduler(backend, clock=clock)
+    sched.submit([hog, doomed])
+    sched.step()                             # hog admitted, doomed queued
+    clock.advance(1.0)                       # doomed's TTFT budget expires
+    report = sched.run()
+    by = {m.rid: m for m in report.metrics}
+    assert by[1].finish_reason == "deadline"
+    assert by[1].num_generated == 0
+    assert by[0].finish_reason == "length"
+
+
+def test_deadline_sheds_active_request_keeping_tokens(setup):
+    cfg, params = setup
+    refs = _refs(cfg, params)
+    req = _requests(cfg)[0]                  # budget 10
+    req.deadline = 0.5
+    backend = make_backend("gspmd", cfg, params, num_slots=1, max_len=MAX_LEN)
+    clock = VirtualClock()
+    sched = Scheduler(backend, clock=clock)
+    sched.submit(req)
+    for _ in range(3):
+        sched.step()                         # 3 tokens in, still alive
+    clock.advance(1.0)
+    report = sched.run()
+    m = report.metrics[0]
+    assert m.finish_reason == "deadline"
+    assert 0 < m.num_generated < req.max_new_tokens
+    assert m.tokens == refs[0][:m.num_generated], \
+        "shed request's partial stream must still be exact"
+
+
+def test_cancel_at_every_lifecycle_stage(setup):
+    cfg, params = setup
+    refs = _refs(cfg, params)
+    reqs = _requests(cfg)[:3]
+    backend = make_backend("gspmd", cfg, params, num_slots=1, max_len=MAX_LEN)
+    sched = Scheduler(backend, clock=VirtualClock())
+    sched.submit(reqs)
+    sched.step()                             # rid 0 active, 1 & 2 queued
+    assert sched.cancel(2) is True           # queued
+    sched.step()
+    assert sched.cancel(0) is True           # active, keeps its tokens
+    assert sched.cancel(42) is False         # unknown
+    report = sched.run()
+    by = {m.rid: m for m in report.metrics}
+    assert by[0].finish_reason == "cancelled"
+    assert 0 < by[0].num_generated < reqs[0].max_new_tokens
+    assert by[0].tokens == refs[0][:by[0].num_generated]
+    assert by[2].finish_reason == "cancelled" and by[2].num_generated == 0
+    assert by[1].finish_reason == "length" and by[1].tokens == refs[1]
+    assert sched.cancel(0) is False, "already finished"
+
+
+def test_admission_mode_validation(setup):
+    cfg, params = setup
+    contiguous = make_backend("gspmd", cfg, params, num_slots=1,
+                              max_len=MAX_LEN)
+    with pytest.raises(ValueError, match="paged"):
+        Scheduler(contiguous, clock=VirtualClock(), admission="optimistic")
+    with pytest.raises(ValueError, match="admission"):
+        Scheduler(contiguous, clock=VirtualClock(), admission="yolo")
+    with pytest.raises(ValueError):
+        Scheduler(contiguous, clock=VirtualClock(), retry_limit=-1)
+
+
+# ---------------------------------------------------------------------------
+# acceptance 4: chaos suite (hypothesis)
+# ---------------------------------------------------------------------------
+
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+    HAVE_HYP = True
+except ImportError:                           # pragma: no cover
+    HAVE_HYP = False
+
+
+@functools.lru_cache(maxsize=1)
+def _chaos_env():
+    """One backend + reference set shared across chaos examples (compiles
+    once; every example must leave the pool clean for the next)."""
+    cfg = get_config("llama32-3b").reduced(num_layers=2)
+    params = get_model(cfg).init(jax.random.PRNGKey(0))
+    backend = make_backend("gspmd", cfg, params, num_slots=3, max_len=MAX_LEN,
+                           paged=True, page_size=PAGE, num_pages=10)
+    return cfg, params, backend
+
+
+if HAVE_HYP:
+
+    @given(seed=st.integers(0, 2**31 - 1))
+    @settings(max_examples=6, deadline=None)
+    def test_chaos_terminates_survivors_identical_no_leak(seed):
+        """Random seeded fault schedule over every site: the run always
+        terminates, requests that finished normally are token-identical to
+        the fault-free run, and the pool leaks zero pages — even when
+        requests died mid-prefill or mid-decode."""
+        cfg, params, backend = _chaos_env()
+        refs = _refs(cfg, params)
+        inj = FaultInjector(seed=seed,
+                            rates={"decode": 0.05, "prefill": 0.05,
+                                   "pool": 0.10},
+                            transient_frac=0.7, max_faults=16)
+        sched = Scheduler(backend, clock=VirtualClock(),
+                          admission="optimistic", faults=inj,
+                          retry_backoff=1e-4)
+        report = sched.run(_requests(cfg))     # termination == returning
+        for m in report.metrics:
+            if m.finish_reason in ("length", "eos"):
+                assert m.tokens == refs[m.rid], \
+                    f"seed {seed}: survivor {m.rid} diverged"
+            else:
+                assert m.finish_reason == "error"
+        # zero page leak, whatever the fault schedule did
+        assert backend.pool.stats().used_tokens == 0
+        assert backend.pool.free_pages == backend.pool.num_pages - 1
+        assert not backend.pool.owners()

@@ -179,3 +179,61 @@ if HAVE_HYP:
             pool.free(owner)
         assert pool.free_pages == num_pages - 1
         assert pool.stats().used_tokens == 0
+
+
+# ---------------------------------------------------------------------------
+# error paths (ISSUE 6 satellite): rejected ops must not corrupt the pool
+# ---------------------------------------------------------------------------
+
+
+def test_unknown_owner_errors():
+    pool = KVPool(num_pages=4, page_size=2)
+    pool.allocate(0, 2)
+    with pytest.raises(KeyError):
+        pool.extend(7, 4)                    # unknown owner cannot grow
+    with pytest.raises(KeyError):
+        pool.fork(7, 8)                      # unknown owner cannot be forked
+    with pytest.raises(KeyError):
+        pool.fork(0, 0)                      # fork onto a live owner
+    with pytest.raises(KeyError):
+        pool.block_table(7)
+    _assert_invariants(pool)
+
+
+def test_double_free_is_noop():
+    """``free`` is idempotent by contract (the scheduler frees slots it may
+    never have admitted into) — a double free must not re-free pages that
+    another owner has since claimed."""
+    pool = KVPool(num_pages=4, page_size=2)
+    t0 = pool.allocate(0, 4)
+    pool.free(0)
+    t1 = pool.allocate(1, 4)                 # LIFO: reuses owner 0's pages
+    assert sorted(t0) == sorted(t1)
+    pool.free(0)                             # stale double free: no-op
+    assert pool.block_table(1) == t1, "double free corrupted a live owner"
+    assert pool.free_pages == 1
+    _assert_invariants(pool)
+
+
+def test_failed_claim_leaks_nothing():
+    """``_claim`` checks capacity before popping a single page, so a failed
+    allocate/extend rolls back to exactly the pre-call state."""
+    pool = KVPool(num_pages=6, page_size=2)
+    t0 = pool.allocate(0, 6)                 # 3 of 5 usable pages
+    before = pool.stats()
+    with pytest.raises(MemoryError):
+        pool.allocate(1, 8)                  # needs 4, only 2 free
+    assert pool.stats() == before, "failed allocate mutated the pool"
+    assert 1 not in pool.owners(), "failed allocate left a partial owner"
+    with pytest.raises(MemoryError):
+        pool.extend(0, 12)                   # needs 3 more, only 2 free
+    assert pool.stats() == before, "failed extend mutated the pool"
+    assert pool.block_table(0) == t0
+    assert pool.length(0) == 6, "failed extend changed the logical length"
+    _assert_invariants(pool)
+    # the pool is still fully usable after the failures
+    pool.allocate(1, 4)
+    pool.free(0)
+    pool.free(1)
+    assert pool.free_pages == 5
+    _assert_invariants(pool)

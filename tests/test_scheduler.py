@@ -346,3 +346,91 @@ def test_poisson_trace_shapes():
     assert all(2 <= r.max_new_tokens <= 6 for r in trace)
     closed = make_poisson_trace(4, rate=0, vocab_size=512)
     assert all(r.arrival == 0.0 for r in closed)
+
+
+# ---------------------------------------------------------------------------
+# submit hardening (ISSUE 6 satellites)
+# ---------------------------------------------------------------------------
+
+
+def test_submit_fifo_for_equal_arrivals(setup):
+    """The queue is a stable sorted insert: same-arrival requests are
+    admitted in submission order, and a later-arriving request submitted
+    first still sorts behind earlier arrivals."""
+    cfg, params = setup
+    rng = np.random.default_rng(2)
+    backend = ModelBackend(cfg, params, num_slots=1, max_len=MAX_LEN)
+    sched = Scheduler(backend, clock=VirtualClock())
+    # submit out of arrival order, with a 4-way tie at t=0
+    late = Request(rid=99, prompt=rng.integers(2, cfg.vocab_size, 5),
+                   max_new_tokens=2, arrival=50.0)
+    ties = [Request(rid=i, prompt=rng.integers(2, cfg.vocab_size, 5),
+                    max_new_tokens=2, arrival=0.0) for i in range(4)]
+    sched.submit(late)
+    for r in ties:
+        sched.submit(r)
+    assert [r.rid for r in sched.queue] == [0, 1, 2, 3, 99]
+    report = sched.run()
+    order = sorted(report.metrics, key=lambda m: m.admitted)
+    assert [m.rid for m in order] == [0, 1, 2, 3, 99], \
+        "equal arrivals must be served FIFO in submission order"
+
+
+def test_submit_rejects_duplicate_rid(setup):
+    """Duplicate rids would silently merge streams in tokens_by_rid()."""
+    cfg, params = setup
+    rng = np.random.default_rng(2)
+    backend = ModelBackend(cfg, params, num_slots=1, max_len=MAX_LEN)
+    sched = Scheduler(backend, clock=VirtualClock())
+    mk = lambda rid: Request(rid=rid,
+                             prompt=rng.integers(2, cfg.vocab_size, 5),
+                             max_new_tokens=2)
+    sched.submit(mk(0))
+    with pytest.raises(ValueError, match="duplicate rid 0"):
+        sched.submit(mk(0))
+    with pytest.raises(ValueError, match="duplicate rid 7"):
+        sched.submit([mk(7), mk(7)])         # dup within one batch too
+    # the failed batch must not have been partially enqueued
+    assert [r.rid for r in sched.queue] == [0]
+    sched.run()
+    # a fresh run() resets the seen set: rid 0 is usable again
+    sched.submit(mk(0))
+    report = sched.run()
+    assert [m.rid for m in report.metrics] == [0]
+
+
+def test_poisson_trace_eos_prob():
+    """eos_prob draws a geometric early stop into Request.eos_pos — the
+    EOS-heavy mix knob the overload bench series uses."""
+    trace = make_poisson_trace(64, rate=0, vocab_size=512,
+                               decode_lens=(8, 16), eos_prob=0.4, seed=5)
+    stops = [r.eos_pos for r in trace if r.eos_pos is not None]
+    assert len(stops) > 32, "p=0.4 should stop most requests early"
+    assert all(1 <= s < r.max_new_tokens
+               for s, r in zip(stops, [t for t in trace
+                                       if t.eos_pos is not None]))
+    # deterministic in the seed, and off by default
+    again = make_poisson_trace(64, rate=0, vocab_size=512,
+                               decode_lens=(8, 16), eos_prob=0.4, seed=5)
+    assert [r.eos_pos for r in again] == [r.eos_pos for r in trace]
+    assert all(r.eos_pos is None
+               for r in make_poisson_trace(8, rate=0, vocab_size=512))
+    with pytest.raises(ValueError):
+        make_poisson_trace(4, rate=0, vocab_size=512, eos_prob=1.0)
+
+
+def test_eos_pos_finishes_early(setup):
+    """The emulated early stop evicts with reason "eos" after exactly
+    eos_pos tokens, prefix-identical to the full run."""
+    cfg, params = setup
+    reqs = _ragged_requests(cfg)
+    refs = {r.rid: _solo_reference(cfg, params, r) for r in reqs}
+    reqs[1].eos_pos = 2
+    backend = ModelBackend(cfg, params, num_slots=2, max_len=MAX_LEN)
+    report = serve(backend, reqs, clock=VirtualClock())
+    by = {m.rid: m for m in report.metrics}
+    assert by[1].finish_reason == "eos"
+    assert by[1].tokens == refs[1][:2]
+    for r in reqs:
+        if r.rid != 1:
+            assert by[r.rid].tokens == refs[r.rid]

@@ -193,3 +193,56 @@ class TestSLOSanity:
     def test_e2e_composition(self):
         r = predict_slo(L3, 128, 128, t=2)
         assert r.e2e == pytest.approx(r.ttft + 127 * r.tpot)
+
+
+class TestGoodput:
+    """DESIGN.md §10: the recompute-tax goodput model behind the
+    overload series of benchmarks/serving_bench.py."""
+
+    def test_eos_heavy_mix_favors_optimistic(self):
+        # requests commit 32 decode tokens but mostly stop after ~4:
+        # conservative strands capacity on the unused reservation
+        from repro.core.slo import predict_goodput
+        kw = dict(num_slots=8, capacity_tokens=256, eos_mean=4.0)
+        cons = predict_goodput(L3, 32, 32, admission="conservative", **kw)
+        opt = predict_goodput(L3, 32, 32, admission="optimistic", **kw)
+        assert cons.preempt_rate == 0.0
+        assert opt.concurrency > cons.concurrency
+        assert opt.goodput_tok_s >= cons.goodput_tok_s
+
+    def test_full_budget_mix_favors_conservative(self):
+        # every request decodes its whole budget: overcommit buys nothing
+        # and the preemption tax makes optimistic strictly worse
+        from repro.core.slo import predict_goodput
+        kw = dict(num_slots=8, capacity_tokens=256)
+        cons = predict_goodput(L3, 32, 32, admission="conservative", **kw)
+        opt = predict_goodput(L3, 32, 32, admission="optimistic", **kw)
+        assert opt.preempt_rate > 0.0
+        assert cons.goodput_tok_s >= opt.goodput_tok_s
+
+    def test_validation_and_zero_capacity(self):
+        from repro.core.slo import predict_goodput
+        with pytest.raises(ValueError, match="admission"):
+            predict_goodput(L3, 32, 32, num_slots=4, capacity_tokens=256,
+                            admission="yolo")
+        with pytest.raises(ValueError, match="eos_mean"):
+            predict_goodput(L3, 32, 32, num_slots=4, capacity_tokens=256,
+                            eos_mean=0.0)
+        r = predict_goodput(L3, 32, 32, num_slots=4, capacity_tokens=16)
+        assert r.concurrency == 0 and r.goodput_tok_s == 0.0
+
+    def test_recompute_time_is_a_frontendless_prefill(self):
+        from repro.core.slo import (DEFAULT_OVERHEADS, predict_slo,
+                                    recompute_time)
+        rec = recompute_time(L3, 48, t=2)
+        ttft = predict_slo(L3, 48, 1, t=2).ttft
+        assert rec == pytest.approx(
+            ttft - DEFAULT_OVERHEADS.request_overhead)
+        assert recompute_time(L3, 96, t=2) > rec  # longer prefix, more work
+
+    def test_recompute_ops_are_prefill_rows(self):
+        from repro.core.commodel import comm_ops_for, preemption_recompute_ops
+        ops = preemption_recompute_ops(L3, 40, 2, 2)
+        full = comm_ops_for(L3, 40, 1, 2, 2)
+        assert ops == [o for o in full if o.phase == "prefill"]
+        assert ops and all(o.phase == "prefill" for o in ops)
