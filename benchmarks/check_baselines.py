@@ -16,6 +16,22 @@ key.  Run locally the same way:
     PYTHONPATH=src python -m benchmarks.decode_bench --dry-run
     PYTHONPATH=src python -m benchmarks.serving_bench --dry-run
     PYTHONPATH=src python -m benchmarks.check_baselines
+
+The pp-occupancy series (DESIGN.md §11) gets its own gate,
+``check_pp_occupancy``: the dynamic-schedule tick counts, busy fractions
+and per-round boundary bytes are EXACT schedule-clock properties, so both
+the dry-run file and the checked-in full baseline must land bitwise on
+``commodel.pp_schedule_stats``'s closed form, token streams must be
+depth-invariant, and depth p must beat depth 1 by the acceptance ratio
+(≥ 2× tokens/tick for pp4, ≥ 1.5× for the pp2-only dry run) with ≥ 0.8
+stage busy fraction.
+
+``--write`` regenerates the checked-in count fields after a DELIBERATE
+schedule change: it runs both --dry-run benches in-process, then copies
+every compared count field from the fresh dry-run records into the
+matching rows of ``BENCH_decode.json`` / ``BENCH_serve.json`` — one
+command instead of a full bench rerun (timing fields keep their baseline
+values; only the machine-independent counts move).
 """
 import json
 import os
@@ -31,12 +47,14 @@ CHECKS = [
      ("decode_collective_counts",)),
     (os.path.join(REPO, "BENCH_serve.json"),
      os.path.join(REPO, "results", "BENCH_serve.dryrun.json"),
-     ("series", "arch", "backend", "tp", "cp", "pp", "paged", "admission"),
+     ("series", "arch", "backend", "tp", "cp", "pp", "paged", "admission",
+      "inflight"),
      ("decode_collective_counts", "prefill_chunk_counts",
       "prefill_collective_counts", "recompute_collective_counts")),
 ]
 
 SERVE_DRY = os.path.join(REPO, "results", "BENCH_serve.dryrun.json")
+SERVE_FULL = os.path.join(REPO, "BENCH_serve.json")
 
 
 def check_overload_ordering(dry_path=SERVE_DRY):
@@ -80,6 +98,80 @@ def check_overload_ordering(dry_path=SERVE_DRY):
     return failures
 
 
+def check_pp_occupancy(path, full):
+    """Gate the pp-occupancy series (DESIGN.md §11) in ``path``.
+
+    Exact gates (the schedule clock is deterministic, so these are
+    equalities, not tolerances): measured decode ticks == the
+    admission-wave composition of ``pp_schedule_stats``; measured busy
+    fractions == the closed form, identical on every stage; per-round
+    boundary bytes == the PP closed form; token checksums identical at
+    every depth.  Threshold gates (the acceptance criteria): at depth p,
+    tokens/tick ≥ 2× depth 1 when pp4 is present (``full``) or ≥ 1.5× on
+    the pp2-only dry run, and stage busy fraction ≥ 0.8.
+    """
+    if not os.path.exists(path):
+        return [f"{path} missing — run the --dry-run bench first"]
+    with open(path) as f:
+        recs = [r for r in json.load(f) if r.get("series") == "pp-occupancy"]
+    name = os.path.basename(path)
+    if not recs:
+        return [f"{name}: pp-occupancy series missing — regenerate"]
+    failures = []
+    by_pp = {}
+    for r in recs:
+        by_pp.setdefault(r["pp"], {})[r["inflight"]] = r
+    want_pps = {2, 4} if full else {2}
+    if set(by_pp) != want_pps:
+        failures.append(f"{name}: pp-occupancy has pp={sorted(by_pp)}, "
+                        f"want {sorted(want_pps)}")
+    for p, by_d in sorted(by_pp.items()):
+        if set(by_d) != set(range(1, p + 1)):
+            failures.append(f"{name}: pp{p} depths {sorted(by_d)}, "
+                            f"want 1..{p}")
+            continue
+        for d, r in sorted(by_d.items()):
+            tag = f"{name} pp{p} inflight{d}"
+            if r["decode_ticks"] != r["predicted_ticks"]:
+                failures.append(
+                    f"{tag}: measured {r['decode_ticks']} schedule ticks, "
+                    f"closed form predicts {r['predicted_ticks']}")
+            if abs(r["busy_fraction_mean"]
+                   - r["predicted_busy_fraction"]) > 1e-12:
+                failures.append(
+                    f"{tag}: busy fraction {r['busy_fraction_mean']} != "
+                    f"closed form {r['predicted_busy_fraction']}")
+            if any(abs(f - r["busy_fraction_mean"]) > 1e-12
+                   for f in r["stage_busy_fraction"]):
+                failures.append(
+                    f"{tag}: per-stage busy fractions "
+                    f"{r['stage_busy_fraction']} are not uniform — a "
+                    "stage is starving")
+            if (r["boundary_bytes_per_round_measured"]
+                    != r["boundary_bytes_per_round_predicted"]):
+                failures.append(
+                    f"{tag}: per-round boundary bytes "
+                    f"{r['boundary_bytes_per_round_measured']} != PP "
+                    f"closed form {r['boundary_bytes_per_round_predicted']}")
+            if r["token_checksum"] != by_d[1]["token_checksum"] \
+                    or not r["token_checksum_matches_depth1"]:
+                failures.append(
+                    f"{tag}: token stream differs from depth 1 — the "
+                    "dynamic schedule broke bitwise identity")
+        d1, dp = by_d[1], by_d[p]
+        ratio = dp["tokens_per_tick"] / d1["tokens_per_tick"]
+        want = 2.0 if p == 4 else 1.5
+        if ratio < want:
+            failures.append(
+                f"{name} pp{p}: depth-{p} tokens/tick is only {ratio:.3f}× "
+                f"depth 1 (acceptance: ≥ {want}×)")
+        if dp["busy_fraction_mean"] < 0.8:
+            failures.append(
+                f"{name} pp{p}: depth-{p} stage busy fraction "
+                f"{dp['busy_fraction_mean']:.3f} < 0.8")
+    return failures
+
+
 def _index(records, key_fields):
     out = {}
     for r in records:
@@ -113,19 +205,70 @@ def check(baseline_path, dry_path, key_fields, count_fields):
     return failures
 
 
+def write_baselines():
+    """``--write``: regenerate the checked-in count fields in one command.
+
+    Runs both --dry-run benches in-process (they refresh
+    ``results/BENCH_*.dryrun.json``), then copies every compared count
+    field from the fresh dry-run records into the matching checked-in
+    baseline rows.  Timing fields are machine-dependent and keep their
+    baseline values — only the deterministic counts move.  Dry-run keys
+    with no baseline row are reported (they need a full bench rerun to
+    create the row in the first place)."""
+    from benchmarks import decode_bench, serving_bench
+
+    decode_bench.main(dry_run=True)
+    serving_bench.main(dry_run=True)
+    unmatched = []
+    for baseline_path, dry_path, key_fields, count_fields in CHECKS:
+        with open(baseline_path) as f:
+            base_recs = json.load(f)
+        base = _index(base_recs, key_fields)
+        with open(dry_path) as f:
+            dry = json.load(f)
+        touched = 0
+        for rec in dry:
+            key = tuple(rec.get(k) for k in key_fields)
+            ref = base.get(key)
+            if ref is None:
+                unmatched.append(f"{os.path.basename(baseline_path)}: "
+                                 f"{dict(zip(key_fields, key))}")
+                continue
+            for field in count_fields:
+                if field in rec and rec.get(field) != ref.get(field):
+                    ref[field] = rec[field]
+                    touched += 1
+        with open(baseline_path, "w") as f:
+            json.dump(base_recs, f, indent=2, sort_keys=True)
+        print(f"--write: {os.path.basename(baseline_path)}: "
+              f"{touched} count field(s) updated")
+    if unmatched:
+        print("--write: dry-run rows with NO baseline row (a full bench "
+              "run must create them):")
+        for u in unmatched:
+            print(f"  {u}")
+
+
 def main():
     failures = []
     for baseline, dry, keys, counts in CHECKS:
         failures += check(baseline, dry, keys, counts)
     failures += check_overload_ordering()
+    failures += check_pp_occupancy(SERVE_DRY, full=False)
+    if os.path.exists(SERVE_FULL):
+        failures += check_pp_occupancy(SERVE_FULL, full=True)
     if failures:
         print("BASELINE DRIFT — predicted collective counts changed:")
         for f in failures:
             print(f"  {f}")
         sys.exit(1)
     print("baseline check OK: predicted collective counts match "
-          "BENCH_decode.json / BENCH_serve.json, overload ordering holds")
+          "BENCH_decode.json / BENCH_serve.json, overload ordering holds, "
+          "pp-occupancy sits on the pp_schedule_stats closed form")
 
 
 if __name__ == "__main__":
-    main()
+    if "--write" in sys.argv:
+        write_baselines()
+    else:
+        main()

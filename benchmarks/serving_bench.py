@@ -28,6 +28,17 @@ Four series (4-device host-platform mesh):
               it is not diffed against the full-series baseline) and the
               recompute collective counts; the run completing at all is
               the zero-MemoryError-escapes assertion
+  pp-occupancy  the dynamic-schedule payoff curve (DESIGN.md §11): the SAME
+              closed request set through pp2/pp4 at in-flight depth
+              d ∈ 1..p (``num_slots = 2·d`` so depth adds concurrent
+              groups, never shrinks them).  Every quantity gated here is
+              on the deterministic schedule clock — decode ticks, tokens
+              per tick and per-stage busy fractions land EXACTLY on
+              ``commodel.pp_schedule_stats`` (single-process hosts cannot
+              overlap stages in wall time, so wall tokens/s is reported
+              but not gated), per-round boundary bytes land exactly on the
+              PP closed form, and the token checksum is depth-invariant —
+              the bitwise-identity acceptance across schedules
 
 Every record carries the *predicted* per-step decode collective counts (and,
 for paged runs, the per-chunk prefill counts; for CP runs, the per-prefill
@@ -76,6 +87,14 @@ OV_PROMPT_LENS = (8, 32)
 OV_DECODE_LENS = (6, 20)
 OV_MAX_LEN = 64
 OV_EOS_PROB = 0.3
+
+# pp-occupancy series: dynamic-schedule depth sweep (DESIGN.md §11).  A
+# request group is OCC_GROUP slots; depth d runs d groups in flight on
+# num_slots = OCC_GROUP·d, and every depth serves the same seeded
+# OCC_GROUP·p-request closed set so tokens are comparable bitwise.
+OCC_GROUP = 2
+OCC_PROMPT_LEN = 8
+OCC_NEW_TOKENS = 6
 
 
 def _measure(dry_run: bool = False):
@@ -130,7 +149,7 @@ def _measure(dry_run: bool = False):
                 "series": series, "arch": cfg.name, "backend": name,
                 "tp": t, "cp": 1, "pp": p, "paged": paged,
                 "chunk_size": chunk if paged else None,
-                "num_slots": num_slots, "rate_req_s": rate,
+                "inflight": 1, "num_slots": num_slots, "rate_req_s": rate,
                 **s,
                 "queue_delay_mean_s": float(
                     sum(m.queue_delay for m in report.metrics)
@@ -213,8 +232,8 @@ def _measure(dry_run: bool = False):
         results.append({
             "series": "cp-longctx", "arch": cfg.name,
             "backend": f"cp{cdeg}", "tp": 1, "cp": cdeg, "pp": 1,
-            "paged": False, "chunk_size": None, "num_slots": num_slots,
-            "rate_req_s": 0.0, **s,
+            "paged": False, "chunk_size": None, "inflight": 1,
+            "num_slots": num_slots, "rate_req_s": 0.0, **s,
             "ttft_by_prompt_len_s": {
                 str(k): float(np.mean(v))
                 for k, v in sorted(by_len.items())},
@@ -226,6 +245,83 @@ def _measure(dry_run: bool = False):
             "predicted_tpot_s": pred.tpot,
             "predicted_e2e_s": pred.e2e,
         })
+    # -- pp-occupancy series: the dynamic instruction-queue schedule
+    #    (DESIGN.md §11) at in-flight depth 1..p.  One request group is
+    #    OCC_GROUP slots; depth d serves d groups concurrently
+    #    (num_slots = OCC_GROUP·d), and every depth serves the IDENTICAL
+    #    seeded request set, so tokens must be bitwise depth-invariant.
+    #    All gated quantities are schedule-clock (tick) exact:
+    #    check_baselines diffs them against commodel.pp_schedule_stats.
+    import hashlib
+
+    from repro.core.commodel import pp_schedule_stats
+
+    occ_m = 4 if dry_run else OCC_NEW_TOKENS       # tokens per request
+    occ_rounds = occ_m - 1                         # decode rounds after prefill
+    for p in ([2] if dry_run else [2, 4]):
+        n_req = OCC_GROUP * p
+        prng = np.random.default_rng(23)
+        prompts = [prng.integers(2, cfg.vocab_size, OCC_PROMPT_LEN)
+                   .astype(np.int32) for _ in range(n_req)]
+        checksums = {}
+        for d in range(1, p + 1):
+            slots = OCC_GROUP * d
+            backend = make_backend("pp", cfg, params, num_slots=slots,
+                                   max_len=MAX_LEN, t=1, p=p, inflight=d)
+            sched = lambda: Scheduler(backend)
+            wrng = np.random.default_rng(1)
+            sched().run([Request(rid=10_000,
+                                 prompt=wrng.integers(2, cfg.vocab_size,
+                                                      OCC_PROMPT_LEN),
+                                 max_new_tokens=2)])
+            report = sched().run([
+                Request(rid=i, prompt=prompts[i], max_new_tokens=occ_m)
+                for i in range(n_req)])
+            s = report.summary()
+            occ = report.occupancy()
+            toks = report.tokens_by_rid()
+            checksum = hashlib.sha256(
+                json.dumps(toks, sort_keys=True).encode()).hexdigest()
+            checksums[d] = checksum
+            # the scheduler admits in waves of `slots` requests (admission
+            # syncs the queue), so predicted ticks compose per wave
+            pred_ticks, pred_busy_rounds, left = 0, 0, n_req
+            while left > 0:
+                wave = min(left, slots)
+                left -= wave
+                st = pp_schedule_stats(p, wave // OCC_GROUP, occ_rounds)
+                pred_ticks += st.ticks
+                pred_busy_rounds += st.stage_forwards[0]
+            send = [o for o in backend.decode_comm_ops(batch=OCC_GROUP)
+                    if o.collective == "send"]
+            dec = [r for r in report.steps if r.phase == "decode"]
+            results.append({
+                "series": "pp-occupancy", "arch": cfg.name,
+                "backend": f"pp{p}-inflight{d}", "tp": 1, "cp": 1,
+                "pp": p, "paged": False, "chunk_size": None,
+                "inflight": d, "num_slots": slots, "rate_req_s": 0.0,
+                **s,
+                "decode_ticks": occ["ticks"],
+                "decode_tokens": occ["decode_tokens"],
+                "tokens_per_tick": occ["tokens_per_tick"],
+                "stage_busy_fraction": occ["stage_busy_fraction"],
+                "busy_fraction_mean": occ["busy_fraction_mean"],
+                "decode_rounds": len(dec),
+                "predicted_ticks": pred_ticks,
+                "predicted_busy_fraction":
+                    pred_busy_rounds / pred_ticks if pred_ticks else 0.0,
+                "boundary_bytes_per_round_measured":
+                    sum(r.measured_transfers.get("bytes", 0) for r in dec)
+                    / max(len(dec), 1),
+                "boundary_bytes_per_round_predicted":
+                    float(sum(o.total_msg_bytes for o in send)),
+                "decode_collective_counts":
+                    step_collective_counts(backend, OCC_GROUP),
+                "token_checksum": checksum,
+                "token_checksum_matches_depth1":
+                    checksum == checksums[1],
+            })
+
     # -- overload series: conservative vs optimistic admission on an
     #    oversubscribed pool, EOS-heavy closed trace (DESIGN.md §10).  Both
     #    policies serve the identical trace to completion (greedy decode is
@@ -273,7 +369,7 @@ def _measure(dry_run: bool = False):
         results.append({
             "series": "overload", "arch": cfg.name,
             "backend": f"gspmd-paged-{admission}", "tp": 1, "cp": 1,
-            "pp": 1, "paged": True, "chunk_size": None,
+            "pp": 1, "paged": True, "chunk_size": None, "inflight": 1,
             "admission": admission, "num_slots": num_slots,
             "rate_req_s": 0.0, **s,
             "pool_pages": ov_pages, "eos_prob": OV_EOS_PROB,

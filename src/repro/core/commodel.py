@@ -422,3 +422,94 @@ def preemption_recompute_ops(cfg: ModelConfig, prefix_len: int, t: int = 1,
     ops = comm_ops_for(cfg, prefix_len, 1, t, p, c=c, b=b, batch=batch,
                        gather_mode=gather_mode)
     return [o for o in ops if o.phase == "prefill"]
+
+
+# ---------------------------------------------------------------------------
+# Dynamic pipeline schedules — instruction counts + ticks (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PPScheduleStats:
+    """Closed-form shape of a drain-first dynamic PP decode schedule
+    (runtime/schedule.py): ``depth`` microbatch groups, each decoding
+    ``rounds`` tokens through ``p`` stages, at most one StageForward per
+    stage per tick, deepest stage first.
+
+    Tick count: group g's round r occupies stage s at tick
+    ``r·max(p, depth) + g + s`` — consecutive rounds of one group are
+    ``max(p, depth)`` ticks apart (at depth ≥ p the pipeline is saturated
+    and a group must wait for its own previous round; at depth < p the
+    round trip through p stages dominates).  The last group's last round
+    leaves stage p-1 at tick ``(rounds-1)·max(p, depth) + (depth-1) +
+    (p-1)``, so the makespan is::
+
+        M = rounds · max(p, depth) + min(p, depth) − 1
+
+    Per-stage busy ticks are ``depth · rounds`` (every round visits every
+    stage once), giving busy fraction ``depth·rounds / M`` → ``depth/p``
+    of the stages' time at depth < p, → 1 as depth ≥ p — the bubble-
+    occupancy term of ``slo.predict_slo(inflight=...)``.
+    """
+    p: int
+    depth: int
+    rounds: int
+
+    @property
+    def stage_forwards(self) -> Tuple[int, ...]:
+        """StageForward instructions issued per stage."""
+        return (self.depth * self.rounds,) * self.p
+
+    @property
+    def boundary_sends(self) -> int:
+        """BoundarySend instructions (== BoundaryRecv): (p-1) links per
+        round, each shipping the 2-tensor summand pair."""
+        return (self.p - 1) * 2 * self.depth * self.rounds
+
+    @property
+    def samples(self) -> int:
+        """SampleToken instructions — one per completed round."""
+        return self.depth * self.rounds
+
+    @property
+    def ticks(self) -> int:
+        """Schedule makespan M (0 when nothing decodes)."""
+        if self.rounds == 0 or self.depth == 0:
+            return 0
+        return self.rounds * max(self.p, self.depth) \
+            + min(self.p, self.depth) - 1
+
+    @property
+    def busy_fraction(self) -> float:
+        """Per-stage (uniform) fraction of ticks spent busy."""
+        t = self.ticks
+        return self.depth * self.rounds / t if t else 0.0
+
+
+def pp_schedule_stats(p: int, depth: int, rounds: int) -> PPScheduleStats:
+    """Predicted instruction counts / ticks / occupancy of a dynamic PP
+    decode schedule at in-flight ``depth`` over ``rounds`` decode rounds
+    per group.  Pinned == the executed queue's instruction log and tick
+    counters (tests/test_schedule.py) == the pp-occupancy bench series."""
+    if p < 1 or depth < 0 or rounds < 0:
+        raise ValueError(f"invalid schedule: p={p} depth={depth} "
+                         f"rounds={rounds}")
+    return PPScheduleStats(p=p, depth=depth, rounds=rounds)
+
+
+def pp_schedule_ops(cfg: ModelConfig, depth: int, rounds: int, p: int, *,
+                    t: int = 1, b: int = 2, group: int = 1) -> List[CommOp]:
+    """Boundary transfers of a dynamic PP decode schedule (DESIGN.md §11).
+
+    Every round still ships the PP closed form — (p-1) links × 2 tensors
+    of [group, h/t] — so wire bytes *per token* are depth-invariant while
+    tick throughput scales toward ×p: filling the bubble is free on the
+    wire, which is the paper's PP-bytes-vs-latency tradeoff closing.
+    """
+    if p <= 1 or depth * rounds == 0:
+        return []
+    n = depth * rounds
+    h = cfg.d_model // t
+    return [CommOp(direction, "decode", (p - 1) * 2 * n,
+                   (group * 1, h), p, b)
+            for direction in ("send", "recv")]

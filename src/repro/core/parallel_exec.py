@@ -1044,6 +1044,30 @@ class PipelineEngine:
                 x = self._move_boundary(out, s, phase)
         return out, new_caches
 
+    # -- instruction-queue surface (runtime/schedule.py, DESIGN.md §11) ------
+    def decode_stage_fns(self, vector_pos: bool = False):
+        """The per-stage jitted decode fns, independently drivable: the
+        dynamic instruction queue issues them one stage at a time instead
+        of through the fused ``decode_once`` wave."""
+        return [fn for fn, _ in self._decode_fns(vector_pos=vector_pos)]
+
+    def paged_stage_fns(self):
+        """Per-stage paged fns for queue-driven paged decode rounds."""
+        return [fn for fn, _ in self._paged_fns()]
+
+    def feed_tokens(self, tokens, paged: bool = False):
+        """Place next-token ids on stage 0's mesh — the feedback hop that
+        starts a decode round (a few bytes; not charged by Eq. 2)."""
+        spec = P(None, None) if paged else P(None)
+        return jax.device_put(jnp.asarray(tokens, jnp.int32),
+                              NamedSharding(self.meshes[0], spec))
+
+    def send_boundary(self, out, s: int, phase: str = "decode"):
+        """Ship stage ``s``'s boundary pair to stage ``s+1`` and log its
+        TransferRecords — the ``BoundarySend``/``BoundaryRecv`` pair of an
+        instruction-queue round."""
+        return self._move_boundary(out, s, phase)
+
     def generate(self, staged_params, caches, token, pos, num_tokens: int):
         """Greedy pipelined generation: N tokens through all p stages.
 

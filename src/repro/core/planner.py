@@ -29,6 +29,7 @@ class PlanCandidate:
     pipeline_parallel: int
     slo: SLOReport
     score: float
+    occupancy: float = 1.0
 
     @property
     def name(self) -> str:
@@ -68,23 +69,32 @@ def plan(cfg: ModelConfig, world: int, s_p: int, s_d: int, *,
          hw: HardwareProfile = H100_NODE,
          ov: EngineOverheads = DEFAULT_OVERHEADS,
          objective: str = "e2e",
-         volume_budget: Optional[float] = None) -> List[PlanCandidate]:
+         volume_budget: Optional[float] = None,
+         inflight: int = 1) -> List[PlanCandidate]:
     """Rank all feasible (t, c, p) layouts for ``world`` chips.
 
     objective: "ttft" | "tpot" | "e2e" | "volume".
     volume_budget: optional cap on comm wire bytes (models a bandwidth-
     constrained fabric — layouts above the cap are ranked last).
+    inflight: dynamic-schedule microbatch depth (DESIGN.md §11).  PP
+    layouts are scored with ``min(inflight, p)/p`` of the decode bubble
+    filled — the "tpot" objective ranks by ``tpot_effective``, and "e2e"
+    inherits the same term through predict_slo, so a deep pipeline that
+    looks bad serialized can win once the scheduler keeps it occupied.
+    At inflight=1 the ranking is bitwise the old one.
     """
     cands = []
     for t, c, p in feasible_layouts(cfg, world):
-        slo = predict_slo(cfg, s_p, s_d, t, p, hw=hw, ov=ov, c=c)
+        slo = predict_slo(cfg, s_p, s_d, t, p, hw=hw, ov=ov, c=c,
+                          inflight=inflight)
         score = {
-            "ttft": slo.ttft, "tpot": slo.tpot, "e2e": slo.e2e,
-            "volume": slo.comm_volume,
+            "ttft": slo.ttft, "tpot": slo.breakdown["tpot_effective"],
+            "e2e": slo.e2e, "volume": slo.comm_volume,
         }[objective]
         if volume_budget is not None and slo.comm_volume > volume_budget:
             score = float("inf")
-        cands.append(PlanCandidate(t, c, p, slo, score))
+        cands.append(PlanCandidate(t, c, p, slo, score,
+                                   occupancy=slo.occupancy))
     cands.sort(key=lambda x: (x.score, x.slo.e2e))
     return cands
 

@@ -56,6 +56,7 @@ class SLOReport:
     e2e: float
     comm_volume: float
     breakdown: Dict[str, float]
+    occupancy: float = 1.0
 
     def row(self) -> str:
         return (f"TTFT {self.ttft*1e3:8.1f} ms  TPOT {self.tpot*1e3:7.2f} ms  "
@@ -92,14 +93,23 @@ def predict_slo(cfg: ModelConfig, s_p: int, s_d: int, t: int = 1, p: int = 1,
                 hw: HardwareProfile = H100_NODE,
                 ov: EngineOverheads = DEFAULT_OVERHEADS,
                 batch: int = 1, dtype_bytes: int = 2,
-                c: int = 1) -> SLOReport:
+                c: int = 1, inflight: int = 1) -> SLOReport:
     """Predict TTFT/TPOT/E2E for a (t, c, p) layout of one inference
     request.  Context parallelism (``c > 1``, DESIGN.md §9) divides the
     prefill compute over t·c workers and adds the per-layer ring latency
     (``commodel.cp_comm_ops``: 2L(c-1) permutes + 1 cp allreduce) to the
     prefill communication; decode terms are untouched — the cp workers
     replicate decode, so CP buys TTFT on long prompts and is pure overhead
-    on short ones (and on TPOT always)."""
+    on short ones (and on TPOT always).
+
+    ``inflight`` is the dynamic-schedule microbatch depth (DESIGN.md §11):
+    with d groups in flight a p-stage pipeline keeps each stage busy
+    ``occ = min(d, p)/p`` of the time, so the *per-request* decode cadence
+    improves from one token per p stage-steps to one per ``p·occ`` —
+    ``tpot_effective = tpot / (occ · p)`` with tpot the single-request
+    serialized value.  At ``inflight=1`` every term is bitwise the old
+    report (occ·p = 1 only when p = 1; for p > 1 occ = 1/p and
+    tpot_effective = tpot exactly, since tpot already serializes stages)."""
     n_active = cfg.active_param_count()
     world = t * c * p
     nodes = max(1, math.ceil(world / hw.intra_degree))
@@ -157,14 +167,22 @@ def predict_slo(cfg: ModelConfig, s_p: int, s_d: int, t: int = 1, p: int = 1,
             + (p * ov.stage_overhead_decode if p > 1 else 0.0)
             + cross_links * ov.cross_link_decode_overhead + decode_comm)
 
-    e2e = ttft + max(s_d - 1, 0) * tpot
+    # dynamic-schedule occupancy (DESIGN.md §11): depth-d in-flight
+    # microbatching fills d of the p bubble slots, so the effective
+    # per-request token cadence divides by the filled fraction × depth.
+    depth_eff = min(max(1, int(inflight)), p)
+    occ = depth_eff / p if p > 1 else 1.0
+    tpot_effective = tpot / depth_eff if p > 1 else tpot
+
+    e2e = ttft + max(s_d - 1, 0) * tpot_effective
     return SLOReport(ttft, tpot, e2e, comm_volume, {
         "prefill_compute": prefill_compute,
         "prefill_comm": phase_comm("prefill"),
         "decode_compute": decode_compute,
         "decode_comm_per_tok": decode_comm,
+        "pp_occupancy": occ, "tpot_effective": tpot_effective,
         "nodes": nodes, "tp_cross": tp_cross, "cross_links": cross_links,
-    })
+    }, occupancy=occ)
 
 
 # ---------------------------------------------------------------------------
@@ -211,7 +229,8 @@ def predict_goodput(cfg: ModelConfig, s_p: int, s_d: int, *,
                     t: int = 1, p: int = 1,
                     hw: HardwareProfile = H100_NODE,
                     ov: EngineOverheads = DEFAULT_OVERHEADS,
-                    dtype_bytes: int = 2, c: int = 1) -> GoodputReport:
+                    dtype_bytes: int = 2, c: int = 1,
+                    inflight: int = 1) -> GoodputReport:
     """Goodput of a slot/page-bound serving engine under overload.
 
     The request mix decodes ``eos_mean`` tokens on average (early stop;
@@ -250,15 +269,20 @@ def predict_goodput(cfg: ModelConfig, s_p: int, s_d: int, *,
         return GoodputReport(0, 0.0, 0.0, float("inf"), 0.0,
                              {"worst_tokens": worst, "actual_tokens": actual})
     base = predict_slo(cfg, s_p, int(round(n_eff)), t, p, hw=hw, ov=ov,
-                       batch=concurrency, dtype_bytes=dtype_bytes, c=c)
+                       batch=concurrency, dtype_bytes=dtype_bytes, c=c,
+                       inflight=inflight)
     # a preemption strikes mid-decode: mean recomputed prefix is the prompt
     # plus half the decoded tokens
     rec = recompute_time(cfg, int(s_p + n_eff / 2), t, p, hw=hw, ov=ov,
                          dtype_bytes=dtype_bytes, c=c)
-    service = base.e2e + preempt_rate * rec
+    service = (base.ttft
+               + max(int(round(n_eff)) - 1, 0)
+               * base.breakdown["tpot_effective"]
+               + preempt_rate * rec)
     goodput = concurrency * n_eff / service
     return GoodputReport(
         concurrency=int(concurrency), preempt_rate=preempt_rate,
         recompute_s=rec, service_s=service, goodput_tok_s=goodput,
         breakdown={"worst_tokens": float(worst), "actual_tokens": actual,
-                   "e2e_s": base.e2e, "recovery_s": preempt_rate * rec})
+                   "e2e_s": base.e2e, "recovery_s": preempt_rate * rec,
+                   "pp_occupancy": base.occupancy})

@@ -75,6 +75,7 @@ from repro.core.commodel import CommOp, chunked_prefill_ops, comm_ops_for
 from repro.models.layers import paged_cache_update
 from repro.models.transformer import get_model
 from repro.runtime.kvpool import KVPool
+from repro.runtime.schedule import DynamicPPQueue, FusedQueue
 
 
 @runtime_checkable
@@ -87,6 +88,8 @@ class DecodeBackend(Protocol):
     t: int
     c: int
     p: int
+    inflight: int        # in-flight microbatch groups (1 on fused backends)
+    group_size: int      # slots per group (num_slots // inflight)
 
     def prefill_into_slots(self, prompts: Sequence[np.ndarray],
                            slots: Sequence[int]) -> np.ndarray: ...
@@ -137,6 +140,10 @@ class _BackendBase:
         self.num_slots = int(num_slots)
         self.max_len = int(max_len)
         self.t, self.c, self.p = int(t), int(c), int(p)
+        # fused backends run one microbatch group spanning every slot;
+        # PPBackend overrides both when inflight > 1 (DESIGN.md §11)
+        self.inflight = 1
+        self.group_size = self.num_slots
         self.paged = bool(paged)
         if self.paged:
             if cfg.family != "dense":
@@ -323,6 +330,11 @@ class _BackendBase:
     def drain_transfers(self) -> dict:
         """Inter-stage bytes moved since the last drain (PP only)."""
         return {"count": 0, "bytes": 0}
+
+    def make_queue(self):
+        """Instruction queue the scheduler drains (DESIGN.md §11): the
+        fused decode step wrapped as a degenerate 1-instruction queue."""
+        return FusedQueue(self)
 
     def free_slots(self, slots: Sequence[int]) -> None:
         for s in slots:
@@ -572,25 +584,44 @@ class PPBackend(_BackendBase):
     ``c > 1`` CP-shards each stage's prefill over the stage's cp mesh axis
     (boundary hops shrink to [S/c, h/t] per worker); the ring-assembled
     per-stage caches land in the stage slot rows or page pools, and decode
-    runs the unchanged per-stage steps replicated over cp (DESIGN.md §9)."""
+    runs the unchanged per-stage steps replicated over cp (DESIGN.md §9).
+
+    ``inflight > 1`` (DESIGN.md §11) splits the slots into ``inflight``
+    *microbatch groups* of ``num_slots // inflight`` rows each.  The slot
+    contiguous caches become per-group per-stage caches (``gcaches[g][s]``)
+    so groups can occupy different stages concurrently; paged pools stay
+    shared per stage (rounds are isolated by their disjoint block tables).
+    The group decode round is driven instruction-by-instruction via
+    ``start_round`` / ``run_stage`` / ``send_boundary`` by the
+    ``DynamicPPQueue`` that ``make_queue`` returns."""
 
     def __init__(self, cfg: ModelConfig, params, num_slots: int,
                  max_len: int = 256, t: int = 1, p: int = 2,
                  unroll: bool = False, devices=None, paged: bool = False,
                  page_size: int = 16, num_pages: Optional[int] = None,
-                 c: int = 1):
+                 c: int = 1, inflight: int = 1):
         super().__init__(cfg, num_slots, max_len, t=t, p=p, c=c,
                          paged=paged, page_size=page_size,
                          num_pages=num_pages)
         if cfg.family != "dense":
             raise ValueError("PipelineEngine covers the dense family")
+        if inflight < 1 or num_slots % inflight:
+            raise ValueError(
+                f"inflight must divide num_slots: got inflight={inflight}, "
+                f"num_slots={num_slots}")
+        self.inflight = int(inflight)
+        self.group_size = num_slots // self.inflight
         self.engine = px.PipelineEngine(cfg, t=t, p=p, c=c, unroll=unroll,
                                         devices=devices)
         self.staged = self.engine.prepare(params)
-        self.caches = []
-        for s in range(p):
-            lo, hi = px.stage_layer_range(cfg, p, s)
-            if self.paged:
+        kv_spec = lambda s: NamedSharding(
+            self.engine.meshes[s],
+            P(None, None, None, "tp" if t > 1 else None, None))
+        self.caches = []       # paged: per-stage page pools
+        self.gcaches = None    # contiguous: per-group per-stage slot caches
+        if self.paged:
+            for s in range(p):
+                lo, hi = px.stage_layer_range(cfg, p, s)
                 # per-stage page pools share ONE block-table space: logical
                 # page j of a slot lives at physical page table[j] in every
                 # stage's [L_s, P, ps, kv, D] pool
@@ -599,22 +630,27 @@ class PPBackend(_BackendBase):
                                     self.page_size, cfg.num_kv_heads,
                                     cfg.head_dim), jnp.dtype(cfg.dtype))
                     for key in ("k", "v")}
-            else:
-                self.cache_w = get_model(cfg).cache_width(max_len)
+                if t > 1 or c > 1:
+                    leaves = {key: jax.device_put(a, kv_spec(s))
+                              for key, a in leaves.items()}
+                self.caches.append(leaves)
+        else:
+            self.cache_w = get_model(cfg).cache_width(max_len)
+
+            def stage_cache(s):
+                lo, hi = px.stage_layer_range(cfg, p, s)
                 leaves = {
-                    key: jnp.zeros((hi - lo, num_slots, self.cache_w,
+                    key: jnp.zeros((hi - lo, self.group_size, self.cache_w,
                                     cfg.num_kv_heads, cfg.head_dim),
                                    jnp.dtype(cfg.dtype))
                     for key in ("k", "v")}
-            if t > 1 or c > 1:
-                leaves = {
-                    key: jax.device_put(
-                        a, NamedSharding(
-                            self.engine.meshes[s],
-                            P(None, None, None,
-                              "tp" if t > 1 else None, None)))
-                    for key, a in leaves.items()}
-            self.caches.append(leaves)
+                if t > 1 or c > 1:
+                    leaves = {key: jax.device_put(a, kv_spec(s))
+                              for key, a in leaves.items()}
+                return leaves
+
+            self.gcaches = [[stage_cache(s) for s in range(p)]
+                            for _ in range(self.inflight)]
         self._writes = [jax.jit(_write_slot, donate_argnums=(0,))
                         for _ in range(p)]
         if self.paged and c > 1:
@@ -631,8 +667,9 @@ class PPBackend(_BackendBase):
             self.staged, self._as_prompt(prompt), cache_w=self.cache_w)
 
     def _scatter(self, small, slot: int) -> None:
-        self.caches = [
-            self._writes[s](self.caches[s], small[s], jnp.int32(slot))
+        g, row = divmod(slot, self.group_size)
+        self.gcaches[g] = [
+            self._writes[s](self.gcaches[g][s], small[s], jnp.int32(row))
             for s in range(self.p)]
 
     def _seed_slot_pages(self, small, slot: int) -> None:
@@ -649,10 +686,67 @@ class PPBackend(_BackendBase):
     def decode_step(self, tokens, pos) -> np.ndarray:
         if self.paged:
             return self._paged_decode(tokens, pos)
-        logits, self.caches = self.engine.decode_once(
-            self.staged, self.caches, jnp.asarray(tokens, jnp.int32),
-            jnp.asarray(np.asarray(pos), jnp.int32))
-        return self._first_token(logits)
+        tokens = np.asarray(tokens, np.int32)
+        pos = np.asarray(np.asarray(pos), np.int32)
+        out = np.zeros(self.num_slots, np.int32)
+        G = self.group_size
+        for g in range(self.inflight):
+            lo = g * G
+            logits, self.gcaches[g] = self.engine.decode_once(
+                self.staged, self.gcaches[g],
+                jnp.asarray(tokens[lo:lo + G]), jnp.asarray(pos[lo:lo + G]))
+            out[lo:lo + G] = self._first_token(logits)
+        return out
+
+    # -- instruction-queue surface (runtime/schedule.py, DESIGN.md §11) ----
+    def make_queue(self):
+        """Dynamic per-stage instruction queue at depth ``inflight``."""
+        return DynamicPPQueue(self)
+
+    def start_round(self, g: int, tokens, pos):
+        """(stage-0 feed, per-group positions, block tables | None) for one
+        decode round of group ``g``.  Paged mode extends the group's
+        decode-eligible slots' pages HERE — before any instruction issues —
+        so pool exhaustion (MemoryError) surfaces with the round not in
+        flight and the preemption ladder can free pages safely."""
+        G = self.group_size
+        lo = g * G
+        toks = np.asarray(tokens, np.int32)[lo:lo + G]
+        pos_np = np.asarray(np.asarray(pos), np.int32)[lo:lo + G]
+        if self.paged:
+            full_pos = np.asarray(pos)
+            for slot in sorted(self._decodable):
+                if lo <= slot < lo + G:
+                    self.pool.extend(slot, int(full_pos[slot]) + 1)
+                    self._set_table(slot)
+            bt = self.block_tables[lo:lo + G].copy()
+            for i, slot in enumerate(range(lo, lo + G)):
+                if slot not in self._decodable:
+                    bt[i] = 0            # scratch page (kvpool.py)
+            x = self.engine.feed_tokens(toks[:, None], paged=True)
+            return x, jnp.asarray(pos_np), jnp.asarray(bt, jnp.int32)
+        return self.engine.feed_tokens(toks), jnp.asarray(pos_np), None
+
+    def run_stage(self, g: int, s: int, x, pos, bt=None):
+        """One queue-issued StageForward: stage ``s``'s jitted fn against
+        group ``g``'s cache (contiguous) or the stage's shared page pool
+        (paged; rounds stay isolated through their disjoint block tables).
+        The donated cache is rebound here, so Python issue order serializes
+        the data dependencies between overlapping rounds."""
+        if self.paged:
+            fn = self.engine.paged_stage_fns()[s]
+            out, self.caches[s] = fn(self.staged[s], self.caches[s], x,
+                                     pos, bt)
+        else:
+            fn = self.engine.decode_stage_fns(vector_pos=True)[s]
+            out, self.gcaches[g][s] = fn(self.staged[s], self.gcaches[g][s],
+                                         x, pos)
+        return out
+
+    def send_boundary(self, out, s: int):
+        """Queue-issued BoundarySend/Recv pair: ship stage ``s``'s boundary
+        to stage ``s+1``, logging its decode TransferRecords."""
+        return self.engine.send_boundary(out, s, phase="decode")
 
     def drain_transfers(self) -> dict:
         recs = self.engine.transfers[self._drained:]
@@ -673,18 +767,21 @@ class PPBackend(_BackendBase):
                                            pos, bt, stage)
 
     def stage_decode_hlo(self, stage: int) -> str:
-        """Compiled HLO of one stage's slot decode step (vector pos)."""
+        """Compiled HLO of one stage's slot decode step (vector pos) at the
+        microbatch-group batch — collective counts are batch-invariant, so
+        the check is depth-independent."""
         fns = self.engine._decode_fns(vector_pos=True)
-        pos = jnp.zeros((self.num_slots,), jnp.int32)
-        tok = jnp.zeros((self.num_slots,), jnp.int32)
+        caches = self.gcaches[0]
+        pos = jnp.zeros((self.group_size,), jnp.int32)
+        tok = jnp.zeros((self.group_size,), jnp.int32)
         x = jax.device_put(tok, NamedSharding(self.engine.meshes[0], P(None)))
         for i in range(stage):
             fn, _ = fns[i]
             out, _ = fn(self.staged[i],
-                        jax.tree.map(jnp.copy, self.caches[i]), x, pos)
+                        jax.tree.map(jnp.copy, caches[i]), x, pos)
             x = self.engine._move_boundary(out, i, "hlo", log=False)
         fn, _ = fns[stage]
-        return fn.lower(self.staged[stage], self.caches[stage], x,
+        return fn.lower(self.staged[stage], caches[stage], x,
                         pos).compile().as_text()
 
 
@@ -693,7 +790,7 @@ def make_backend(kind: str, cfg: ModelConfig, params, num_slots: int,
                  unroll: bool = False, paged: bool = False,
                  page_size: int = 16,
                  num_pages: Optional[int] = None,
-                 c: int = 1) -> DecodeBackend:
+                 c: int = 1, inflight: int = 1) -> DecodeBackend:
     """Backend factory keyed by engine kind: "gspmd" | "tp" | "pp".
 
     Degenerate layouts are rejected, not coerced — a silently bumped t/c/p
@@ -702,9 +799,16 @@ def make_backend(kind: str, cfg: ModelConfig, params, num_slots: int,
     page pools and enables chunked prefill (DESIGN.md §8).  ``c > 1`` adds
     context-parallel prefill on the explicit engines (DESIGN.md §9): the
     pure-CP layout (t=1, c>1, p=1) goes through the "tp" kind — the
-    single-stage explicit engine on a cp-only mesh.
+    single-stage explicit engine on a cp-only mesh.  ``inflight > 1``
+    splits the slots into in-flight microbatch groups on the pp backend's
+    dynamic instruction queue (DESIGN.md §11); the fused engines have no
+    pipeline bubble to fill and reject it.
     """
     kw = dict(paged=paged, page_size=page_size, num_pages=num_pages)
+    if kind != "pp" and inflight != 1:
+        raise ValueError(
+            "in-flight microbatching fills the PP decode bubble; the "
+            f"{kind!r} backend runs a fused step — inflight must be 1")
     if kind == "gspmd":
         if c > 1:
             raise ValueError(
@@ -721,5 +825,5 @@ def make_backend(kind: str, cfg: ModelConfig, params, num_slots: int,
         if p < 2:
             raise ValueError(f"pp backend needs p >= 2, got p={p}")
         return PPBackend(cfg, params, num_slots, max_len, t=t, c=c, p=p,
-                         unroll=unroll, **kw)
+                         unroll=unroll, inflight=inflight, **kw)
     raise ValueError(f"unknown backend kind: {kind!r}")

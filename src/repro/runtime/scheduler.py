@@ -59,6 +59,7 @@ import numpy as np
 from repro.runtime.backends import DecodeBackend
 from repro.runtime.faults import PermanentFault, TransientFault
 from repro.runtime.request import Request, RequestMetrics
+from repro.runtime.schedule import RoundResult, make_queue
 
 
 # ---------------------------------------------------------------------------
@@ -105,18 +106,28 @@ class VirtualClock:
 
 @dataclasses.dataclass
 class StepRecord:
-    """Communication of one scheduler iteration: one fused decode step, one
-    prefill chunk (chunked-prefill mode, DESIGN.md §8), or one preemption's
-    recompute pass (DESIGN.md §10)."""
+    """Communication of one scheduler iteration: one decode *round* (one
+    microbatch group through the instruction queue — the whole slot batch on
+    fused backends), one prefill chunk (chunked-prefill mode, DESIGN.md §8),
+    or one preemption's recompute pass (DESIGN.md §10).
+
+    ``wall_s`` and the per-stage ``stage_busy``/``stage_idle`` tick deltas
+    (DESIGN.md §11) make schedule occupancy a *measured* quantity: summing
+    the deltas over a run reproduces the queue's busy/idle totals, and
+    ``busy/(busy+idle)`` per stage is the measured bubble occupancy next to
+    the ``commodel.pp_schedule_stats`` prediction."""
 
     step: int
     n_active: int
-    collective_counts: Dict[str, int]     # predicted, per decode step/pass
-    predicted_wire_bytes: float           # at batch=num_slots (decode) / 1
-    measured_transfers: Dict[str, int]    # PP boundary hops since last step
+    collective_counts: Dict[str, int]     # predicted, per decode round/pass
+    predicted_wire_bytes: float           # at the group batch (decode) / 1
+    measured_transfers: Dict[str, int]    # PP boundary hops of this round
     phase: str = "decode"                 # "decode" | "prefill" | "recompute"
     rid: Optional[int] = None             # request, for prefill/recompute
     prefix_len: Optional[int] = None      # recomputed positions (recompute)
+    wall_s: float = 0.0                   # host wall time of the round/pass
+    stage_busy: Optional[List[int]] = None   # per-stage busy ticks (decode)
+    stage_idle: Optional[List[int]] = None   # per-stage idle ticks (decode)
 
 
 def step_collective_counts(backend: DecodeBackend,
@@ -182,6 +193,30 @@ class ServingReport:
 
     def tokens_by_rid(self) -> Dict[int, List[int]]:
         return {m.rid: list(m.tokens) for m in self.metrics}
+
+    def occupancy(self) -> dict:
+        """Measured decode-schedule occupancy (DESIGN.md §11), aggregated
+        over the decode StepRecords' per-stage busy/idle tick deltas:
+        schedule ticks, per-stage busy fractions, decode tokens per tick.
+        Deterministic — the schedule clock, not wall time — so the
+        pp-occupancy bench series can gate it exactly."""
+        recs = [r for r in self.steps
+                if r.phase == "decode" and r.stage_busy is not None]
+        if not recs:
+            return {"ticks": 0, "decode_tokens": 0, "tokens_per_tick": 0.0,
+                    "stage_busy_fraction": [], "busy_fraction_mean": 0.0}
+        n = len(recs[0].stage_busy)
+        busy = [sum(r.stage_busy[s] for r in recs) for s in range(n)]
+        idle = [sum(r.stage_idle[s] for r in recs) for s in range(n)]
+        ticks = busy[0] + idle[0]   # every stage is busy or idle each tick
+        frac = [b / max(b + i, 1) for b, i in zip(busy, idle)]
+        # n_active at record time == tokens appended by that round
+        dec_tokens = sum(r.n_active for r in recs)
+        return {"ticks": ticks,
+                "decode_tokens": dec_tokens,
+                "tokens_per_tick": dec_tokens / ticks if ticks else 0.0,
+                "stage_busy_fraction": frac,
+                "busy_fraction_mean": float(np.mean(frac))}
 
     def summary(self) -> dict:
         def _pct(vals, q):
@@ -310,9 +345,14 @@ class Scheduler:
         # Tables III–VI: no batch term in any count column)
         assert_counts_batch_invariant(backend)
         self._step_counts = step_collective_counts(backend, 1)
+        # the engine's instruction queue (DESIGN.md §11): decode no longer
+        # calls backend.decode_step directly — rounds are begun per
+        # microbatch group and pumped through the queue
+        self._queue = make_queue(backend)
+        self._group_size = self._queue.group_size
         self._step_bytes = sum(
             o.wire_bytes
-            for o in backend.decode_comm_ops(batch=self.num_slots))
+            for o in backend.decode_comm_ops(batch=self._group_size))
 
     @staticmethod
     def _count(ops) -> Dict[str, int]:
@@ -382,8 +422,14 @@ class Scheduler:
                 return True
         for slot, st in list(self.active.items()):
             if st.req.rid == rid:
-                self._finish(slot, "cancelled", now)
-                return True
+                # complete any in-flight round first: freeing the slot (and
+                # its pages) under a round that still writes them would
+                # corrupt a concurrent group's schedule (DESIGN.md §11)
+                self._drain_queue()
+                if slot in self.active and self.active[slot].req.rid == rid:
+                    self._finish(slot, "cancelled", self.clock.now())
+                return True         # tokens exist either way (drain may
+                #                     have finished the request normally)
         return False
 
     @staticmethod
@@ -459,8 +505,19 @@ class Scheduler:
     def _preempt_youngest(self) -> None:
         """Evict the most recently admitted active request: free its pages
         and slot, requeue it retaining its generated tokens (re-admission
-        recomputes the prefix — DESIGN.md §10)."""
-        slot = max(self.active, key=lambda s: self.active[s].seq)
+        recomputes the prefix — DESIGN.md §10).
+
+        With rounds in flight (DESIGN.md §11) victims come from groups with
+        NO issued work: freeing pages a busy round still writes would let a
+        subsequent ``start_round`` re-allocate them mid-write.  The group
+        whose ``start_round`` raised MemoryError is never busy and holds at
+        least one active slot, so a safe candidate always exists; at depth
+        1 every group is idle here and this reduces to the old global
+        youngest-first rule."""
+        busy = self._queue.busy_groups()
+        cands = [s for s in self.active if s // self._group_size not in busy]
+        slot = max(cands or self.active,
+                   key=lambda s: self.active[s].seq)
         st = self.active.pop(slot)
         st.metrics.preemptions += 1
         self._preempted[st.req.rid] = st.metrics
@@ -533,6 +590,10 @@ class Scheduler:
                 # needs the prefix's pages now; the decode budget is
                 # covered by preemption instead of reservation.
                 break
+            # Sync: complete in-flight rounds before the admission prefill
+            # donates into caches/pages a round may still read (no-op at
+            # depth 1 — nothing is ever in flight between steps)
+            self._drain_queue()
             self.queue.pop(0)
             slot = self.free.pop(0)
             self._adm_seq += 1
@@ -564,6 +625,7 @@ class Scheduler:
                 m.finish_reason = "error"
                 self.finished.append(m)
                 continue
+            self._queue.note_prefill(slot)
             now = self.clock.now()
             if resume is not None:
                 self._log_recompute(req.rid, len(prefix))
@@ -613,6 +675,8 @@ class Scheduler:
         final chunk the request's first token is stamped (TTFT) and the slot
         joins the decoding set.  A recompute prefix (``resume``) re-chunks
         the same way, logging phase="recompute" records."""
+        # Sync: a chunk writes the slot's pages — no round may be mid-read
+        self._drain_queue()
         slot = next(iter(self.prefilling))
         st = self.prefilling[slot]
         start = st.done
@@ -621,8 +685,10 @@ class Scheduler:
         while True:
             try:
                 self._apply_fault("prefill")
+                t0 = time.perf_counter()
                 tok = self.backend.prefill_chunk(
                     slot, st.prefix[start:end], start)
+                wall = time.perf_counter() - t0
                 break
             except TransientFault:
                 attempt += 1
@@ -635,6 +701,7 @@ class Scheduler:
                 self._abort_prefill(slot, "error", self.clock.now())
                 return
         st.done = end
+        self._queue.note_prefill(slot)
         self.step_log.append(StepRecord(
             step=self._step_i, n_active=len(self.active),
             collective_counts=dict(self._chunk_counts),
@@ -644,7 +711,8 @@ class Scheduler:
             measured_transfers=self.backend.drain_transfers(),
             phase="prefill" if st.resume is None else "recompute",
             rid=st.req.rid,
-            prefix_len=None if st.resume is None else len(st.prefix)))
+            prefix_len=None if st.resume is None else len(st.prefix),
+            wall_s=wall))
         self._step_i += 1
         if end < len(st.prefix):
             return
@@ -672,11 +740,29 @@ class Scheduler:
         for slot in list(self.active):
             self._finish(slot, "error", now)
 
-    def _recovered_decode(self) -> Optional[np.ndarray]:
-        """The fused decode step behind the recovery ladder: preemption on
-        pool exhaustion, bounded backoff retries on transient faults,
-        error-finish on permanent ones.  Returns the next-token vector, or
-        None when this iteration's decode was abandoned."""
+    def _refill_rounds(self) -> None:
+        """Begin one decode round for every microbatch group that has at
+        least one active slot and no round in flight.  On fused backends
+        there is exactly one group spanning every slot — one round per
+        iteration, the pre-refactor cadence."""
+        G = self._group_size
+        pending = self._queue.pending_groups()
+        for g in range(self.num_slots // G):
+            if g in pending:
+                continue
+            lo = g * G
+            if not any(s in self.active for s in range(lo, lo + G)):
+                continue
+            self._queue.begin_round(g, self.tokens, self.pos)
+
+    def _pump_queue(self) -> Optional[List[RoundResult]]:
+        """Refill + pump the instruction queue behind the recovery ladder
+        (the fused era's ``_recovered_decode``): preemption on pool
+        exhaustion, bounded backoff retries on transient faults, error-
+        finish + queue abort on permanent ones.  Per-attempt fault draws
+        keep the pre-refactor order (pp_transfer → pool → decode), so
+        seeded fault schedules hit the same sites.  Returns the completed
+        rounds, or None when this iteration's decode was abandoned."""
         attempt = 0
         while True:
             try:
@@ -685,7 +771,10 @@ class Scheduler:
                         self._apply_fault("pp_transfer")
                     self._apply_fault("pool")
                     self._apply_fault("decode")
-                return self.backend.decode_step(self.tokens, self.pos)
+                self._refill_rounds()
+                if not self._queue.in_flight:
+                    return None
+                return self._queue.pump()
             except MemoryError:
                 if len(self.active) < 2:
                     # nothing else to preempt: the pages are held by
@@ -698,44 +787,42 @@ class Scheduler:
                 attempt += 1
                 if attempt > self.retry_limit:
                     self._error_active("retries exhausted")
+                    self._queue.abort_all()
                     return None
                 for st in self.active.values():
                     st.metrics.retries += 1
                 self._backoff(attempt)
             except PermanentFault:
                 self._error_active("permanent fault")
+                self._queue.abort_all()
                 return None
 
-    def step(self) -> bool:
-        """One scheduler iteration; returns False when fully drained."""
-        if not self.queue and not self.active and not self.prefilling:
-            return False
-        self._shed_expired(self.clock.now())
-        self._admit_ready()
-        self.backend.drain_transfers()      # prefill hops: not decode traffic
-        if self.prefilling:
-            self._advance_prefill()
-        if not self.active:
-            # nothing is decoding: skip the jitted decode step entirely — a
-            # fixed-capacity step over all-garbage lanes would burn a full
-            # model pass for nothing.  Only advance the clock (to the next
-            # arrival) when no prefill is in flight either.
-            if not self.prefilling and self.queue:
-                self.clock.wait_until(self.queue[0].arrival)
-            return self._next(True)
-        nxt = self._recovered_decode()
-        if nxt is None:
-            return self._next(True)
+    def _complete_round(self, res: RoundResult) -> None:
+        """Land one completed round: record its traffic/occupancy and
+        append its tokens to the slots still active (a slot preempted or
+        cancelled mid-round is simply skipped — its instructions died with
+        the round that carried them)."""
         now = self.clock.now()
+        # n_active is the number of slots THIS round appends to — at depth 1
+        # the single group spans every slot, so this equals len(self.active)
+        # (the pre-queue semantic); at depth > 1 it is the group's live rows,
+        # which is what ServingReport.occupancy() sums as decode tokens.
+        appended = sum(1 for slot in res.slots if slot in self.active)
         self.step_log.append(StepRecord(
-            step=self._step_i, n_active=len(self.active),
+            step=self._step_i, n_active=appended,
             collective_counts=dict(self._step_counts),
             predicted_wire_bytes=self._step_bytes,
-            measured_transfers=self.backend.drain_transfers()))
+            measured_transfers=dict(res.transfers),
+            wall_s=res.wall_s,
+            stage_busy=list(res.stage_busy),
+            stage_idle=list(res.stage_idle)))
         self._step_i += 1
-        for slot in list(self.active):
-            st = self.active[slot]
-            tok = int(nxt[slot])
+        base = res.slots[0]
+        for slot in res.slots:
+            st = self.active.get(slot)
+            if st is None:
+                continue
+            tok = int(res.tokens[slot - base])
             st.metrics.tokens.append(tok)
             self._total_tokens += 1
             self.tokens[slot] = tok
@@ -745,7 +832,46 @@ class Scheduler:
                 self._finish(slot, reason, now)
             elif self._expired(st.req, now, pre_first_token=False):
                 self._finish(slot, "deadline", now)
-        return self._next(bool(self.queue or self.active or self.prefilling))
+
+    def _drain_queue(self) -> None:
+        """Complete every in-flight round (the ``Sync`` instruction) before
+        any operation that mutates caches/pages a round may still touch —
+        admission prefill, prefill chunk, cancellation.  No-op at depth 1:
+        the fused queue never holds issued work between steps."""
+        drained = bool(self._queue.in_flight)
+        for res in self._queue.sync():
+            self._complete_round(res)
+        if drained:
+            # round hops were attributed per round at send time; reset the
+            # backend cursor so they don't leak into the next prefill/chunk
+            # record's measured_transfers
+            self.backend.drain_transfers()
+
+    def step(self) -> bool:
+        """One scheduler iteration; returns False when fully drained."""
+        if not self.queue and not self.active and not self.prefilling \
+                and not self._queue.in_flight:
+            return False
+        self._shed_expired(self.clock.now())
+        self._admit_ready()
+        self.backend.drain_transfers()      # prefill hops: not decode traffic
+        if self.prefilling:
+            self._advance_prefill()
+        if not self.active and not self._queue.in_flight:
+            # nothing is decoding: skip the jitted decode step entirely — a
+            # fixed-capacity step over all-garbage lanes would burn a full
+            # model pass for nothing.  Only advance the clock (to the next
+            # arrival) when no prefill is in flight either.
+            if not self.prefilling and self.queue:
+                self.clock.wait_until(self.queue[0].arrival)
+            return self._next(True)
+        results = self._pump_queue()
+        if results is None:
+            return self._next(True)
+        for res in results:
+            self._complete_round(res)
+        return self._next(bool(self.queue or self.active or self.prefilling
+                               or self._queue.in_flight))
 
     def _next(self, more: bool) -> bool:
         """Stall guard: a live scheduler must change *something* every
