@@ -1,6 +1,6 @@
 """Decode hot-path benchmark: TP (unrolled/scanned/fused) vs PP vs TP×PP.
 
-Times five decode strategies on a 4-device host-platform mesh (reduced
+Times seven decode strategies on a 4-device host-platform mesh (reduced
 configs, CPU-sized):
 
   unrolled   seed behaviour — one jit dispatch per token, Python-unrolled
@@ -11,6 +11,22 @@ configs, CPU-sized):
              dispatch per stage per token + 2 boundary transfers per hop
   tp2pp2     hybrid t=2 p=2 ``generate`` — per-stage TP collectives plus
              boundary shards (the paper's TP-vs-PP decode tradeoff, Fig. 9)
+  fused-q8   ``tp_generate`` with int8 two-step collectives (DESIGN.md §12):
+             every per-layer decode psum runs quantize → reduce-scatter →
+             all-gather → dequant on the wire
+  tp2pp2-q8  the hybrid engine with the same quantized decode collectives
+             inside each stage's TP group
+
+The two ``-q8`` records carry an accuracy contract next to the timing:
+``token_match_rate`` and ``max_logit_drift`` are measured teacher-forced —
+the quantized path replays the bf16 greedy token stream, so every step sees
+identical *inputs* and the drift is the quantization's alone (compounded
+through the KV cache, which is the honest part), while ``token_match_rate``
+is the fraction of (step, sequence) argmax choices that agree with the bf16
+pick.  ``benchmarks/check_baselines.py`` gates both against
+``kernels.quant_collective.QUANT_TOLERANCE`` and pins the deterministic
+``predicted_decode_wire_ratio`` (closed form, must stay < 0.6 of the bf16
+all-reduce wire).
 
 Emits ``BENCH_decode.json`` at the repo root (tokens/sec and ms/token per
 arch × variant) so the perf trajectory is tracked across PRs.  Every record
@@ -106,13 +122,15 @@ def _measure(dry_run: bool = False):
         variants["fused"] = min(fused_once() for _ in range(repeat))
 
         # pipelined decode: per-stage caches + fused per-stage decode steps
+        pp_engines = {}
         layouts = {"pp4": (1, 4), "tp2pp2": (2, 2)}
         for name, (t, p) in layouts.items():
             eng = px.PipelineEngine(cfg, t=t, p=p, unroll=False)
             staged = eng.prepare(params)
             _, caches0 = eng.prefill_with_cache(staged, toks, cache_w)
+            pp_engines[name] = (eng, staged, caches0)
 
-            def pp_once():
+            def pp_once(eng=eng, staged=staged, caches0=caches0):
                 # generate donates the caches; run each repeat on copies
                 caches = [jax.tree.map(jnp.copy, c) for c in caches0]
                 t0 = time.perf_counter()
@@ -123,31 +141,115 @@ def _measure(dry_run: bool = False):
             pp_once()                                  # warmup / compile
             variants[name] = min(pp_once() for _ in range(repeat))
 
+        # ---- quant series (DESIGN.md §12): int8 two-step collectives ----
+        QUANT = "int8"
+        gen_q = px.tp_generate(cfg, mesh, n_tokens, quant_collectives=QUANT)
+        gen_q(params, fresh(), tok0, jnp.int32(pos))[0].block_until_ready()
+
+        def fused_q_once():
+            c = fresh()
+            t0 = time.perf_counter()
+            out, _ = gen_q(params, c, tok0, jnp.int32(pos))
+            out.block_until_ready()
+            return time.perf_counter() - t0
+        variants["fused-q8"] = min(fused_q_once() for _ in range(repeat))
+
+        eng_q = px.PipelineEngine(cfg, t=2, p=2, unroll=False,
+                                  quant_collectives=QUANT)
+        staged_q = eng_q.prepare(params)
+        _, qcaches0 = eng_q.prefill_with_cache(staged_q, toks, cache_w)
+
+        def ppq_once():
+            caches = [jax.tree.map(jnp.copy, c) for c in qcaches0]
+            t0 = time.perf_counter()
+            out, _ = eng_q.generate(staged_q, caches, tok0, pos, n_tokens)
+            out.block_until_ready()
+            return time.perf_counter() - t0
+
+        ppq_once()                                     # warmup / compile
+        variants["tp2pp2-q8"] = min(ppq_once() for _ in range(repeat))
+
+        # accuracy: teacher-forced per-step logits vs the bf16 reference
+        def record_tp(step_fn, forced=None):
+            cache, tok = fresh(), tok0
+            logits_all, toks_all = [], []
+            for i in range(n_tokens):
+                logits, cache = step_fn(params, cache, tok,
+                                        jnp.int32(pos + i))
+                choice = jnp.argmax(logits, -1).astype(jnp.int32)
+                logits_all.append(logits)
+                toks_all.append(choice)
+                tok = choice if forced is None else forced[i]
+            return jnp.stack(logits_all), jnp.stack(toks_all)
+
+        def record_pp(eng_, staged_, caches_, forced=None):
+            caches = [jax.tree.map(jnp.copy, c) for c in caches_]
+            tok = tok0
+            logits_all, toks_all = [], []
+            for i in range(n_tokens):
+                logits, caches = eng_.decode_once(staged_, caches, tok,
+                                                  pos + i)
+                choice = jnp.argmax(logits, -1).astype(jnp.int32)
+                logits_all.append(logits)
+                toks_all.append(choice)
+                tok = choice if forced is None else forced[i]
+            return jnp.stack(logits_all), jnp.stack(toks_all)
+
+        def drift_metrics(ref, quant):
+            """(token_match_rate, max_logit_drift) of a teacher-forced
+            quant run against its bf16 reference."""
+            (r_logits, r_toks), (q_logits, q_toks) = ref, quant
+            match = float(jnp.mean((q_toks == r_toks).astype(jnp.float32)))
+            drift = float(jnp.max(jnp.abs(q_logits - r_logits)))
+            return round(match, 4), round(drift, 6)
+
+        step_q = px.tp_decode_step(cfg, mesh, unroll=True,
+                                   quant_collectives=QUANT)
+        ref_tp = record_tp(step_u)
+        quant_metrics = {
+            "fused-q8": drift_metrics(
+                ref_tp, record_tp(step_q, forced=ref_tp[1])),
+        }
+        ref_pp = record_pp(*pp_engines["tp2pp2"])
+        quant_metrics["tp2pp2-q8"] = drift_metrics(
+            ref_pp, record_pp(eng_q, staged_q, qcaches0, forced=ref_pp[1]))
+
         from repro.core import commodel as cm
 
-        def decode_counts(t, p):
+        def decode_counts(t, p, quant=None):
             """Predicted per-step decode collective counts (drift-gate
             payload: deterministic, machine-independent)."""
             counts = {}
             for o in cm.comm_ops_for(cfg, 1, 2, t, p,
-                                     gather_mode="allgather"):
+                                     gather_mode="allgather", quant=quant):
                 if o.phase == "decode":
                     counts[o.collective] = counts.get(o.collective, 0) \
                         + o.count
             return counts
 
         parallelism = {"unrolled": (4, 1), "scanned": (4, 1), "fused": (4, 1),
-                       "pp4": (1, 4), "tp2pp2": (2, 2)}
+                       "pp4": (1, 4), "tp2pp2": (2, 2),
+                       "fused-q8": (4, 1), "tp2pp2-q8": (2, 2)}
         for name, sec in variants.items():
             t, p = parallelism[name]
-            results.append({
+            quant = QUANT if name.endswith("-q8") else None
+            rec = {
                 "arch": arch, "variant": name, "tp": t, "pp": p,
-                "batch": BATCH, "n_tokens": n_tokens,
+                "batch": BATCH, "n_tokens": n_tokens, "quant": quant,
                 "tokens_per_s": n_tokens * BATCH / sec,
                 "ms_per_token": sec / n_tokens * 1e3,
                 "speedup_vs_unrolled": variants["unrolled"] / sec,
-                "decode_collective_counts": decode_counts(t, p),
-            })
+                "decode_collective_counts": decode_counts(t, p, quant),
+            }
+            if quant is not None:
+                match, drift = quant_metrics[name]
+                rec["token_match_rate"] = match
+                rec["max_logit_drift"] = drift
+                # closed form vs the bf16 (b=2) wire the two-step replaces;
+                # t-invariant, pinned by the baseline gate (< 0.6)
+                rec["predicted_decode_wire_ratio"] = round(
+                    cm.quant_ar_wire_ratio(cfg.d_model, t, quant=quant), 6)
+            results.append(rec)
     print("DECODEJSON:" + json.dumps(results))
 
 
@@ -179,11 +281,15 @@ def rows(dry_run: bool = False):
         json.dump(recs, f, indent=2, sort_keys=True)
     out = []
     for r in recs:
+        note = (f"tok_per_s={r['tokens_per_s']:.1f};"
+                f"ms_per_token={r['ms_per_token']:.2f};"
+                f"speedup_vs_unrolled={r['speedup_vs_unrolled']:.2f}x")
+        if r.get("quant"):
+            note += (f";token_match={r['token_match_rate']:.4f};"
+                     f"logit_drift={r['max_logit_drift']:.4f};"
+                     f"wire_ratio={r['predicted_decode_wire_ratio']:.4f}")
         out.append((f"decode/{r['arch']}/t{r['tp']}p{r['pp']}/{r['variant']}",
-                    r["ms_per_token"] * 1e3,
-                    f"tok_per_s={r['tokens_per_s']:.1f};"
-                    f"ms_per_token={r['ms_per_token']:.2f};"
-                    f"speedup_vs_unrolled={r['speedup_vs_unrolled']:.2f}x"))
+                    r["ms_per_token"] * 1e3, note))
     return out
 
 

@@ -48,6 +48,15 @@ _WIRE_FACTOR = {
     "collectivepermute": lambda d: 1.0,   # ring hop: every rank ships its block
 }
 
+# Quantized-collective width entries (DESIGN.md §12): the two-step decode
+# allreduce ships its payload at one of these widths while the per-chunk
+# scales travel as f32.  fp8 is modeled at its nominal 1-byte width — real
+# accelerator wire bytes; host-CPU XLA upcasts the f8 payload to f16 on the
+# wire, which the HLO-parity tests gate per-platform.
+QUANT_WIRE_BYTES = {"int8": 1, "fp8": 1}
+QUANT_SCALE_BYTES = 4
+DEFAULT_QUANT_CHUNK = 128
+
 
 @dataclasses.dataclass(frozen=True)
 class CommOp:
@@ -91,18 +100,104 @@ def by_collective(ops: List[CommOp]):
 
 
 # ---------------------------------------------------------------------------
+# Quantized two-step collectives (Flash Communication, DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+
+def quant_chunks(h: int, chunk: int) -> int:
+    """Scale blocks covering a hidden width: ceil(h / chunk) — the last
+    block may cover a remainder shorter than ``chunk``."""
+    if chunk < 1:
+        raise ValueError(f"quant chunk must be >= 1, got {chunk}")
+    return -(-h // chunk)
+
+
+def quant_decode_ar_ops(phase: str, count: int, rows: int, h: int, t: int,
+                        quant: str, chunk: int) -> List[CommOp]:
+    """Decompose ``count`` bf16 [rows, h] decode allreduces into the
+    quantized two-step's wire ops (``parallel_exec.quantized_psum``):
+
+      1. one f32 [rows, K] allreduce — the per-chunk abs-max exchange
+         (``lax.pmax``) that gives every rank the shared scales,
+      2. one 1-byte [rows, h] reducescatter — the quantized partial sums,
+         exact integer addition under the floor(qmax/t) headroom,
+      3. one 1-byte [rows, h] allgather — redistributing the reduced shards.
+
+    Counts stay batch-invariant (``rows`` scales message bytes only) and the
+    closed-form wire ratio vs one b-byte allreduce is
+    ``(payload·2h + scale·2·4K) / (2·2h)`` — see ``quant_ar_wire_ratio``.
+    """
+    if quant not in QUANT_WIRE_BYTES:
+        raise ValueError(f"unknown quant mode {quant!r}; "
+                         f"expected one of {sorted(QUANT_WIRE_BYTES)}")
+    K = quant_chunks(h, chunk)
+    w = QUANT_WIRE_BYTES[quant]
+    return [
+        CommOp("allreduce", phase, count, (rows, K), t, QUANT_SCALE_BYTES),
+        CommOp("reducescatter", phase, count, (rows, h), t, w),
+        CommOp("allgather", phase, count, (rows, h), t, w),
+    ]
+
+
+def quant_ar_wire_ratio(h: int, t: int, quant: str = "int8",
+                        chunk: int = DEFAULT_QUANT_CHUNK,
+                        b: int = 2) -> float:
+    """Wire bytes of one quantized two-step allreduce over one b-byte ring
+    allreduce of the same [rows, h] message, in closed form:
+
+        ratio = (2·w·h + 2·4·K) / (2·b·h)  =  w/b + 4K/(b·h)
+
+    (every term carries the same (t-1)/t ring factor, so the ratio is
+    t-invariant: the 1-byte two-step pins the payload at exactly half a
+    bf16 ring allreduce plus the f32 scale overhead 4K/h — DESIGN.md §12
+    derives why pushing toward ~0.28× needs a 4-bit payload.)"""
+    K = quant_chunks(h, chunk)
+    w = QUANT_WIRE_BYTES[quant]
+    return (2 * w * h + 2 * QUANT_SCALE_BYTES * K) / (2 * b * h)
+
+
+def _decode_ar_rows(n_layer_ar: int, steps: int, rows: int, h: int, t: int,
+                    b: int, quant: Optional[str],
+                    chunk: int) -> List[CommOp]:
+    """Decode-phase allreduce rows for ``steps`` decode steps, each carrying
+    ``n_layer_ar`` per-layer psums + 1 embedding psum of [rows, h].
+
+    Unquantized this is the single aggregate ``(n_layer_ar+1)·steps`` row
+    of the paper's Tables; with ``quant`` set the per-layer psums decompose
+    into the two-step (``quant_decode_ar_ops``) while the embedding psum —
+    which ``parallel_exec`` keeps full-width (its integer-lookup output is
+    sparse and cheap; quantizing it buys < 1/(2L) of the bytes) — stays a
+    b-byte allreduce."""
+    if quant is None:
+        return [CommOp("allreduce", "decode", (n_layer_ar + 1) * steps,
+                       (rows, h), t, b)]
+    return [CommOp("allreduce", "decode", steps, (rows, h), t, b)] + \
+        quant_decode_ar_ops("decode", n_layer_ar * steps, rows, h, t,
+                            quant, chunk)
+
+
+# ---------------------------------------------------------------------------
 # Eq. 1 — Tensor parallelism
 # ---------------------------------------------------------------------------
 
 
 def tp_comm_ops(cfg: ModelConfig, s_p: int, s_d: int, t: int, *,
                 b: int = 2, batch: int = 1,
-                gather_mode: str = "gather") -> List[CommOp]:
+                gather_mode: str = "gather",
+                quant: Optional[str] = None,
+                quant_chunk: int = DEFAULT_QUANT_CHUNK) -> List[CommOp]:
     """Pure TP: (2L+1) allreduce per forward pass + per-token logit gather.
 
     The 2L comes from the two row-parallel linears per layer (attention output
     projection + MLP down-projection); the +1 from the vocab-parallel
     embedding.  Message rows scale with the tokens processed per pass.
+
+    ``quant`` ("int8" | "fp8", DESIGN.md §12) decomposes the *decode-phase
+    per-layer* allreduces into the quantized two-step
+    (``quant_decode_ar_ops``); prefill rows, the embedding psum and the
+    logit gather stay full-width — decode is where the TP wire bytes
+    dominate, which is the regime the paper measures and Flash
+    Communication attacks.
     """
     if t <= 1:
         return []
@@ -113,8 +208,9 @@ def tp_comm_ops(cfg: ModelConfig, s_p: int, s_d: int, t: int, *,
         CommOp("gather", "prefill", 1, (batch * (v // t),), t, b),
     ]
     if s_d > 1:
+        ops += _decode_ar_rows(2 * L, s_d - 1, batch * 1, h, t, b,
+                               quant, quant_chunk)
         ops += [
-            CommOp("allreduce", "decode", n_ar * (s_d - 1), (batch * 1, h), t, b),
             CommOp("gather", "decode", s_d - 1, (batch * (v // t),), t, b),
         ]
     if gather_mode == "allgather":
@@ -175,7 +271,8 @@ def stage_layer_partition(L: int, p: int) -> List[int]:
 
 def hybrid_stage_collectives(cfg: ModelConfig, t: int, p: int,
                              stage: int, c: int = 1,
-                             phase: str = "decode") -> dict:
+                             phase: str = "decode",
+                             quant: Optional[str] = None) -> dict:
     """Collective *counts per pass* visible in one stage's compiled module
     under the explicit hybrid engine (gather_mode="allgather"): 2·L_s
     allreduces per stage (+1 embedding psum on stage 0), 2 boundary
@@ -189,7 +286,14 @@ def hybrid_stage_collectives(cfg: ModelConfig, t: int, p: int,
     last stage, the one allreduce that hands the final position's hidden
     state to the head.  CP is prefill-only — decode passes run replicated
     over the cp axis, so ``phase="decode"`` counts carry no CP term at any
-    c (DESIGN.md §9)."""
+    c (DESIGN.md §9).
+
+    ``quant`` (DESIGN.md §12) applies to *decode* passes only: the stage's
+    2·L_s per-layer psums each become one amax allreduce + one quantized
+    reducescatter + one allgather, so the stage module shows 2·L_s
+    allreduces still (now tiny f32 scale exchanges) plus 2·L_s of each
+    two-step half next to the boundary/logit all-gathers; the stage-0
+    embedding psum stays full-width."""
     L_s = stage_layer_partition(cfg.num_layers, p)[stage]
     counts: dict = {}
     if t > 1:
@@ -197,6 +301,9 @@ def hybrid_stage_collectives(cfg: ModelConfig, t: int, p: int,
         ag = (2 if stage > 0 else 0) + (1 if stage == p - 1 else 0)
         if ag:
             counts["allgather"] = ag
+        if quant is not None and phase == "decode":
+            counts["reducescatter"] = 2 * L_s
+            counts["allgather"] = counts.get("allgather", 0) + 2 * L_s
     if c > 1 and phase == "prefill":
         counts["collectivepermute"] = 2 * L_s * (c - 1)
         if stage == p - 1:
@@ -206,17 +313,26 @@ def hybrid_stage_collectives(cfg: ModelConfig, t: int, p: int,
 
 def hybrid_comm_ops(cfg: ModelConfig, s_p: int, s_d: int, t: int, p: int, *,
                     b: int = 2, batch: int = 1,
-                    gather_mode: str = "gather") -> List[CommOp]:
-    """Hybrid: per-stage allreduce + inter-stage allgather + p2p + gather."""
+                    gather_mode: str = "gather",
+                    quant: Optional[str] = None,
+                    quant_chunk: int = DEFAULT_QUANT_CHUNK) -> List[CommOp]:
+    """Hybrid: per-stage allreduce + inter-stage allgather + p2p + gather.
+
+    ``quant`` decomposes the decode-phase per-layer allreduces exactly as
+    in ``tp_comm_ops`` (stage-0 rank view: 2·L_0 per-layer psums quantize,
+    the embedding psum stays full-width); boundary all-gathers and p2p
+    hops are untouched — they already ship 1/t-width shards."""
     if p <= 1:
         return tp_comm_ops(cfg, s_p, s_d, t, b=b, batch=batch,
-                           gather_mode=gather_mode)
+                           gather_mode=gather_mode, quant=quant,
+                           quant_chunk=quant_chunk)
     if t <= 1:
         return pp_comm_ops(cfg, s_p, s_d, p, b=b, batch=batch)
     L, h, v = cfg.num_layers, cfg.d_model, cfg.vocab_size
     # stage-0 rank view: it owns the most layers under the uneven split and
     # carries the embedding allreduce (equals 2L/p + 1 when p divides L)
-    n_ar = 2 * stage_layer_partition(L, p)[0] + 1
+    n_layer_ar = 2 * stage_layer_partition(L, p)[0]
+    n_ar = n_layer_ar + 1
     ops = [
         CommOp("allreduce", "prefill", n_ar, (batch * s_p, h), t, b),
         CommOp("allgather", "prefill", 2 * (p - 1), (batch * s_p, h), t, b),
@@ -226,8 +342,9 @@ def hybrid_comm_ops(cfg: ModelConfig, s_p: int, s_d: int, t: int, p: int, *,
     ]
     if s_d > 1:
         d = s_d - 1
+        ops += _decode_ar_rows(n_layer_ar, d, batch * 1, h, t, b,
+                               quant, quant_chunk)
         ops += [
-            CommOp("allreduce", "decode", n_ar * d, (batch * 1, h), t, b),
             CommOp("allgather", "decode", 2 * (p - 1) * d, (batch * 1, h), t, b),
             CommOp("gather", "decode", d, (batch * (v // t),), t, b),
             CommOp("send", "decode", (p - 1) * 2 * d, (batch * 1, h // t), p, b),
@@ -385,7 +502,8 @@ def ssm_pp_state_ops(cfg: ModelConfig, s_d: int, p: int, *, b: int = 2,
 
 def comm_ops_for(cfg: ModelConfig, s_p: int, s_d: int, t: int = 1, p: int = 1,
                  e: int = 1, *, c: int = 1, b: int = 2, batch: int = 1,
-                 gather_mode: str = "gather") -> List[CommOp]:
+                 gather_mode: str = "gather", quant: Optional[str] = None,
+                 quant_chunk: int = DEFAULT_QUANT_CHUNK) -> List[CommOp]:
     """Full per-architecture comm prediction: paper terms + extensions.
 
     Encoder-only architectures have no decode phase (s_d forced to 1); MoE
@@ -394,12 +512,16 @@ def comm_ops_for(cfg: ModelConfig, s_p: int, s_d: int, t: int = 1, p: int = 1,
     axis: the TP/PP prefill rows shrink to the ceil(s_p/c) shard each rank
     actually processes, the CP ring rows (``cp_comm_ops``) are added, and
     decode rows are untouched — decode runs replicated over the cp axis.
+    ``quant`` ("int8" | "fp8", DESIGN.md §12) decomposes the decode-phase
+    per-layer TP allreduces into the quantized two-step with ``quant_chunk``
+    elements per f32 scale block.
     """
     if not cfg.is_decoder:
         s_d = 1
     s_eff = cp_shard_len(s_p, c) if c > 1 else s_p
     ops = hybrid_comm_ops(cfg, s_eff, s_d, t, p, b=b, batch=batch,
-                          gather_mode=gather_mode)
+                          gather_mode=gather_mode, quant=quant,
+                          quant_chunk=quant_chunk)
     ops += cp_comm_ops(cfg, s_p, c, t=t, b=b, batch=batch)
     ops += moe_comm_ops(cfg, s_eff, s_d, e, b=b, batch=batch)
     return ops

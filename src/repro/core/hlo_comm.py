@@ -18,6 +18,12 @@ Conventions (matching core/commodel.py and the paper §V-B):
                reduce-scatter (d-1)·output-size, all-to-all (d-1)/d·size,
                collective-permute 1·size.
 Async pairs (``*-start``/``*-done``) are counted once, on the start op.
+Scatter-form lowerings — an all-reduce whose sole consumer is a
+dynamic-slice of exactly the 1/d rank shard (one way XLA compiles
+``psum_scatter``) — are reclassified to the reducescatter factor
+(``_reclassify_scatter_forms``), so the quantized two-step path
+(DESIGN.md §12) is charged identically whether it compiles to a native
+``reduce-scatter`` op or the slice form.
 """
 from __future__ import annotations
 
@@ -139,7 +145,7 @@ def _parse_computations(hlo_text: str):
         if m and not line.startswith(" "):
             name = m.group(2)
             comps[name] = {"colls": [], "whiles": [], "calls": [],
-                           "conds": []}
+                           "conds": [], "ops": []}
             cur = name
             if m.group(1):
                 entry = name
@@ -153,6 +159,7 @@ def _parse_computations(hlo_text: str):
         if "=" not in s:
             continue
         lhs, _, rhs = s.partition(" = ")
+        comps[cur]["ops"].append(rhs)
         if "-done(" in rhs:
             continue                       # counted at the matching start
         coll = _parse_collective_line(lhs, rhs, s)
@@ -175,7 +182,36 @@ def _parse_computations(hlo_text: str):
         cm = _CALL_RE.search(rhs)
         if cm:
             comps[cur]["calls"].append(cm.group(1))
+    for comp in comps.values():
+        _reclassify_scatter_forms(comp)
     return comps, entry
+
+
+def _reclassify_scatter_forms(comp: dict) -> None:
+    """Map scatter-form all-reduce lowerings to the reducescatter factor.
+
+    ``psum_scatter`` does not always survive to a ``reduce-scatter`` HLO op:
+    XLA may lower it as a full ``all-reduce`` whose *only* consumer is a
+    ``dynamic-slice`` taking exactly the 1/d rank shard — semantically a
+    reduce-scatter, and charged as one by NCCL-style accounting (each rank
+    keeps 1/d of the reduction).  Counting it at the allreduce factor would
+    overstate wire bytes 2d/(d-1)× vs the commodel's reducescatter row, so
+    the op is reclassified: kind=reducescatter, out_bytes=the slice's bytes
+    (wire = (d-1) × slice — identical to a native reduce-scatter op).  An
+    all-reduce with any other consumer pattern is left untouched.
+    """
+    for coll in comp["colls"]:
+        if coll.kind != "allreduce" or coll.group_size <= 1:
+            continue
+        pat = re.compile(r"[%\s(,]" + re.escape(coll.op_name) + r"[\s,)}]")
+        consumers = [rhs for rhs in comp["ops"]
+                     if coll.op_name in rhs and pat.search(rhs)]
+        if len(consumers) != 1 or " dynamic-slice(" not in " " + consumers[0]:
+            continue
+        sizes = _shapes_in(consumers[0].split("dynamic-slice")[0])
+        if sizes and sizes[0] * coll.group_size == coll.out_bytes:
+            coll.kind = "reducescatter"
+            coll.out_bytes = sizes[0]
 
 
 def parse_hlo_collectives(hlo_text: str) -> List[HLOCollective]:

@@ -50,7 +50,10 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.config.base import ModelConfig
-from repro.core.commodel import stage_layer_partition
+from repro.core.commodel import DEFAULT_QUANT_CHUNK, stage_layer_partition
+from repro.kernels.quant_collective import (QUANT_DTYPES, chunk_amax,
+                                            chunk_dequantize, chunk_quantize,
+                                            collective_qmax, scales_from_amax)
 from repro.models.layers import apply_rope, decode_attn_mask, \
     decode_positions, gqa_attention, make_mask, mlp_apply, paged_attn_mask, \
     paged_cache_update, paged_gather, ring_cache_update, ring_kv_assemble, \
@@ -112,6 +115,51 @@ def _maybe_psum(x, axis):
     return jax.lax.psum(x, axis) if axis is not None else x
 
 
+def _check_quant(quant):
+    if quant is not None and quant not in QUANT_DTYPES:
+        raise ValueError(f"unknown quant_collectives mode {quant!r}; "
+                         f"expected None or one of {sorted(QUANT_DTYPES)}")
+    return quant
+
+
+def quantized_psum(x, axis, t: int, quant: str = "int8",
+                   chunk: int = DEFAULT_QUANT_CHUNK):
+    """Quantized two-step all-reduce over the TP axis (DESIGN.md §12).
+
+    Lowers one full-width ``psum`` of x [..., h] into the Flash
+    Communication decomposition:
+
+      1. per-chunk abs-max + f32 ``pmax`` over the axis (the scale
+         exchange — one small f32 all-reduce of [rows, ceil(h/chunk)]),
+      2. symmetric quantize onto the shared scales, with ``floor(127/t)``
+         (int8) / ``448/t`` (fp8-e4m3) headroom so the t-way sum cannot
+         overflow the wire dtype — the int8 reduction is therefore EXACT,
+      3. ``psum_scatter`` of the 1-byte payload (compiles to a genuine
+         reduce-scatter HLO op over the quant dtype),
+      4. ``all_gather`` of the reduced 1-byte shards,
+      5. dequantize with the same shared scales (known on every rank from
+         the pmax) back to x.dtype.
+
+    Identity fallbacks: ``axis=None`` / ``quant=None`` / ``t<=1`` run the
+    plain ``_maybe_psum`` — bitwise-identical to the unquantized path with
+    zero quant ops in the compiled module.
+    """
+    if axis is None or quant is None or t <= 1:
+        return _maybe_psum(x, axis)
+    h = x.shape[-1]
+    if h % t:
+        raise ValueError(f"quantized_psum scatters the hidden axis over "
+                         f"t={t}: h={h} must divide")
+    qmax = collective_qmax(quant, t)
+    amax = jax.lax.pmax(chunk_amax(x, chunk), axis)
+    scales = scales_from_amax(amax, qmax)
+    q = chunk_quantize(x, scales, chunk, quant)
+    qs = jax.lax.psum_scatter(q, axis, scatter_dimension=x.ndim - 1,
+                              tiled=True)
+    qg = jax.lax.all_gather(qs, axis, axis=x.ndim - 1, tiled=True)
+    return chunk_dequantize(qg, scales, chunk, x.dtype)
+
+
 def _tp_layer_qkv(cfg, pl, xn, positions, heads_t: int, kv_t: int):
     """Normed input [B, S, h] -> (RoPE'd q, RoPE'd k, v), each
     [B, S, H_t, D] — the projection head shared by every layer variant."""
@@ -125,12 +173,18 @@ def _tp_layer_qkv(cfg, pl, xn, positions, heads_t: int, kv_t: int):
     return q, k, v
 
 
-def _tp_layer_out(cfg, pl, x, attn, axis):
+def _tp_layer_out(cfg, pl, x, attn, axis, t: int = 1, quant: str = None,
+                  quant_chunk: int = DEFAULT_QUANT_CHUNK):
     """Attention-output + MLP residual tail shared by every layer variant:
-    the layer's TWO psums when TP-sharded (``axis`` set)."""
-    x = x + _maybe_psum(attn @ pl["wo"], axis)                 # AR (attn out)
+    the layer's TWO psums when TP-sharded (``axis`` set).  With ``quant``
+    each psum lowers to the quantized two-step (``quantized_psum``,
+    DESIGN.md §12) — the decode hot path's per-layer allreduces are the
+    only collectives this knob ever touches."""
+    x = x + quantized_psum(attn @ pl["wo"], axis, t, quant,
+                           quant_chunk)                        # AR (attn out)
     xn2 = rms_norm(x, pl["ln2"], cfg.norm_eps)
-    return x + _maybe_psum(mlp_apply(pl, xn2, cfg.activation), axis)  # AR
+    return x + quantized_psum(mlp_apply(pl, xn2, cfg.activation), axis, t,
+                              quant, quant_chunk)              # AR (mlp down)
 
 
 def _tp_layer_full(cfg, pl, x, positions, mask, axis, heads_t: int,
@@ -174,8 +228,11 @@ def _cp_layer_full(cfg, pl, x, positions, mask, c: int, axis, heads_t: int,
     return x, cache
 
 
-def _tp_layer_step(cfg, pl, x, pos, cache, axis, heads_t: int, kv_t: int):
-    """One decode step against a ring cache.  2 psums when TP-sharded.
+def _tp_layer_step(cfg, pl, x, pos, cache, axis, heads_t: int, kv_t: int,
+                   t: int = 1, quant: str = None,
+                   quant_chunk: int = DEFAULT_QUANT_CHUNK):
+    """One decode step against a ring cache.  2 psums when TP-sharded —
+    quantized two-steps instead when ``quant`` is set (DESIGN.md §12).
     ``pos`` is a scalar (shared depth) or [B] per-sequence positions."""
     B = x.shape[0]
     w = cache["k"].shape[1]
@@ -186,7 +243,8 @@ def _tp_layer_step(cfg, pl, x, pos, cache, axis, heads_t: int, kv_t: int):
     mask = decode_attn_mask(w, pos, cfg.sliding_window)
     attn = gqa_attention(q, ck, cv, mask).reshape(B, 1,
                                                   heads_t * cfg.head_dim)
-    return _tp_layer_out(cfg, pl, x, attn, axis), {"k": ck, "v": cv}
+    out = _tp_layer_out(cfg, pl, x, attn, axis, t, quant, quant_chunk)
+    return out, {"k": ck, "v": cv}
 
 
 def _tp_layer_paged(cfg, pl, x, pos, cache, bt, axis, heads_t: int,
@@ -325,31 +383,36 @@ def _tp_layers_full(cfg, params, x, positions, mask, heads_t, kv_t,
 
 
 def _tp_layers_step(cfg, params, x, pos, cache, heads_t, kv_t, unroll: bool,
-                    axis="tp"):
+                    axis="tp", t: int = 1, quant: str = None,
+                    quant_chunk: int = DEFAULT_QUANT_CHUNK):
     """All layers for one decode token against the stacked [L,...] cache."""
     if unroll:
         new_cache = []
         for l in range(cfg.num_layers):
             x, c = _tp_layer_step(cfg, _layer_slice(params["blocks"], l), x,
                                   pos, _layer_slice(cache, l), axis,
-                                  heads_t, kv_t)
+                                  heads_t, kv_t, t, quant, quant_chunk)
             new_cache.append(c)
         return x, jax.tree.map(lambda *xs: jnp.stack(xs), *new_cache)
 
     def body(h, inp):
         pl, cl = inp
-        h, c = _tp_layer_step(cfg, pl, h, pos, cl, axis, heads_t, kv_t)
+        h, c = _tp_layer_step(cfg, pl, h, pos, cl, axis, heads_t, kv_t,
+                              t, quant, quant_chunk)
         return h, c
 
     return jax.lax.scan(body, x, (params["blocks"], cache))
 
 
 def _tp_single_step(cfg, params, cache, token, pos, heads_t, kv_t,
-                    unroll: bool, axis="tp"):
-    """One full decode step: embed psum + all layers + logits all-gather."""
+                    unroll: bool, axis="tp", t: int = 1, quant: str = None,
+                    quant_chunk: int = DEFAULT_QUANT_CHUNK):
+    """One full decode step: embed psum + all layers + logits all-gather.
+    ``quant`` quantizes ONLY the per-layer psums; the embedding psum and
+    the logits all-gather stay full-width (DESIGN.md §12)."""
     x = _embed_tokens(cfg, params, token[:, None], axis)
     x, cache = _tp_layers_step(cfg, params, x, pos, cache, heads_t, kv_t,
-                               unroll, axis)
+                               unroll, axis, t, quant, quant_chunk)
     logits = _head(cfg, params, x[:, 0, :], axis)
     return logits, cache
 
@@ -451,10 +514,19 @@ def cp_prefill(cfg: ModelConfig, mesh: Mesh, cache_w: int = None,
 
 
 def tp_decode_step(cfg: ModelConfig, mesh: Mesh, unroll: bool = True,
-                   donate: bool = None, vector_pos: bool = False):
+                   donate: bool = None, vector_pos: bool = False,
+                   quant_collectives: str = None,
+                   quant_chunk: int = DEFAULT_QUANT_CHUNK):
     """jit'd fn(params, cache, token [B], pos) -> (logits, cache).
 
     Collectives per call: (2L+1) allreduce + 1 allgather — Table III decode.
+    With ``quant_collectives`` ("int8" | "fp8") each of the 2L per-layer
+    allreduces lowers to the quantized two-step (DESIGN.md §12): an f32
+    amax allreduce of [B, ceil(h/chunk)] + a 1-byte reduce-scatter + a
+    1-byte all-gather of [B, h] — so the compiled module shows (2L+1)
+    allreduce (2L of them tiny f32 scale exchanges) + 2L reducescatter +
+    (2L+1) allgather, exactly ``commodel.comm_ops_for(quant=...)``.  The
+    embedding psum and logits gather stay full-width.
     The fast path (``unroll=False``) scans the stacked [L, B, W, kv, D] cache
     and donates it, so XLA aliases the update in place instead of the
     per-layer slice/re-stack copy; ``donate`` overrides that default (the
@@ -465,6 +537,7 @@ def tp_decode_step(cfg: ModelConfig, mesh: Mesh, unroll: bool = True,
     replicated over it — context parallelism is prefill-only (DESIGN.md §9).
     """
     t, axis = _tp_axis_of(mesh)
+    quant = _check_quant(quant_collectives)
     heads_t, kv_t = cfg.num_heads // t, cfg.num_kv_heads // t
     specs = tp_param_specs(cfg, tp_axis=axis)
     cache_spec = _cache_spec(axis)
@@ -472,7 +545,8 @@ def tp_decode_step(cfg: ModelConfig, mesh: Mesh, unroll: bool = True,
 
     def fn(params, cache, token, pos):
         return _tp_single_step(cfg, params, cache, token, pos,
-                               heads_t, kv_t, unroll, axis)
+                               heads_t, kv_t, unroll, axis, t, quant,
+                               quant_chunk)
 
     return jax.jit(shard_map(
         fn, mesh=mesh,
@@ -484,7 +558,9 @@ def tp_decode_step(cfg: ModelConfig, mesh: Mesh, unroll: bool = True,
 
 
 def tp_generate(cfg: ModelConfig, mesh: Mesh, num_tokens: int,
-                unroll: bool = False, vector_pos: bool = False):
+                unroll: bool = False, vector_pos: bool = False,
+                quant_collectives: str = None,
+                quant_chunk: int = DEFAULT_QUANT_CHUNK):
     """jit'd fn(params, cache, token [B], pos) -> (tokens [B, N], cache).
 
     Fused greedy multi-token decode: N scanned decode steps run inside ONE
@@ -495,8 +571,11 @@ def tp_generate(cfg: ModelConfig, mesh: Mesh, num_tokens: int,
     across all N steps without ever being re-materialized on the host.
     ``vector_pos`` takes per-sequence [B] start positions (each sequence
     advances from its own depth — ragged fused decode).
+    ``quant_collectives`` lowers the per-layer allreduces to the quantized
+    two-step exactly as in ``tp_decode_step`` (DESIGN.md §12).
     """
     t, axis = _tp_axis_of(mesh)
+    quant = _check_quant(quant_collectives)
     heads_t, kv_t = cfg.num_heads // t, cfg.num_kv_heads // t
     specs = tp_param_specs(cfg, tp_axis=axis)
     cache_spec = _cache_spec(axis)
@@ -504,7 +583,8 @@ def tp_generate(cfg: ModelConfig, mesh: Mesh, num_tokens: int,
     def fn(params, cache, token, pos):
         return greedy_decode_loop(
             lambda c, tok, p: _tp_single_step(cfg, params, c, tok, p,
-                                              heads_t, kv_t, unroll, axis),
+                                              heads_t, kv_t, unroll, axis,
+                                              t, quant, quant_chunk),
             token, cache, pos, num_tokens)
 
     return jax.jit(shard_map(
@@ -639,9 +719,15 @@ class PipelineEngine:
     """
 
     def __init__(self, cfg: ModelConfig, t: int = 1, p: int = 2,
-                 devices=None, unroll: bool = True, c: int = 1):
+                 devices=None, unroll: bool = True, c: int = 1,
+                 quant_collectives: str = None,
+                 quant_chunk: int = DEFAULT_QUANT_CHUNK):
         self.cfg, self.t, self.p, self.c = cfg, t, p, c
         self.unroll = unroll
+        # quantized two-step per-layer allreduces on the DECODE path only
+        # (DESIGN.md §12) — prefill and paged passes stay full-width
+        self.quant = _check_quant(quant_collectives)
+        self.quant_chunk = quant_chunk
         devices = devices if devices is not None else jax.devices()
         assert len(devices) >= t * c * p, f"need {t * c * p} devices"
         self.meshes = [self._stage_mesh(devices[s * t * c:(s + 1) * t * c])
@@ -806,14 +892,16 @@ class PipelineEngine:
                 for i, l in enumerate(range(lo, hi)):
                     x, c = _tp_layer_step(
                         cfg, _layer_slice(params["blocks"], l), x, pos,
-                        _layer_slice(cache, i), axis, heads_t, kv_t)
+                        _layer_slice(cache, i), axis, heads_t, kv_t,
+                        t, self.quant, self.quant_chunk)
                     new_cache.append(c)
                 cache = jax.tree.map(lambda *xs: jnp.stack(xs), *new_cache)
             else:
                 def body(h, inp):
                     pl, cl = inp
                     h, c = _tp_layer_step(cfg, pl, h, pos, cl, axis,
-                                          heads_t, kv_t)
+                                          heads_t, kv_t, t, self.quant,
+                                          self.quant_chunk)
                     return h, c
 
                 x, cache = jax.lax.scan(

@@ -70,7 +70,7 @@ def plan(cfg: ModelConfig, world: int, s_p: int, s_d: int, *,
          ov: EngineOverheads = DEFAULT_OVERHEADS,
          objective: str = "e2e",
          volume_budget: Optional[float] = None,
-         inflight: int = 1) -> List[PlanCandidate]:
+         inflight: int = 1, quant: Optional[str] = None) -> List[PlanCandidate]:
     """Rank all feasible (t, c, p) layouts for ``world`` chips.
 
     objective: "ttft" | "tpot" | "e2e" | "volume".
@@ -82,11 +82,15 @@ def plan(cfg: ModelConfig, world: int, s_p: int, s_d: int, *,
     inherits the same term through predict_slo, so a deep pipeline that
     looks bad serialized can win once the scheduler keeps it occupied.
     At inflight=1 the ranking is bitwise the old one.
+    quant: "int8" | "fp8" (DESIGN.md §12) scores every layout with the
+    decode-phase TP allreduces priced at the quantized two-step — deep-TP
+    layouts whose decode wire bytes priced them off the frontier re-enter
+    it on short sequences (Flash Communication's shape).
     """
     cands = []
     for t, c, p in feasible_layouts(cfg, world):
         slo = predict_slo(cfg, s_p, s_d, t, p, hw=hw, ov=ov, c=c,
-                          inflight=inflight)
+                          inflight=inflight, quant=quant)
         score = {
             "ttft": slo.ttft, "tpot": slo.breakdown["tpot_effective"],
             "e2e": slo.e2e, "volume": slo.comm_volume,

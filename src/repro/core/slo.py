@@ -25,8 +25,8 @@ import math
 from typing import Dict
 
 from repro.config.base import HardwareProfile, H100_NODE, ModelConfig
-from repro.core.commodel import CommOp, comm_ops_for, cp_comm_ops, \
-    cp_shard_len
+from repro.core.commodel import DEFAULT_QUANT_CHUNK, CommOp, comm_ops_for, \
+    cp_comm_ops, cp_shard_len
 
 
 @dataclasses.dataclass(frozen=True)
@@ -93,7 +93,8 @@ def predict_slo(cfg: ModelConfig, s_p: int, s_d: int, t: int = 1, p: int = 1,
                 hw: HardwareProfile = H100_NODE,
                 ov: EngineOverheads = DEFAULT_OVERHEADS,
                 batch: int = 1, dtype_bytes: int = 2,
-                c: int = 1, inflight: int = 1) -> SLOReport:
+                c: int = 1, inflight: int = 1, quant: str = None,
+                quant_chunk: int = DEFAULT_QUANT_CHUNK) -> SLOReport:
     """Predict TTFT/TPOT/E2E for a (t, c, p) layout of one inference
     request.  Context parallelism (``c > 1``, DESIGN.md §9) divides the
     prefill compute over t·c workers and adds the per-layer ring latency
@@ -109,7 +110,18 @@ def predict_slo(cfg: ModelConfig, s_p: int, s_d: int, t: int = 1, p: int = 1,
     ``tpot_effective = tpot / (occ · p)`` with tpot the single-request
     serialized value.  At ``inflight=1`` every term is bitwise the old
     report (occ·p = 1 only when p = 1; for p > 1 occ = 1/p and
-    tpot_effective = tpot exactly, since tpot already serializes stages)."""
+    tpot_effective = tpot exactly, since tpot already serializes stages).
+
+    ``quant`` ("int8" | "fp8", DESIGN.md §12) prices the decode-phase
+    per-layer TP allreduces at the quantized two-step decomposition
+    (``comm_ops_for(quant=...)``).  Latency model: a ring allreduce IS a
+    reduce-scatter + all-gather internally, and Flash Communication fuses
+    the amax exchange into the quantize kernel's launch — so each
+    quantized AR is charged ONE α (carried by its amax-allreduce row; the
+    1-byte payload rows are bytes-only), the same launch cost as the
+    full-width AR it replaces.  The win is therefore pure wire bytes
+    (~w/b + scale overhead of the original), which lands exactly where
+    the paper says TP hurts: bandwidth-bound decode at large t."""
     n_active = cfg.active_param_count()
     world = t * c * p
     nodes = max(1, math.ceil(world / hw.intra_degree))
@@ -122,9 +134,11 @@ def predict_slo(cfg: ModelConfig, s_p: int, s_d: int, t: int = 1, p: int = 1,
 
     # CP ring ops timed separately (they cross at t·c, the rest at t)
     cp_ops = cp_comm_ops(cfg, s_p, c, t=t, b=dtype_bytes, batch=batch)
-    ops = comm_ops_for(cfg, s_p, s_d, t, p, batch=batch, b=dtype_bytes) \
+    qkw = dict(quant=quant, quant_chunk=quant_chunk)
+    ops = comm_ops_for(cfg, s_p, s_d, t, p, batch=batch, b=dtype_bytes,
+                       **qkw) \
         if c == 1 else comm_ops_for(cfg, cp_shard_len(s_p, c), s_d, t, p,
-                                    batch=batch, b=dtype_bytes)
+                                    batch=batch, b=dtype_bytes, **qkw)
     comm_volume = sum(o.wire_bytes for o in ops + cp_ops)
 
     def phase_comm(phase: str) -> float:
@@ -145,6 +159,13 @@ def predict_slo(cfg: ModelConfig, s_p: int, s_d: int, t: int = 1, p: int = 1,
                 cross = dataclasses.replace(o, count=n_cross)
                 total += _collective_time(intra, hw, False)
                 total += _collective_time(cross, hw, True)
+            elif (quant is not None and o.dtype_bytes == 1
+                  and o.collective in ("reducescatter", "allgather")):
+                # quantized two-step payload rows: bytes-only — the α is
+                # carried once per quantized AR by the amax-allreduce row
+                # (see the quant paragraph in the docstring)
+                bw = hw.inter_bw if tp_cross else hw.intra_bw
+                total += o.wire_bytes / bw
             else:
                 total += _collective_time(o, hw, tp_cross)
         return total
@@ -230,7 +251,8 @@ def predict_goodput(cfg: ModelConfig, s_p: int, s_d: int, *,
                     hw: HardwareProfile = H100_NODE,
                     ov: EngineOverheads = DEFAULT_OVERHEADS,
                     dtype_bytes: int = 2, c: int = 1,
-                    inflight: int = 1) -> GoodputReport:
+                    inflight: int = 1, quant: str = None,
+                    quant_chunk: int = DEFAULT_QUANT_CHUNK) -> GoodputReport:
     """Goodput of a slot/page-bound serving engine under overload.
 
     The request mix decodes ``eos_mean`` tokens on average (early stop;
@@ -270,7 +292,8 @@ def predict_goodput(cfg: ModelConfig, s_p: int, s_d: int, *,
                              {"worst_tokens": worst, "actual_tokens": actual})
     base = predict_slo(cfg, s_p, int(round(n_eff)), t, p, hw=hw, ov=ov,
                        batch=concurrency, dtype_bytes=dtype_bytes, c=c,
-                       inflight=inflight)
+                       inflight=inflight, quant=quant,
+                       quant_chunk=quant_chunk)
     # a preemption strikes mid-decode: mean recomputed prefix is the prompt
     # plus half the decoded tokens
     rec = recompute_time(cfg, int(s_p + n_eff / 2), t, p, hw=hw, ov=ov,

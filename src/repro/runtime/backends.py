@@ -71,7 +71,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.config.base import ModelConfig
 from repro.core import parallel_exec as px
-from repro.core.commodel import CommOp, chunked_prefill_ops, comm_ops_for
+from repro.core.commodel import DEFAULT_QUANT_CHUNK, CommOp, \
+    chunked_prefill_ops, comm_ops_for
 from repro.models.layers import paged_cache_update
 from repro.models.transformer import get_model
 from repro.runtime.kvpool import KVPool
@@ -133,10 +134,18 @@ class _BackendBase:
 
     def __init__(self, cfg: ModelConfig, num_slots: int, max_len: int,
                  t: int, p: int, paged: bool = False, page_size: int = 16,
-                 num_pages: Optional[int] = None, c: int = 1):
+                 num_pages: Optional[int] = None, c: int = 1,
+                 quant_collectives: Optional[str] = None,
+                 quant_chunk: int = DEFAULT_QUANT_CHUNK):
         if not cfg.is_decoder:
             raise ValueError(f"{cfg.name} is encoder-only: no decode")
+        if quant_collectives is not None and paged:
+            raise ValueError(
+                "quantized collectives cover the contiguous decode step; "
+                "the paged engines run full-width (DESIGN.md §12)")
         self.cfg = cfg
+        self.quant = quant_collectives
+        self.quant_chunk = int(quant_chunk)
         self.num_slots = int(num_slots)
         self.max_len = int(max_len)
         self.t, self.c, self.p = int(t), int(c), int(p)
@@ -307,11 +316,15 @@ class _BackendBase:
         the prefill token), gather_mode="allgather" (the XLA engines), at
         the backend's actual activation width — so predicted bytes sit on
         the same scale as the measured TransferRecords.  Independent of c:
-        context parallelism is prefill-only (DESIGN.md §9)."""
+        context parallelism is prefill-only (DESIGN.md §9).  A
+        quant-collectives backend gets the decomposed rows (f32 amax
+        allreduce + 1-byte reducescatter/allgather per layer AR,
+        DESIGN.md §12) — what its compiled decode module actually shows."""
         ops = comm_ops_for(self.cfg, 1, 2, self.t, self.p, c=self.c,
                            batch=batch,
                            b=jnp.dtype(self.cfg.dtype).itemsize,
-                           gather_mode="allgather")
+                           gather_mode="allgather",
+                           quant=self.quant, quant_chunk=self.quant_chunk)
         return [o for o in ops if o.phase == "decode"]
 
     def prefill_comm_ops(self, prompt_len: int,
@@ -464,10 +477,14 @@ class TPBackend(_BackendBase):
     def __init__(self, cfg: ModelConfig, params, num_slots: int,
                  max_len: int = 256, t: int = 2, unroll: bool = False,
                  paged: bool = False, page_size: int = 16,
-                 num_pages: Optional[int] = None, c: int = 1):
+                 num_pages: Optional[int] = None, c: int = 1,
+                 quant_collectives: Optional[str] = None,
+                 quant_chunk: int = DEFAULT_QUANT_CHUNK):
         super().__init__(cfg, num_slots, max_len, t=t, p=1, c=c,
                          paged=paged, page_size=page_size,
-                         num_pages=num_pages)
+                         num_pages=num_pages,
+                         quant_collectives=quant_collectives,
+                         quant_chunk=quant_chunk)
         if cfg.family != "dense":
             raise ValueError("explicit TP engine covers the dense family")
         self.params = params
@@ -496,8 +513,9 @@ class TPBackend(_BackendBase):
                 self._prefill = px.tp_prefill(cfg, self.mesh,
                                               cache_w=self.cache_w,
                                               unroll=unroll)
-            self._step = px.tp_decode_step(cfg, self.mesh, unroll=unroll,
-                                           vector_pos=True)
+            self._step = px.tp_decode_step(
+                cfg, self.mesh, unroll=unroll, vector_pos=True,
+                quant_collectives=self.quant, quant_chunk=self.quant_chunk)
             self.cache = {
                 key: jax.device_put(
                     jnp.zeros((cfg.num_layers, num_slots, self.cache_w,
@@ -599,10 +617,14 @@ class PPBackend(_BackendBase):
                  max_len: int = 256, t: int = 1, p: int = 2,
                  unroll: bool = False, devices=None, paged: bool = False,
                  page_size: int = 16, num_pages: Optional[int] = None,
-                 c: int = 1, inflight: int = 1):
+                 c: int = 1, inflight: int = 1,
+                 quant_collectives: Optional[str] = None,
+                 quant_chunk: int = DEFAULT_QUANT_CHUNK):
         super().__init__(cfg, num_slots, max_len, t=t, p=p, c=c,
                          paged=paged, page_size=page_size,
-                         num_pages=num_pages)
+                         num_pages=num_pages,
+                         quant_collectives=quant_collectives,
+                         quant_chunk=quant_chunk)
         if cfg.family != "dense":
             raise ValueError("PipelineEngine covers the dense family")
         if inflight < 1 or num_slots % inflight:
@@ -612,7 +634,9 @@ class PPBackend(_BackendBase):
         self.inflight = int(inflight)
         self.group_size = num_slots // self.inflight
         self.engine = px.PipelineEngine(cfg, t=t, p=p, c=c, unroll=unroll,
-                                        devices=devices)
+                                        devices=devices,
+                                        quant_collectives=self.quant,
+                                        quant_chunk=self.quant_chunk)
         self.staged = self.engine.prepare(params)
         kv_spec = lambda s: NamedSharding(
             self.engine.meshes[s],
@@ -790,7 +814,9 @@ def make_backend(kind: str, cfg: ModelConfig, params, num_slots: int,
                  unroll: bool = False, paged: bool = False,
                  page_size: int = 16,
                  num_pages: Optional[int] = None,
-                 c: int = 1, inflight: int = 1) -> DecodeBackend:
+                 c: int = 1, inflight: int = 1,
+                 quant_collectives: Optional[str] = None,
+                 quant_chunk: int = DEFAULT_QUANT_CHUNK) -> DecodeBackend:
     """Backend factory keyed by engine kind: "gspmd" | "tp" | "pp".
 
     Degenerate layouts are rejected, not coerced — a silently bumped t/c/p
@@ -802,28 +828,37 @@ def make_backend(kind: str, cfg: ModelConfig, params, num_slots: int,
     single-stage explicit engine on a cp-only mesh.  ``inflight > 1``
     splits the slots into in-flight microbatch groups on the pp backend's
     dynamic instruction queue (DESIGN.md §11); the fused engines have no
-    pipeline bubble to fill and reject it.
+    pipeline bubble to fill and reject it.  ``quant_collectives``
+    ("int8" | "fp8", DESIGN.md §12) lowers the explicit engines' per-layer
+    decode allreduces to the quantized two-step; GSPMD places its own
+    collectives and the paged engines run full-width — both reject it.
     """
     kw = dict(paged=paged, page_size=page_size, num_pages=num_pages)
     if kind != "pp" and inflight != 1:
         raise ValueError(
             "in-flight microbatching fills the PP decode bubble; the "
             f"{kind!r} backend runs a fused step — inflight must be 1")
+    qkw = dict(quant_collectives=quant_collectives, quant_chunk=quant_chunk)
     if kind == "gspmd":
         if c > 1:
             raise ValueError(
                 "context parallelism needs the explicit engines — use the "
                 "tp (single-stage) or pp backend with c > 1")
+        if quant_collectives is not None:
+            raise ValueError(
+                "quantized collectives need the explicit engines' "
+                "hand-placed psums — GSPMD places its own collectives; "
+                "use the tp or pp backend")
         return ModelBackend(cfg, params, num_slots, max_len, **kw)
     if kind == "tp":
         if t < 2 and c < 2:
             raise ValueError(
                 f"tp backend needs t >= 2 or c >= 2, got t={t} c={c}")
         return TPBackend(cfg, params, num_slots, max_len, t=t, c=c,
-                         unroll=unroll, **kw)
+                         unroll=unroll, **kw, **qkw)
     if kind == "pp":
         if p < 2:
             raise ValueError(f"pp backend needs p >= 2, got p={p}")
         return PPBackend(cfg, params, num_slots, max_len, t=t, c=c, p=p,
-                         unroll=unroll, inflight=inflight, **kw)
+                         unroll=unroll, inflight=inflight, **kw, **qkw)
     raise ValueError(f"unknown backend kind: {kind!r}")

@@ -143,6 +143,114 @@ def test_comm_ops_wire_bytes_linear_in_batch(sp, sd, t, p, b):
 
 
 # ---------------------------------------------------------------------------
+# wire-factor table: every collective kind × every dtype width — the closed
+# forms every byte prediction in the repo reduces to.  The 1-byte widths are
+# the DESIGN.md §12 quantized payloads (int8 / fp8 both travel at 1 byte);
+# 2/4/8 are bf16 / f32+scales / f64.
+# ---------------------------------------------------------------------------
+
+CLOSED_FORM_FACTORS = {
+    "allreduce": lambda d: 2.0 * (d - 1) / d,
+    "allgather": lambda d: (d - 1) / d,
+    "reducescatter": lambda d: (d - 1) / d,
+    "gather": lambda d: 1.0,
+    "alltoall": lambda d: (d - 1) / d,
+    "send": lambda d: 1.0,
+    "recv": lambda d: 0.0,
+    "collectivepermute": lambda d: 1.0,
+}
+
+WIDTHS = [cm.QUANT_WIRE_BYTES["int8"], cm.QUANT_WIRE_BYTES["fp8"], 2, 4, 8]
+
+
+@given(kind=st.sampled_from(sorted(CLOSED_FORM_FACTORS)),
+       w=st.sampled_from(WIDTHS), d=st.integers(min_value=2, max_value=16),
+       count=st.integers(min_value=1, max_value=64),
+       rows=st.integers(min_value=1, max_value=512),
+       cols=st.integers(min_value=1, max_value=4096))
+@settings(max_examples=200, deadline=None)
+def test_wire_factor_closed_form_every_kind_every_width(kind, w, d, count,
+                                                        rows, cols):
+    """CommOp.wire_bytes == count · rows · cols · width · factor(kind, d)
+    for EVERY collective kind the model emits at EVERY payload width."""
+    op = cm.CommOp(kind, "decode", count, (rows, cols), d, w)
+    assert op.msg_bytes == rows * cols * w
+    assert op.wire_bytes == pytest.approx(
+        count * rows * cols * w * CLOSED_FORM_FACTORS[kind](d))
+
+
+@given(kind=st.sampled_from(sorted(CLOSED_FORM_FACTORS)),
+       w=st.sampled_from(WIDTHS), d=st.integers(min_value=2, max_value=16),
+       k=st.integers(min_value=1, max_value=8))
+@settings(max_examples=120, deadline=None)
+def test_wire_bytes_linear_in_width(kind, w, d, k):
+    """Scaling the payload width k× scales message AND wire bytes exactly
+    k× — the linearity the int8/fp8 wire savings rest on."""
+    one = cm.CommOp(kind, "decode", 3, (7, 129), d, w)
+    wide = cm.CommOp(kind, "decode", 3, (7, 129), d, w * k)
+    assert wide.msg_bytes == k * one.msg_bytes
+    assert wide.wire_bytes == pytest.approx(k * one.wire_bytes)
+
+
+# ---------------------------------------------------------------------------
+# quantized two-step decomposition (DESIGN.md §12): the 3-row expansion of
+# one decode allreduce must sit on the quant_ar_wire_ratio closed form for
+# every (h, t, chunk), and inherit batch invariance of counts
+# ---------------------------------------------------------------------------
+
+
+@given(h=st.integers(min_value=8, max_value=8192),
+       t=t_strat, quant=st.sampled_from(["int8", "fp8"]),
+       chunk=st.sampled_from([32, 64, 128, 256]),
+       rows=st.integers(min_value=1, max_value=64),
+       count=st.integers(min_value=1, max_value=128))
+@settings(max_examples=150, deadline=None)
+def test_quant_decomposition_matches_closed_form_ratio(h, t, quant, chunk,
+                                                       rows, count):
+    """amax-AR + int8 RS + int8 AG wire bytes over the bf16 AR they replace
+    == quant_ar_wire_ratio (t-invariant, odd chunk remainders included)."""
+    qops = cm.quant_decode_ar_ops("decode", count, rows, h, t, quant, chunk)
+    assert [o.collective for o in qops] == \
+        ["allreduce", "reducescatter", "allgather"]
+    base = cm.CommOp("allreduce", "decode", count, (rows, h), t, 2)
+    got = sum(o.wire_bytes for o in qops) / base.wire_bytes
+    assert got == pytest.approx(
+        cm.quant_ar_wire_ratio(h, t, quant=quant, chunk=chunk, b=2))
+    assert got < 0.6   # the acceptance bound, for every shape drawn
+
+
+@given(sp=sp_strat, sd=sd_strat, t=st.sampled_from([1, 2, 4, 8]),
+       p=st.sampled_from([1, 2, 4]), b=batch_strat,
+       quant=st.sampled_from(["int8", "fp8"]))
+@settings(max_examples=80, deadline=None)
+def test_quant_counts_batch_invariant(sp, sd, t, p, b, quant):
+    """The quantized decomposition adds rows, never batch-dependent counts —
+    the scheduler's fixed-capacity decode step stays valid under quant."""
+    one = cm.comm_ops_for(CFG, sp, sd, t, p, batch=1,
+                          gather_mode="allgather", quant=quant)
+    many = cm.comm_ops_for(CFG, sp, sd, t, p, batch=b,
+                           gather_mode="allgather", quant=quant)
+    assert _counts(one) == _counts(many)
+
+
+@given(sp=sp_strat, sd=sd_strat, t=st.sampled_from([2, 4, 8]),
+       quant=st.sampled_from(["int8", "fp8"]))
+@settings(max_examples=60, deadline=None)
+def test_quant_strictly_cheaper_on_decode_wire(sp, sd, t, quant):
+    """At t ≥ 2 the quantized decode wire volume is strictly below the
+    full-width model's; at t == 1 the knob is a no-op."""
+    base = cm.total_volume(cm.comm_ops_for(CFG, sp, sd, t, 1,
+                                           gather_mode="allgather"),
+                           phase="decode")
+    q = cm.total_volume(cm.comm_ops_for(CFG, sp, sd, t, 1,
+                                        gather_mode="allgather", quant=quant),
+                        phase="decode")
+    assert q < base
+    assert cm.comm_ops_for(CFG, sp, sd, 1, 1, quant=quant) == \
+        cm.comm_ops_for(CFG, sp, sd, 1, 1)
+
+
+# ---------------------------------------------------------------------------
 # slo.split_p2p_count: the intra/cross split must conserve the call count
 # ---------------------------------------------------------------------------
 

@@ -107,3 +107,55 @@ ENTRY %main (i: s32[], p: f32[4]) -> f32[4] {
 def test_empty_module():
     assert parse_hlo_collectives("HloModule empty") == []
     assert collective_wire_bytes("HloModule empty") == 0.0
+
+
+# ---------------------------------------------------------------------------
+# scatter-form reclassification (DESIGN.md §12): psum_scatter sometimes
+# compiles as all-reduce + dynamic-slice of the 1/d rank shard; the parser
+# must charge it at the reducescatter factor, and must NOT touch an
+# all-reduce whose result is consumed more than once (a genuine allreduce).
+# ---------------------------------------------------------------------------
+
+SCATTER_FORM = """\
+HloModule jit_qstep, is_scheduled=true
+
+ENTRY %main_spmd (p0: s8[4,512]) -> s8[4,128] {
+  %ar.q = s8[4,512]{1,0} all-reduce(%p0), channel_id=1, replica_groups=[1,4]<=[4], to_apply=%add
+  ROOT %ds = s8[4,128]{1,0} dynamic-slice(%ar.q, %c0, %off), dynamic_slice_sizes={4,128}
+}
+"""
+
+TWO_CONSUMER = """\
+HloModule jit_real_ar, is_scheduled=true
+
+ENTRY %main_spmd (p0: s8[4,512]) -> s8[4,128] {
+  %ar.q = s8[4,512]{1,0} all-reduce(%p0), channel_id=1, replica_groups=[1,4]<=[4], to_apply=%add
+  %use = s8[4,512]{1,0} add(%ar.q, %ar.q)
+  ROOT %ds = s8[4,128]{1,0} dynamic-slice(%use, %c0, %off), dynamic_slice_sizes={4,128}
+}
+"""
+
+
+def test_scatter_form_reclassified_to_reducescatter():
+    """Op-kind → wire-factor pinned: the slice-form lowering is charged as
+    a reduce-scatter — out_bytes = the 1/d shard, wire = (d-1) × shard —
+    identical to a native reduce-scatter op of the same shard."""
+    colls = {c.op_name: c for c in parse_hlo_collectives(SCATTER_FORM)}
+    rs = colls["ar.q"]
+    assert rs.kind == "reducescatter"
+    assert rs.out_bytes == 4 * 128                 # the rank's shard, s8
+    assert rs.group_size == 4
+    assert rs.wire_bytes == 4 * 128 * (4 - 1)      # (d-1) × shard
+    s = summarize(parse_hlo_collectives(SCATTER_FORM))
+    assert "allreduce" not in s
+    assert s["reducescatter"]["count"] == 1
+
+
+def test_multi_consumer_allreduce_not_reclassified():
+    """An all-reduce whose full result is live stays an allreduce at the
+    2(d-1)/d factor even if one consumer is a dynamic-slice of 1/d."""
+    colls = {c.op_name: c for c in parse_hlo_collectives(TWO_CONSUMER)}
+    ar = colls["ar.q"]
+    assert ar.kind == "allreduce"
+    assert ar.out_bytes == 4 * 512
+    assert ar.wire_bytes == 4 * 512 * 2 * (4 - 1) / 4
