@@ -26,6 +26,14 @@ depth-invariant, and depth p must beat depth 1 by the acceptance ratio
 (≥ 2× tokens/tick for pp4, ≥ 1.5× for the pp2-only dry run) with ≥ 0.8
 stage busy fraction.
 
+The prefix-cache series (DESIGN.md §13) gets its own gate,
+``check_prefix_cache``: the cold and cached serves of the identical
+template trace must be bitwise token-identical, the cached run's executed
+prefill chunks/counts must equal the per-request suffix arithmetic
+(``commodel.prefix_cache_ops``'s executed column), hit TTFT must sit
+strictly below cold TTFT on the same rids, and clearing the index must
+drain the pool to zero — the no-leak guarantee of the ref-counted pages.
+
 The quantized decode records (DESIGN.md §12) get their own gate,
 ``check_quant``: every ``quant`` row must hold ``token_match_rate`` above
 and ``max_logit_drift`` below the ``QUANT_TOLERANCE`` contract shipped in
@@ -57,7 +65,9 @@ CHECKS = [
      ("series", "arch", "backend", "tp", "cp", "pp", "paged", "admission",
       "inflight"),
      ("decode_collective_counts", "prefill_chunk_counts",
-      "prefill_collective_counts", "recompute_collective_counts")),
+      "prefill_collective_counts", "recompute_collective_counts",
+      "prefix_cache_ops_executed_counts",
+      "prefix_cache_ops_skipped_counts")),
 ]
 
 SERVE_DRY = os.path.join(REPO, "results", "BENCH_serve.dryrun.json")
@@ -176,6 +186,82 @@ def check_pp_occupancy(path, full):
             failures.append(
                 f"{name} pp{p}: depth-{p} stage busy fraction "
                 f"{dp['busy_fraction_mean']:.3f} < 0.8")
+    return failures
+
+
+def check_prefix_cache(path):
+    """Gate the prefix-cache series (DESIGN.md §13) in ``path``.
+
+    The bench serves the identical template-heavy trace cold and with the
+    cross-request prefix index, so every gate is exact within one file:
+    token checksums must match bitwise (adopted KV pages produce the same
+    greedy streams as recomputed ones), the cached run must actually hit,
+    executed prefill chunks must equal the per-request suffix arithmetic
+    ``sum(ceil((s_p - hit) / chunk))`` with executed collective counts ==
+    per-chunk counts × chunks (``prefix_cache_ops``'s executed column),
+    the cached run must run strictly FEWER chunks than cold, mean hit
+    TTFT must sit strictly below the cold run's on the same rids, and the
+    pool must drain to zero once the index is cleared."""
+    if not os.path.exists(path):
+        return [f"{path} missing — run the --dry-run bench first"]
+    with open(path) as f:
+        recs = [r for r in json.load(f)
+                if r.get("series") == "prefix-cache"]
+    name = os.path.basename(path)
+    by = {bool(r.get("prefix_cache")): r for r in recs}
+    if set(by) != {False, True}:
+        return [f"{name}: prefix-cache series incomplete — need a cold "
+                f"and a cached record, got {len(recs)}"]
+    cold, hot = by[False], by[True]
+    failures = []
+    if not hot["token_checksum_matches_uncached"] \
+            or hot["token_checksum"] != cold["token_checksum"]:
+        failures.append(
+            f"{name}: prefix-cache token streams differ from the cold "
+            "run — adopted KV pages broke bitwise identity")
+    if hot["hits"] < 1 or hot["hit_rate_measured"] <= 0.0:
+        failures.append(
+            f"{name}: prefix-cache run recorded no hits — the index "
+            "never matched the template trace")
+    if cold["hits"] != 0:
+        failures.append(
+            f"{name}: the cold record claims {cold['hits']} hits but has "
+            "no index — metrics plumbing is broken")
+    for rec, tag in ((cold, "cold"), (hot, "cached")):
+        if rec["prefill_chunks"] != rec["predicted_prefill_chunks"]:
+            failures.append(
+                f"{name} {tag}: {rec['prefill_chunks']} prefill chunks, "
+                f"suffix arithmetic predicts "
+                f"{rec['predicted_prefill_chunks']}")
+        want = {k: v * rec["prefill_chunks"]
+                for k, v in rec["prefill_chunk_counts"].items()}
+        if rec["executed_prefill_counts"] != want \
+                or rec["executed_prefill_counts"] \
+                != rec["predicted_executed_prefill_counts"]:
+            failures.append(
+                f"{name} {tag}: executed prefill counts "
+                f"{rec['executed_prefill_counts']} != per-chunk × chunks "
+                f"{want} — the hit path issued unpredicted collectives")
+    if hot["prefill_chunks"] >= cold["prefill_chunks"]:
+        failures.append(
+            f"{name}: cached run executed {hot['prefill_chunks']} chunks, "
+            f"cold ran {cold['prefill_chunks']} — the cache skipped "
+            "nothing")
+    if hot["ttft_hit_mean_s"] is None \
+            or hot["ttft_cold_mean_s"] is None \
+            or hot["ttft_hit_mean_s"] >= hot["ttft_cold_mean_s"]:
+        failures.append(
+            f"{name}: mean hit TTFT {hot['ttft_hit_mean_s']} is not "
+            f"strictly below the cold run's {hot['ttft_cold_mean_s']} on "
+            "the same rids")
+    if hot["total_tokens"] != cold["total_tokens"]:
+        failures.append(
+            f"{name}: prefix-cache token totals diverge "
+            f"({hot['total_tokens']} vs {cold['total_tokens']})")
+    if not hot["pool_drained"]:
+        failures.append(
+            f"{name}: pool did not drain to zero after the index was "
+            "cleared — cached pages leaked")
     return failures
 
 
@@ -334,6 +420,9 @@ def main():
     failures += check_pp_occupancy(SERVE_DRY, full=False)
     if os.path.exists(SERVE_FULL):
         failures += check_pp_occupancy(SERVE_FULL, full=True)
+    failures += check_prefix_cache(SERVE_DRY)
+    if os.path.exists(SERVE_FULL):
+        failures += check_prefix_cache(SERVE_FULL)
     failures += check_quant(DECODE_DRY)
     if os.path.exists(DECODE_FULL):
         failures += check_quant(DECODE_FULL)
@@ -345,7 +434,9 @@ def main():
     print("baseline check OK: predicted collective counts match "
           "BENCH_decode.json / BENCH_serve.json, overload ordering holds, "
           "pp-occupancy sits on the pp_schedule_stats closed form, "
-          "quant records satisfy the QUANT_TOLERANCE numerics contract")
+          "quant records satisfy the QUANT_TOLERANCE numerics contract, "
+          "prefix-cache runs are bitwise identical with suffix-only "
+          "prefill counts and a zero-leak drain")
 
 
 if __name__ == "__main__":

@@ -7,7 +7,7 @@ measurement — measured TTFT / TPOT / E2E sit next to the analytical
 ``core.slo.predict_slo`` prediction for the same layout, so the two sides of
 the paper's methodology (measure + model) face each other at request level.
 
-Four series (4-device host-platform mesh):
+Six series (4-device host-platform mesh):
 
   short       gspmd / tp2 / pp2, contiguous slots, prompts 8–48 at three
               arrival rates — the original throughput-vs-latency sweep
@@ -28,6 +28,15 @@ Four series (4-device host-platform mesh):
               it is not diffed against the full-series baseline) and the
               recompute collective counts; the run completing at all is
               the zero-MemoryError-escapes assertion
+  prefix-cache  a template-heavy closed trace (``make_template_trace``,
+              DESIGN.md §13) served twice through tp2 paged + chunked
+              prefill: once cold, once with the cross-request prefix
+              index live — ``check_baselines.check_prefix_cache`` gates
+              bitwise token identity between the two (checksum), executed
+              prefill chunks/counts == the per-request suffix arithmetic
+              (``commodel.prefix_cache_ops``'s executed column), hit TTFT
+              strictly below the cold run's on the same rids, and a
+              zero-leak pool drain once the index is cleared
   pp-occupancy  the dynamic-schedule payoff curve (DESIGN.md §11): the SAME
               closed request set through pp2/pp4 at in-flight depth
               d ∈ 1..p (``num_slots = 2·d`` so depth adds concurrent
@@ -87,6 +96,15 @@ OV_PROMPT_LENS = (8, 32)
 OV_DECODE_LENS = (6, 20)
 OV_MAX_LEN = 64
 OV_EOS_PROB = 0.3
+
+# prefix-cache series: template-heavy trace on tp2 paged + chunked with
+# the cross-request prefix index (DESIGN.md §13).  Two-page templates so
+# every hit adopts full blocks; suffixes stay under one chunk.
+PC_REQUESTS = 16
+PC_TEMPLATE_PAGES = 2
+PC_SUFFIX_LENS = (4, 12)
+PC_DECODE_LENS = (4, 8)
+PC_MAX_LEN = 96
 
 # pp-occupancy series: dynamic-schedule depth sweep (DESIGN.md §11).  A
 # request group is OCC_GROUP slots; depth d runs d groups in flight on
@@ -390,6 +408,97 @@ def _measure(dry_run: bool = False):
                                                 gather_mode="allgather")),
             "predicted_goodput_tok_s": gp.goodput_tok_s,
             "predicted_preempt_rate": gp.preempt_rate,
+        })
+
+    # -- prefix-cache series: the SAME template-heavy closed trace served
+    #    cold and with the cross-request prefix index (DESIGN.md §13).
+    #    The warm pass (rids 10_000+, identical prompts) compiles every
+    #    chunk shape off the clock AND — on the cached backend — populates
+    #    the index, so the measured pass hits on every request: the clean
+    #    executed-vs-skipped comparison.  All gated quantities are either
+    #    deterministic counts or within-file TTFT orderings.
+    import hashlib
+
+    from repro.core.commodel import prefix_cache_ops
+    from repro.runtime.request import make_template_trace
+
+    pc_n = DRY_REQUESTS if dry_run else PC_REQUESTS
+    pc_tmpl = PC_TEMPLATE_PAGES * PAGE_SIZE
+    pc_chunk = PAGE_SIZE
+    pc_trace = make_template_trace(
+        pc_n, 0.0, cfg.vocab_size, n_templates=2, template_len=pc_tmpl,
+        suffix_lens=PC_SUFFIX_LENS, decode_lens=PC_DECODE_LENS, seed=17)
+    pc_checksum = {}
+    pc_ttft = {}
+    # canonical closed form at the modal request shape (hit = the whole
+    # template, suffix = mean suffix): drift-gated against the baseline
+    pc_ops = prefix_cache_ops(cfg, pc_tmpl, sum(PC_SUFFIX_LENS) // 2,
+                              chunk=pc_chunk, t=2, gather_mode="allgather")
+    for cached in (False, True):
+        backend = make_backend("tp", cfg, params, num_slots=num_slots,
+                               max_len=PC_MAX_LEN, t=2, paged=True,
+                               page_size=PAGE_SIZE, prefix_cache=cached)
+        sched = lambda: Scheduler(backend, chunk_size=pc_chunk)
+        sched().run([Request(rid=10_000 + i, prompt=r.prompt.copy(),
+                             max_new_tokens=2) for i, r in
+                     enumerate(pc_trace)])
+        report = sched().run(pc_trace)
+        s = report.summary()
+        toks = report.tokens_by_rid()
+        pc_checksum[cached] = hashlib.sha256(
+            json.dumps(toks, sort_keys=True).encode()).hexdigest()
+        pc_ttft[cached] = {m.rid: m.ttft for m in report.metrics}
+        hits = {m.rid: m.cached_prefix_len for m in report.metrics
+                if m.cached_prefix_len > 0}
+        chunks = [r for r in report.steps if r.phase == "prefill"]
+        executed = {}
+        for r in chunks:
+            for k, v in r.collective_counts.items():
+                executed[k] = executed.get(k, 0) + v
+        # per-request suffix arithmetic: ceil((s_p - hit) / chunk) passes
+        pred_chunks = sum(
+            -(-(m.prompt_len - m.cached_prefix_len) // pc_chunk)
+            for m in report.metrics)
+        per_chunk = chunk_counts(backend, pc_chunk)
+        hit_rids = sorted(hits)
+        drained = True
+        if cached:
+            backend.prefix_index.clear()
+            drained = (backend.pool.stats().used_tokens == 0
+                       and backend.pool.free_pages
+                       == backend.pool.num_pages - 1)
+        results.append({
+            "series": "prefix-cache", "arch": cfg.name,
+            "backend": "tp2-paged-prefix" if cached else "tp2-paged",
+            "tp": 2, "cp": 1, "pp": 1, "paged": True,
+            "chunk_size": pc_chunk, "inflight": 1,
+            "num_slots": num_slots, "rate_req_s": 0.0, **s,
+            "prefix_cache": cached, "template_len": pc_tmpl,
+            "hits": len(hits),
+            "hit_rate_measured": len(hits) / len(pc_trace),
+            "cached_prefix_tokens": sum(hits.values()),
+            "prefill_chunks": len(chunks),
+            "predicted_prefill_chunks": pred_chunks,
+            "executed_prefill_counts": executed,
+            "predicted_executed_prefill_counts":
+                {k: v * pred_chunks for k, v in per_chunk.items()},
+            "prefill_chunk_counts": per_chunk,
+            "decode_collective_counts":
+                step_collective_counts(backend, 1),
+            "prefix_cache_ops_executed_counts": pc_ops.executed_counts,
+            "prefix_cache_ops_skipped_counts": pc_ops.skipped_counts,
+            "ttft_hit_mean_s": float(np.mean(
+                [pc_ttft[cached][r] for r in hit_rids]))
+                if cached and hit_rids else None,
+            "ttft_cold_mean_s": float(np.mean(
+                [pc_ttft[False][r] for r in hit_rids]))
+                if cached and hit_rids else None,
+            "token_checksum": pc_checksum[cached],
+            "token_checksum_matches_uncached":
+                pc_checksum[cached] == pc_checksum[False],
+            "pool_drained": drained,
+            "index_stats":
+                backend.prefix_index.stats() if cached else None,
         })
     print("SERVEJSON:" + json.dumps(results))
 

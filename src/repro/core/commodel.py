@@ -547,6 +547,92 @@ def preemption_recompute_ops(cfg: ModelConfig, prefix_len: int, t: int = 1,
 
 
 # ---------------------------------------------------------------------------
+# Cross-request prefix caching — skipped vs executed prefill (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+
+def _agg_counts(ops: List[CommOp]) -> dict:
+    counts: dict = {}
+    for o in ops:
+        counts[o.collective] = counts.get(o.collective, 0) + o.count
+    return counts
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefixCacheOps:
+    """Executed-vs-skipped prefill communication of ONE cache-hit request
+    (DESIGN.md §13): ``executed`` is what the suffix prefill actually
+    issues — the rows the compiled HLO and the scheduler's phase="prefill"
+    StepRecords must match — and ``cold`` is what the same request would
+    have issued with no hit; the *savings* are their difference."""
+
+    hit_len: int
+    suffix_len: int
+    executed: List[CommOp]
+    cold: List[CommOp]
+
+    @property
+    def executed_counts(self) -> dict:
+        return _agg_counts(self.executed)
+
+    @property
+    def cold_counts(self) -> dict:
+        return _agg_counts(self.cold)
+
+    @property
+    def skipped_counts(self) -> dict:
+        ex = self.executed_counts
+        return {k: v - ex.get(k, 0) for k, v in self.cold_counts.items()}
+
+    @property
+    def executed_bytes(self) -> float:
+        return sum(o.wire_bytes for o in self.executed)
+
+    @property
+    def cold_bytes(self) -> float:
+        return sum(o.wire_bytes for o in self.cold)
+
+    @property
+    def skipped_bytes(self) -> float:
+        return self.cold_bytes - self.executed_bytes
+
+
+def prefix_cache_ops(cfg: ModelConfig, hit_len: int, suffix_len: int,
+                     chunk: Optional[int] = None, t: int = 1, p: int = 1,
+                     *, b: int = 2, batch: int = 1,
+                     gather_mode: str = "gather") -> PrefixCacheOps:
+    """Closed-form skipped-vs-executed prefill collectives for a request
+    whose first ``hit_len`` positions came out of the prefix index and
+    whose remaining ``suffix_len`` positions were prefilled (DESIGN.md
+    §13).  ``chunk`` mirrors the scheduler's chunked prefill: the suffix
+    splits at ``hit_len + k·chunk`` into ``ceil(suffix_len / chunk)``
+    passes — exactly ``chunked_prefill_ops`` over the suffix, because
+    per-chunk counts are chunk-length-invariant; ``chunk=None`` is the
+    monolithic path (``prefill_whole(start=hit)``, one maximal chunk).
+    Counts stay batch-invariant for the same reason every other count
+    column in this module does: no count term carries a token or batch
+    factor, only message bytes scale.
+
+    ``hit_len = 0`` degenerates to ``executed == cold`` (a miss skips
+    nothing), so callers can price a whole trace by mixing per-request
+    hit lengths without special-casing misses.
+    """
+    if hit_len < 0 or suffix_len < 1:
+        raise ValueError(
+            f"need hit_len >= 0 and suffix_len >= 1 (the final position is "
+            f"always prefilled), got {hit_len}/{suffix_len}")
+    executed = chunked_prefill_ops(
+        cfg, suffix_len, chunk if chunk else suffix_len, t, p, b=b,
+        batch=batch, gather_mode=gather_mode)
+    total = hit_len + suffix_len
+    cold = chunked_prefill_ops(
+        cfg, total, chunk if chunk else total, t, p, b=b, batch=batch,
+        gather_mode=gather_mode)
+    return PrefixCacheOps(hit_len=hit_len, suffix_len=suffix_len,
+                          executed=executed, cold=cold)
+
+
+# ---------------------------------------------------------------------------
 # Dynamic pipeline schedules — instruction counts + ticks (DESIGN.md §11)
 # ---------------------------------------------------------------------------
 

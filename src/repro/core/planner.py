@@ -70,7 +70,9 @@ def plan(cfg: ModelConfig, world: int, s_p: int, s_d: int, *,
          ov: EngineOverheads = DEFAULT_OVERHEADS,
          objective: str = "e2e",
          volume_budget: Optional[float] = None,
-         inflight: int = 1, quant: Optional[str] = None) -> List[PlanCandidate]:
+         inflight: int = 1, quant: Optional[str] = None,
+         hit_rate: float = 0.0,
+         hit_len: Optional[int] = None) -> List[PlanCandidate]:
     """Rank all feasible (t, c, p) layouts for ``world`` chips.
 
     objective: "ttft" | "tpot" | "e2e" | "volume".
@@ -86,11 +88,18 @@ def plan(cfg: ModelConfig, world: int, s_p: int, s_d: int, *,
     decode-phase TP allreduces priced at the quantized two-step — deep-TP
     layouts whose decode wire bytes priced them off the frontier re-enter
     it on short sequences (Flash Communication's shape).
+    hit_rate / hit_len: expected prefix-cache hit statistics of the
+    traffic (DESIGN.md §13).  Every layout is scored with ``hit_rate`` of
+    requests prefilling only their ``s_p - hit_len`` suffix, so under
+    template-heavy traffic prefill-bound advantages (CP's sharded
+    prefill in particular) shrink toward zero and decode-bound layouts
+    climb the ranking; at hit_rate=0 the ranking is bitwise the old one.
     """
     cands = []
     for t, c, p in feasible_layouts(cfg, world):
         slo = predict_slo(cfg, s_p, s_d, t, p, hw=hw, ov=ov, c=c,
-                          inflight=inflight, quant=quant)
+                          inflight=inflight, quant=quant,
+                          hit_rate=hit_rate, hit_len=hit_len)
         score = {
             "ttft": slo.ttft, "tpot": slo.breakdown["tpot_effective"],
             "e2e": slo.e2e, "volume": slo.comm_volume,

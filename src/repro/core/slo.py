@@ -94,7 +94,9 @@ def predict_slo(cfg: ModelConfig, s_p: int, s_d: int, t: int = 1, p: int = 1,
                 ov: EngineOverheads = DEFAULT_OVERHEADS,
                 batch: int = 1, dtype_bytes: int = 2,
                 c: int = 1, inflight: int = 1, quant: str = None,
-                quant_chunk: int = DEFAULT_QUANT_CHUNK) -> SLOReport:
+                quant_chunk: int = DEFAULT_QUANT_CHUNK,
+                hit_rate: float = 0.0,
+                hit_len: int = None) -> SLOReport:
     """Predict TTFT/TPOT/E2E for a (t, c, p) layout of one inference
     request.  Context parallelism (``c > 1``, DESIGN.md §9) divides the
     prefill compute over t·c workers and adds the per-layer ring latency
@@ -121,7 +123,43 @@ def predict_slo(cfg: ModelConfig, s_p: int, s_d: int, t: int = 1, p: int = 1,
     1-byte payload rows are bytes-only), the same launch cost as the
     full-width AR it replaces.  The win is therefore pure wire bytes
     (~w/b + scale overhead of the original), which lands exactly where
-    the paper says TP hurts: bandwidth-bound decode at large t."""
+    the paper says TP hurts: bandwidth-bound decode at large t.
+
+    ``hit_rate`` (DESIGN.md §13) prices cross-request prefix caching: a
+    fraction ``hit_rate`` of requests find their first ``hit_len`` prompt
+    positions in the index (default: the whole prompt minus the final
+    position — a fully shared template) and prefill only the suffix, so
+    their TTFT is the TTFT of a ``s_p - hit_len``-token request on the
+    same layout.  The report mixes the cold and hit terms linearly;
+    ``hit_rate=0`` is bitwise the uncached report.  Decode terms never
+    move — the cache skips prefill only — which is exactly why the
+    planner's ranking shifts under template-heavy traffic: layouts that
+    buy prefill time (CP's ring, prefill-lean PP splits) lose their edge
+    when prefill is mostly skipped, while decode-bound layouts keep
+    theirs."""
+    if not 0.0 <= hit_rate <= 1.0:
+        raise ValueError(f"hit_rate must be in [0, 1], got {hit_rate}")
+    if hit_rate > 0.0:
+        hit = s_p - 1 if hit_len is None else int(hit_len)
+        if not 1 <= hit < s_p:
+            raise ValueError(
+                f"hit_len must be in [1, s_p) — the final position is "
+                f"always prefilled — got {hit} at s_p={s_p}")
+        cold = predict_slo(cfg, s_p, s_d, t, p, hw=hw, ov=ov, batch=batch,
+                           dtype_bytes=dtype_bytes, c=c, inflight=inflight,
+                           quant=quant, quant_chunk=quant_chunk)
+        hot = predict_slo(cfg, s_p - hit, s_d, t, p, hw=hw, ov=ov,
+                          batch=batch, dtype_bytes=dtype_bytes, c=c,
+                          inflight=inflight, quant=quant,
+                          quant_chunk=quant_chunk)
+        mix = lambda a, b: (1.0 - hit_rate) * a + hit_rate * b
+        breakdown = dict(cold.breakdown)
+        breakdown.update({"hit_rate": hit_rate, "hit_len": hit,
+                          "ttft_cold": cold.ttft, "ttft_hit": hot.ttft})
+        return SLOReport(mix(cold.ttft, hot.ttft), cold.tpot,
+                         mix(cold.e2e, hot.e2e),
+                         mix(cold.comm_volume, hot.comm_volume),
+                         breakdown, occupancy=cold.occupancy)
     n_active = cfg.active_param_count()
     world = t * c * p
     nodes = max(1, math.ceil(world / hw.intra_degree))

@@ -76,6 +76,7 @@ from repro.core.commodel import DEFAULT_QUANT_CHUNK, CommOp, \
 from repro.models.layers import paged_cache_update
 from repro.models.transformer import get_model
 from repro.runtime.kvpool import KVPool
+from repro.runtime.prefix_index import PrefixIndex
 from repro.runtime.schedule import DynamicPPQueue, FusedQueue
 
 
@@ -113,6 +114,21 @@ def _write_slot(big, small, slot):
         big, small)
 
 
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _copy_page_rows(pools, src, dst):
+    """Replay one ``KVPool`` copy-on-write on the device page pools: copy
+    physical page ``src``'s rows into page ``dst`` on every leaf (page axis
+    is axis 1 of each [L, P, ps, kv, D] pool).  The whole page is copied —
+    rows past the owner's committed length are garbage either way (the
+    paged attention mask never exposes them, DESIGN.md §8) and the static
+    shape keeps this ONE compiled module per pool shape.  src/dst are
+    traced scalars, so repeated COWs never recompile."""
+    def one(a):
+        page = jax.lax.dynamic_slice_in_dim(a, src, 1, axis=1)
+        return jax.lax.dynamic_update_slice_in_dim(a, page, dst, axis=1)
+    return jax.tree.map(one, pools)
+
+
 def _seed_pages(pools, small, bt):
     """Scatter a batch-1 contiguous cache {k,v: [L, 1, S, kv, D]} into the
     KV page pools {k,v: [L, P, ps, kv, D]} at the pages ``bt`` [1, n]
@@ -136,13 +152,23 @@ class _BackendBase:
                  t: int, p: int, paged: bool = False, page_size: int = 16,
                  num_pages: Optional[int] = None, c: int = 1,
                  quant_collectives: Optional[str] = None,
-                 quant_chunk: int = DEFAULT_QUANT_CHUNK):
+                 quant_chunk: int = DEFAULT_QUANT_CHUNK,
+                 prefix_cache: bool = False):
         if not cfg.is_decoder:
             raise ValueError(f"{cfg.name} is encoder-only: no decode")
         if quant_collectives is not None and paged:
             raise ValueError(
                 "quantized collectives cover the contiguous decode step; "
                 "the paged engines run full-width (DESIGN.md §12)")
+        if prefix_cache and not paged:
+            raise ValueError(
+                "prefix caching shares KV pages across requests — "
+                "construct the backend with paged=True (DESIGN.md §13)")
+        if prefix_cache and c > 1:
+            raise ValueError(
+                "a cache hit prefills only the novel suffix, which needs "
+                "the chunked (offset) prefill path; CP prefills the whole "
+                "sequence monolithically (DESIGN.md §9/§13) — use c=1")
         self.cfg = cfg
         self.quant = quant_collectives
         self.quant_chunk = int(quant_chunk)
@@ -175,6 +201,7 @@ class _BackendBase:
                 (self.num_slots, self.pages_per_slot), np.int32)
             self._decodable: set = set()
             self._worst: dict = {}      # slot -> worst-case pages committed
+        self.prefix_index = PrefixIndex(self.pool) if prefix_cache else None
 
     # -- paged bookkeeping (DESIGN.md §8) ----------------------------------
     def _require_paged(self):
@@ -214,17 +241,47 @@ class _BackendBase:
         exhaustion then becomes possible and is the scheduler's problem
         (preemption-by-recompute); the payoff is that EOS-heavy traffic no
         longer strands pool capacity on decode budgets that never
-        materialize."""
+        materialize.
+
+        With a prefix index attached, pages pinned only by unreferenced
+        cached prefixes count as free — they are reclaimable on demand
+        (``_claim_guard``), so a pool full of cold cache never deadlocks
+        admission (DESIGN.md §13)."""
         self._require_paged()
+        free = self.pool.free_pages + (self.prefix_index.reclaimable_pages()
+                                       if self.prefix_index else 0)
         if optimistic:
-            return self.pool.free_pages >= \
-                self._pages_for(self._alloc_len(prompt_len))
+            return free >= self._pages_for(self._alloc_len(prompt_len))
         committed = sum(
             max(0, self._worst.get(s, 0) - len(self.pool.block_table(s)))
-            for s in self.pool.owners())
+            for s in self.pool.owners()
+            if s >= 0)     # index owners never grow (negative ids)
         need = self._pages_for(max(self._alloc_len(prompt_len),
                                    prompt_len + max_new_tokens - 1))
-        return self.pool.free_pages - committed >= need
+        return free - committed >= need
+
+    def _claim_guard(self, fn):
+        """Run a pool claim; under pressure, evict LRU cached prefixes
+        until it succeeds (or the index is drained — then the MemoryError
+        propagates to the scheduler's preemption ladder)."""
+        while True:
+            try:
+                return fn()
+            except MemoryError:
+                if self.prefix_index is None \
+                        or not self.prefix_index.evict_one():
+                    raise
+
+    def _apply_cow(self) -> None:
+        """Replay the pool's pending copy-on-write events as device page
+        copies — MUST run after every ``pool.extend`` before the next pass
+        touches the privatized page (DESIGN.md §13)."""
+        for ev in self.pool.take_cow_events():
+            self._copy_page(ev.src, ev.dst)
+
+    def _copy_page(self, src: int, dst: int) -> None:
+        """Copy physical page src -> dst on this backend's device pools."""
+        raise NotImplementedError
 
     def begin_prefill(self, slot: int, prompt_len: int,
                       max_new_tokens: int = 1) -> None:
@@ -234,11 +291,58 @@ class _BackendBase:
         self._require_paged()
         self.pool.free(slot)                # defensive: slot may be reused
         self._decodable.discard(slot)
-        self.pool.allocate(slot, self._alloc_len(prompt_len))
+        self._claim_guard(
+            lambda: self.pool.allocate(slot, self._alloc_len(prompt_len)))
         self._worst[slot] = self._pages_for(
             max(self._alloc_len(prompt_len),
                 prompt_len + max_new_tokens - 1))
         self._set_table(slot)
+
+    def begin_prefill_cached(self, slot: int, prompt,
+                             max_new_tokens: int = 1) -> int:
+        """Cache-aware admission (DESIGN.md §13): look the prompt up in the
+        prefix index, adopt the longest cached prefix's pages into the
+        slot, and extend to the full prompt — claiming fresh pages for the
+        suffix and copy-on-writing a partially shared tail (a fully cached
+        prompt is capped one position short, so its last page IS shared
+        partially and privatizes here, before the suffix chunk writes it).
+        Returns the hit length in tokens (0 = cold: plain begin_prefill).
+        The caller prefills only positions hit..prompt_len-1."""
+        self._require_paged()
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if self.prefix_index is None:
+            self.begin_prefill(slot, len(prompt), max_new_tokens)
+            return 0
+        self.pool.free(slot)                # defensive: slot may be reused
+        self._decodable.discard(slot)
+        hit = self.prefix_index.lookup(prompt)
+        if not hit.hit:
+            self.begin_prefill(slot, len(prompt), max_new_tokens)
+            return 0
+        self.pool.adopt(slot, hit.pages, hit.length)
+        try:
+            self._claim_guard(
+                lambda: self.pool.extend(slot, self._alloc_len(len(prompt))))
+        except MemoryError:
+            self.pool.free(slot)     # nothing half-claimed: extend is atomic
+            raise
+        self._apply_cow()
+        self._worst[slot] = self._pages_for(
+            max(self._alloc_len(len(prompt)),
+                len(prompt) + max_new_tokens - 1))
+        self._set_table(slot)
+        return hit.length
+
+    def cache_prefix(self, slot: int, tokens) -> int:
+        """Insert a fully prefilled slot's prompt blocks into the prefix
+        index (no-op without one); returns new entries created.  Only full
+        blocks are indexed, and they are exactly the slot's first pages —
+        committed by the prefill that just finished, never rewritten (decode
+        writes land at positions past the prompt)."""
+        if not self.paged or self.prefix_index is None:
+            return 0
+        tokens = np.asarray(tokens, np.int32).reshape(-1)
+        return self.prefix_index.insert(tokens, self.pool.block_table(slot))
 
     def prefill_chunk(self, slot: int, tokens, start: int) -> int:
         """One chunked-prefill pass for ``tokens`` at positions
@@ -256,16 +360,27 @@ class _BackendBase:
         logits = self._paged_call(chunk, pos, bt, phase="prefill")
         return int(np.argmax(logits[0]))
 
-    def prefill_whole(self, slot: int, tokens) -> int:
+    def prefill_whole(self, slot: int, tokens, start: int = 0) -> int:
         """Monolithic prefill of one request into its allocated pages:
         one maximal chunk at c == 1, or — under context parallelism — one
         sequence-sharded CP pass whose assembled full KV is scattered into
         the slot's pages (``_seed_pages``).  Returns the first greedy
-        token; ``begin_prefill`` must have run."""
+        token; ``begin_prefill`` (or ``begin_prefill_cached``, whose hit
+        length becomes ``start``) must have run.  With ``start > 0`` only
+        positions start.. are computed — ONE suffix chunk over the cached
+        prefix's pages (DESIGN.md §13)."""
         self._require_paged()
         tokens = np.asarray(tokens, np.int32).reshape(-1)
+        if not 0 <= start < len(tokens):
+            raise ValueError(
+                f"start {start} outside [0, {len(tokens)}) — a cache hit "
+                "always leaves at least the final position to prefill")
         if self.c == 1:
-            return self.prefill_chunk(slot, tokens, 0)
+            return self.prefill_chunk(slot, tokens[start:], start)
+        if start:
+            raise RuntimeError(
+                "suffix prefill needs the chunked (offset) path; "
+                "c > 1 backends prefill monolithically (DESIGN.md §9)")
         logits, small = self._prefill_one(tokens)
         self._seed_slot_pages(small, slot)
         return int(np.argmax(np.asarray(logits)[0]))
@@ -286,8 +401,10 @@ class _BackendBase:
         the scratch page so their garbage lanes stay harmless."""
         pos = np.asarray(pos)
         for slot in sorted(self._decodable):
-            self.pool.extend(slot, int(pos[slot]) + 1)
+            self._claim_guard(
+                lambda s=slot: self.pool.extend(s, int(pos[s]) + 1))
             self._set_table(slot)
+        self._apply_cow()
         bt = self.block_tables.copy()
         for slot in range(self.num_slots):
             if slot not in self._decodable:
@@ -425,9 +542,11 @@ class ModelBackend(_BackendBase):
 
     def __init__(self, cfg: ModelConfig, params, num_slots: int,
                  max_len: int = 256, paged: bool = False,
-                 page_size: int = 16, num_pages: Optional[int] = None):
+                 page_size: int = 16, num_pages: Optional[int] = None,
+                 prefix_cache: bool = False):
         super().__init__(cfg, num_slots, max_len, t=1, p=1, paged=paged,
-                         page_size=page_size, num_pages=num_pages)
+                         page_size=page_size, num_pages=num_pages,
+                         prefix_cache=prefix_cache)
         self.model = get_model(cfg)
         self.params = params
         if self.paged:
@@ -451,6 +570,10 @@ class ModelBackend(_BackendBase):
             self.params, self.cache, jnp.asarray(tokens, jnp.int32),
             jnp.asarray(pos, jnp.int32), jnp.asarray(bt, jnp.int32))
         return np.asarray(logits)
+
+    def _copy_page(self, src: int, dst: int) -> None:
+        self.cache = _copy_page_rows(self.cache, jnp.int32(src),
+                                     jnp.int32(dst))
 
     def decode_step(self, tokens, pos) -> np.ndarray:
         if self.paged:
@@ -479,12 +602,14 @@ class TPBackend(_BackendBase):
                  paged: bool = False, page_size: int = 16,
                  num_pages: Optional[int] = None, c: int = 1,
                  quant_collectives: Optional[str] = None,
-                 quant_chunk: int = DEFAULT_QUANT_CHUNK):
+                 quant_chunk: int = DEFAULT_QUANT_CHUNK,
+                 prefix_cache: bool = False):
         super().__init__(cfg, num_slots, max_len, t=t, p=1, c=c,
                          paged=paged, page_size=page_size,
                          num_pages=num_pages,
                          quant_collectives=quant_collectives,
-                         quant_chunk=quant_chunk)
+                         quant_chunk=quant_chunk,
+                         prefix_cache=prefix_cache)
         if cfg.family != "dense":
             raise ValueError("explicit TP engine covers the dense family")
         self.params = params
@@ -550,6 +675,10 @@ class TPBackend(_BackendBase):
             self.params, self.cache, jnp.asarray(tokens, jnp.int32),
             jnp.asarray(pos, jnp.int32), jnp.asarray(bt, jnp.int32))
         return np.asarray(logits)
+
+    def _copy_page(self, src: int, dst: int) -> None:
+        self.cache = _copy_page_rows(self.cache, jnp.int32(src),
+                                     jnp.int32(dst))
 
     def decode_step(self, tokens, pos) -> np.ndarray:
         if self.paged:
@@ -619,12 +748,14 @@ class PPBackend(_BackendBase):
                  page_size: int = 16, num_pages: Optional[int] = None,
                  c: int = 1, inflight: int = 1,
                  quant_collectives: Optional[str] = None,
-                 quant_chunk: int = DEFAULT_QUANT_CHUNK):
+                 quant_chunk: int = DEFAULT_QUANT_CHUNK,
+                 prefix_cache: bool = False):
         super().__init__(cfg, num_slots, max_len, t=t, p=p, c=c,
                          paged=paged, page_size=page_size,
                          num_pages=num_pages,
                          quant_collectives=quant_collectives,
-                         quant_chunk=quant_chunk)
+                         quant_chunk=quant_chunk,
+                         prefix_cache=prefix_cache)
         if cfg.family != "dense":
             raise ValueError("PipelineEngine covers the dense family")
         if inflight < 1 or num_slots % inflight:
@@ -707,6 +838,10 @@ class PPBackend(_BackendBase):
             self.staged, self.caches, tokens, pos, bt, phase=phase)
         return np.asarray(logits)
 
+    def _copy_page(self, src: int, dst: int) -> None:
+        s, d = jnp.int32(src), jnp.int32(dst)
+        self.caches = [_copy_page_rows(c, s, d) for c in self.caches]
+
     def decode_step(self, tokens, pos) -> np.ndarray:
         if self.paged:
             return self._paged_decode(tokens, pos)
@@ -741,8 +876,11 @@ class PPBackend(_BackendBase):
             full_pos = np.asarray(pos)
             for slot in sorted(self._decodable):
                 if lo <= slot < lo + G:
-                    self.pool.extend(slot, int(full_pos[slot]) + 1)
+                    self._claim_guard(
+                        lambda s=slot: self.pool.extend(
+                            s, int(full_pos[s]) + 1))
                     self._set_table(slot)
+            self._apply_cow()
             bt = self.block_tables[lo:lo + G].copy()
             for i, slot in enumerate(range(lo, lo + G)):
                 if slot not in self._decodable:
@@ -816,7 +954,8 @@ def make_backend(kind: str, cfg: ModelConfig, params, num_slots: int,
                  num_pages: Optional[int] = None,
                  c: int = 1, inflight: int = 1,
                  quant_collectives: Optional[str] = None,
-                 quant_chunk: int = DEFAULT_QUANT_CHUNK) -> DecodeBackend:
+                 quant_chunk: int = DEFAULT_QUANT_CHUNK,
+                 prefix_cache: bool = False) -> DecodeBackend:
     """Backend factory keyed by engine kind: "gspmd" | "tp" | "pp".
 
     Degenerate layouts are rejected, not coerced — a silently bumped t/c/p
@@ -832,8 +971,12 @@ def make_backend(kind: str, cfg: ModelConfig, params, num_slots: int,
     ("int8" | "fp8", DESIGN.md §12) lowers the explicit engines' per-layer
     decode allreduces to the quantized two-step; GSPMD places its own
     collectives and the paged engines run full-width — both reject it.
+    ``prefix_cache=True`` (DESIGN.md §13) attaches a cross-request
+    ``PrefixIndex`` to the page pool: paged-only, c=1-only (the suffix
+    prefill needs the chunk-offset path).
     """
-    kw = dict(paged=paged, page_size=page_size, num_pages=num_pages)
+    kw = dict(paged=paged, page_size=page_size, num_pages=num_pages,
+              prefix_cache=prefix_cache)
     if kind != "pp" and inflight != 1:
         raise ValueError(
             "in-flight microbatching fills the PP decode bubble; the "

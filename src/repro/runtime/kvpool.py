@@ -15,13 +15,25 @@ paged steps) consumes the block tables as [B, pages_per_seq] int32 arrays.
 Invariants (property-tested in tests/test_kvpool.py):
 
   * a free page is never in any live block table, and a live page is owned
-    by exactly one owner unless it was explicitly shared (``fork``) — pages
-    are ref-counted, so shared prefixes free correctly;
+    by exactly one owner unless it was explicitly shared (``fork`` /
+    ``adopt``) — pages are ref-counted, so shared prefixes free correctly;
   * freed pages return to the free list and are reused (LIFO — the hottest
     page comes back first);
   * ``stats()`` always accounts for every page:
     ``free_pages + allocated_pages == num_pages`` (page 0 is a reserved
-    scratch page, counted as allocated forever).
+    scratch page, counted as allocated forever), and a page shared by k
+    owners counts ONCE — physically — in every token column.
+
+Copy-on-write (DESIGN.md §13).  ``extend`` growing into a *shared* partial
+tail page no longer refuses: it claims a private page, swaps it into the
+owner's table, decrefs the original, and records a :class:`CowEvent` naming
+(src, dst, committed rows).  The pool is host bookkeeping — it cannot touch
+device memory — so the backend that owns the device page pools drains
+``take_cow_events()`` after every ``extend`` and replays each event as a
+device row copy *before* the pass that writes the new positions.  The claim
+happens atomically with the ordinary growth claim: a pool-oom mid-COW
+raises ``MemoryError`` with the owner's table, lengths, refcounts and the
+event log all untouched (no half-copied page can leak).
 
 Page 0 is **reserved**: it is never handed out, and backends point the block
 tables of inactive slots at it so a fused decode step's garbage writes for
@@ -38,15 +50,35 @@ SCRATCH_PAGE = 0
 
 
 @dataclasses.dataclass(frozen=True)
+class CowEvent:
+    """One copy-on-write the pool performed in bookkeeping and the backend
+    must replay on the device pools: copy the ``rows`` committed positions
+    of physical page ``src`` into the freshly claimed page ``dst``."""
+
+    src: int
+    dst: int
+    rows: int
+
+
+@dataclasses.dataclass(frozen=True)
 class PoolStats:
-    """Occupancy + fragmentation snapshot; fields sum to the pool size."""
+    """Occupancy + fragmentation snapshot; fields sum to the pool size.
+
+    Every token column is *physical*: a page shared by k owners (``fork`` /
+    ``adopt``) contributes its committed rows ONCE — the per-owner sum the
+    pre-COW pool reported double-counted every ref-shared page, pushing
+    utilization past 1.0 under prefix sharing.  ``shared_pages`` counts the
+    pages currently held by more than one owner; ``cow_copies`` is the
+    pool-lifetime count of copy-on-write page splits."""
 
     num_pages: int
     page_size: int
     free_pages: int
     allocated_pages: int          # includes the reserved scratch page
-    used_tokens: int              # token positions actually occupied
-    internal_frag_tokens: int     # allocated-but-unused tail positions
+    used_tokens: int              # PHYSICAL token positions occupied
+    internal_frag_tokens: int     # allocated-but-unused positions (physical)
+    shared_pages: int = 0         # pages with refcount > 1 right now
+    cow_copies: int = 0           # lifetime copy-on-write splits
 
     @property
     def capacity_tokens(self) -> int:
@@ -63,10 +95,13 @@ class KVPool:
     """Fixed-size-page KV allocator with per-owner block tables.
 
     ``allocate(owner, num_tokens)`` claims pages for a new sequence,
-    ``extend(owner, new_len)`` grows it (decode crossing a page boundary),
-    ``free(owner)`` releases it, ``fork(owner, new_owner)`` shares the
-    current pages copy-on-nothing (both owners read the same prefix; the
-    pages free only when the last owner releases them).
+    ``extend(owner, new_len)`` grows it (decode crossing a page boundary;
+    copy-on-write when the partial tail is shared), ``free(owner)`` releases
+    it, ``fork(owner, new_owner, length=...)`` shares a prefix of the
+    current pages (both owners read the same prefix; the pages free only
+    when the last owner releases them), ``adopt(owner, pages, num_tokens)``
+    builds an owner from an explicit list of live pages — the prefix
+    index's cache-hit handoff (runtime/prefix_index.py).
     """
 
     def __init__(self, num_pages: int, page_size: int):
@@ -81,6 +116,8 @@ class KVPool:
         self._refcount: Dict[int, int] = {}      # physical page -> owners
         self._tables: Dict[int, List[int]] = {}  # owner -> logical->physical
         self._lengths: Dict[int, int] = {}       # owner -> tokens occupied
+        self._cow_events: List[CowEvent] = []    # pending device-row copies
+        self.cow_copies = 0                      # lifetime COW splits
 
     # ------------------------------------------------------------- helpers
     def _pages_for(self, num_tokens: int) -> int:
@@ -112,39 +149,89 @@ class KVPool:
         """Grow an allocation to cover ``new_len`` positions (no-op when the
         current last page still has room); returns the updated table.
 
-        Growing past a *shared* partial tail page is refused: the new
-        positions would be written into rows the other owner also reads
-        (there is no copy-on-write here — the pool is host bookkeeping and
-        cannot copy device pages).  A page-aligned shared prefix grows
-        fine: new positions land only on freshly-claimed exclusive pages.
+        Growing into a *shared* partial tail page copy-on-writes it
+        (DESIGN.md §13): a private page is claimed, swapped into this
+        owner's table, and the original decref'd — the sibling owners keep
+        reading the untouched original.  The split is recorded as a
+        :class:`CowEvent` for the backend to replay as a device row copy
+        (``take_cow_events``).  All pages — the COW copy and any growth —
+        are claimed in ONE atomic step, so a pool-oom raises ``MemoryError``
+        before any state mutates.  A page-aligned shared prefix grows
+        without copying: new positions land only on freshly-claimed
+        exclusive pages.
         """
         table = self._tables[owner]
         cur = self._lengths[owner]
         if new_len < cur:
             raise ValueError(
                 f"extend shrinks owner {owner}: {new_len} < {cur}")
-        if new_len > cur and cur % self.page_size != 0 and \
-                self._refcount[table[-1]] > 1:
-            raise ValueError(
-                f"owner {owner} grows into shared tail page {table[-1]} "
-                "(forked, not page-aligned) — copy it before extending")
+        cow = new_len > cur and cur % self.page_size != 0 and \
+            self._refcount[table[-1]] > 1
         need = self._pages_for(new_len) - len(table)
-        if need > 0:
-            table.extend(self._claim(need))
+        pages = self._claim(need + (1 if cow else 0))
+        if cow:
+            src, dst = table[-1], pages[0]
+            committed = cur - (len(table) - 1) * self.page_size
+            table[-1] = dst
+            self._refcount[src] -= 1     # shared: never hits 0 here
+            self.cow_copies += 1
+            self._cow_events.append(CowEvent(src, dst, committed))
+            pages = pages[1:]
+        table.extend(pages)
         self._lengths[owner] = new_len
         return list(table)
 
-    def fork(self, owner: int, new_owner: int) -> List[int]:
-        """Share ``owner``'s pages with ``new_owner`` (prefix sharing): both
-        tables name the same physical pages, refcounts bumped."""
+    def take_cow_events(self) -> List[CowEvent]:
+        """Drain the pending copy-on-write events.  The device-side owner
+        of the page pools MUST replay each as a row copy src→dst before the
+        next pass that writes (or reads) the new private page."""
+        events, self._cow_events = self._cow_events, []
+        return events
+
+    def fork(self, owner: int, new_owner: int,
+             length: int = None) -> List[int]:
+        """Share a prefix of ``owner``'s pages with ``new_owner``: both
+        tables name the same physical pages, refcounts bumped.  ``length``
+        (tokens; default: the owner's full length) shares only the pages
+        covering that prefix — the cache-hit fork, where the new request
+        adopts the cached pages and prefills just its novel suffix."""
         if new_owner in self._tables:
             raise KeyError(f"owner {new_owner} already holds an allocation")
-        table = self._tables[owner]
+        length = self._lengths[owner] if length is None else int(length)
+        if not 1 <= length <= self._lengths[owner]:
+            raise ValueError(
+                f"fork length {length} outside (0, {self._lengths[owner]}]")
+        table = self._tables[owner][:self._pages_for(length)]
         for pg in table:
             self._refcount[pg] += 1
         self._tables[new_owner] = list(table)
-        self._lengths[new_owner] = self._lengths[owner]
+        self._lengths[new_owner] = length
         return list(table)
+
+    def adopt(self, owner: int, pages: List[int],
+              num_tokens: int) -> List[int]:
+        """Build ``owner``'s allocation from an explicit list of LIVE pages
+        (each refcount-bumped) covering ``num_tokens`` positions — how a
+        cache hit assembled from per-block prefix-index entries lands in a
+        slot, and the KV-handoff unit disaggregated prefill will ship."""
+        if owner in self._tables:
+            raise KeyError(f"owner {owner} already holds an allocation")
+        pages = [int(pg) for pg in pages]
+        if not pages:
+            raise ValueError("adopt needs at least one page")
+        if not (len(pages) - 1) * self.page_size < num_tokens \
+                <= len(pages) * self.page_size:
+            raise ValueError(
+                f"{num_tokens} tokens do not fit exactly {len(pages)} pages "
+                f"of {self.page_size}")
+        for pg in pages:
+            if pg not in self._refcount:
+                raise ValueError(f"page {pg} is not live — cannot adopt")
+        for pg in pages:
+            self._refcount[pg] += 1
+        self._tables[owner] = list(pages)
+        self._lengths[owner] = int(num_tokens)
+        return list(pages)
 
     def free(self, owner: int) -> None:
         """Release an owner; pages whose refcount hits zero rejoin the free
@@ -170,18 +257,33 @@ class KVPool:
     def length(self, owner: int) -> int:
         return self._lengths[owner]
 
+    def page_refcount(self, page: int) -> int:
+        """Owners currently holding physical ``page`` (0 when free)."""
+        return self._refcount.get(page, 0)
+
     @property
     def free_pages(self) -> int:
         return len(self._free)
 
     def stats(self) -> PoolStats:
-        used = sum(self._lengths.values())
-        # a page shared by k owners is still ONE allocated physical page,
-        # but each owner's tail slack counts toward internal fragmentation
-        slack = sum(len(t) * self.page_size - self._lengths[o]
-                    for o, t in self._tables.items())
+        # physical occupancy: each page's committed rows counted ONCE —
+        # the deepest committed row any owner has in it (owners sharing a
+        # page agree on its content; they can only differ in how far their
+        # own length reaches into it)
+        rows: Dict[int, int] = {}
+        for o, t in self._tables.items():
+            ln = self._lengths[o]
+            for i, pg in enumerate(t):
+                r = min(self.page_size, ln - i * self.page_size)
+                if r > rows.get(pg, 0):
+                    rows[pg] = r
+        used = sum(rows.values())
+        allocated = self.num_pages - len(self._free)
         return PoolStats(
             num_pages=self.num_pages, page_size=self.page_size,
             free_pages=len(self._free),
-            allocated_pages=self.num_pages - len(self._free),
-            used_tokens=used, internal_frag_tokens=slack)
+            allocated_pages=allocated,
+            used_tokens=used,
+            internal_frag_tokens=(allocated - 1) * self.page_size - used,
+            shared_pages=sum(1 for n in self._refcount.values() if n > 1),
+            cow_copies=self.cow_copies)

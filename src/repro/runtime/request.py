@@ -93,6 +93,8 @@ class RequestMetrics:
     finish_reason: str = ""          # taxonomy in the module docstring
     preemptions: int = 0             # times evicted + recomputed (§10)
     retries: int = 0                 # transient-fault retries while active
+    cached_prefix_len: int = 0       # prefix-cache hit at admission: prompt
+    #                                  positions adopted, not computed (§13)
 
     @property
     def num_generated(self) -> int:
@@ -164,4 +166,41 @@ def make_poisson_trace(n_requests: int, rate: float, vocab_size: int,
         prompt = rng.integers(2, vocab_size, s_p).astype(np.int32)
         reqs.append(Request(rid=i, prompt=prompt, max_new_tokens=n_d,
                             arrival=float(arrivals[i]), eos_pos=eos_pos))
+    return reqs
+
+
+def make_template_trace(n_requests: int, rate: float, vocab_size: int,
+                        n_templates: int = 4, template_len: int = 48,
+                        suffix_lens=(4, 16), decode_lens=(4, 16),
+                        zipf_a: float = 1.5, seed: int = 0) -> List[Request]:
+    """Template-heavy trace for the prefix cache (DESIGN.md §13): each
+    prompt is a shared *template* (system prompt) of ``template_len`` tokens
+    followed by a per-request unique suffix.  Templates are drawn
+    zipf-distributed (exponent ``zipf_a``) over ``n_templates`` — the
+    production shape where thousands of users share a handful of system
+    prompts, so most requests after the first per template hit the index
+    for the whole template.  Suffixes embed the rid, so no two prompts are
+    identical and every hit still prefills a genuine novel suffix.
+    """
+    rng = np.random.default_rng(seed)
+    if n_templates < 1:
+        raise ValueError(f"n_templates must be >= 1, got {n_templates}")
+    if not zipf_a > 1.0:
+        raise ValueError(f"zipf_a must be > 1 (zipf support), got {zipf_a}")
+    templates = [rng.integers(2, vocab_size, template_len).astype(np.int32)
+                 for _ in range(n_templates)]
+    if rate and np.isfinite(rate) and rate > 0:
+        arrivals = np.cumsum(rng.exponential(1.0 / rate, n_requests))
+    else:
+        arrivals = np.zeros(n_requests)
+    reqs = []
+    for i in range(n_requests):
+        t = (int(rng.zipf(zipf_a)) - 1) % n_templates
+        s_s = int(rng.integers(suffix_lens[0], suffix_lens[1] + 1))
+        suffix = rng.integers(2, vocab_size, s_s).astype(np.int32)
+        suffix[0] = 2 + i % (vocab_size - 2)     # rid-unique: never a dup
+        n_d = int(rng.integers(decode_lens[0], decode_lens[1] + 1))
+        reqs.append(Request(
+            rid=i, prompt=np.concatenate([templates[t], suffix]),
+            max_new_tokens=n_d, arrival=float(arrivals[i])))
     return reqs

@@ -125,6 +125,9 @@ class StepRecord:
     phase: str = "decode"                 # "decode" | "prefill" | "recompute"
     rid: Optional[int] = None             # request, for prefill/recompute
     prefix_len: Optional[int] = None      # recomputed positions (recompute)
+    cached_prefix_len: Optional[int] = None   # prefix-cache hit (prefill,
+    #                                           DESIGN.md §13): positions
+    #                                           adopted instead of computed
     wall_s: float = 0.0                   # host wall time of the round/pass
     stage_busy: Optional[List[int]] = None   # per-stage busy ticks (decode)
     stage_idle: Optional[List[int]] = None   # per-stage idle ticks (decode)
@@ -263,6 +266,9 @@ class _Prefilling:
     #                               prompt + generated prefix on recompute)
     done: int = 0                 # prefix positions already prefilled
     resume: Optional[List[int]] = None   # generated tokens (recompute only)
+    cached: int = 0               # prefix-cache hit length: positions
+    #                               adopted at admission, never computed —
+    #                               chunking starts at done == cached
 
 
 class Scheduler:
@@ -528,17 +534,21 @@ class Scheduler:
         self._enqueue(st.req)
 
     def _run_prefill(self, slot: int, prefix: np.ndarray,
-                     metrics: RequestMetrics) -> Optional[int]:
+                     metrics: RequestMetrics,
+                     start: int = 0) -> Optional[int]:
         """One whole-prefix prefill pass with fault injection + bounded
         retry; returns the final position's greedy token, or None when the
-        request errored out (caller frees the slot)."""
+        request errored out (caller frees the slot).  ``start`` skips a
+        prefix-cache hit's adopted positions (DESIGN.md §13) — a retry
+        rewrites the same suffix rows, so it stays idempotent."""
         paged = getattr(self.backend, "paged", False)
         attempt = 0
         while True:
             try:
                 self._apply_fault("prefill")
                 if paged:
-                    tok = int(self.backend.prefill_whole(slot, prefix))
+                    tok = int(self.backend.prefill_whole(slot, prefix,
+                                                         start=start))
                     self.backend.finish_prefill(slot)
                 else:
                     tok = int(self.backend.prefill_into_slots(
@@ -608,16 +618,29 @@ class Scheduler:
                 prefix = np.concatenate(
                     [req.prompt, np.asarray(m.tokens[:-1], np.int32)])
                 resume = list(m.tokens)
+            hit = 0
             if paged:
-                self.backend.begin_prefill(slot, len(prefix), budget)
+                # prefix-cache lookup (DESIGN.md §13) covers fresh prompts
+                # only: a recompute prefix ends in generated tokens the
+                # index never saw, and recomputing it cold keeps the
+                # preemption token-identity check an honest recompute
+                if resume is None and \
+                        getattr(self.backend, "prefix_index", None) \
+                        is not None:
+                    hit = self.backend.begin_prefill_cached(slot, prefix,
+                                                            budget)
+                    m.cached_prefix_len = hit
+                else:
+                    self.backend.begin_prefill(slot, len(prefix), budget)
                 if self.chunk_size is not None:
                     self.prefilling[slot] = _Prefilling(req, m, prefix=prefix,
-                                                        resume=resume)
+                                                        resume=resume,
+                                                        done=hit, cached=hit)
                     continue
             if resume is not None:
                 # isolate the recompute pass's measured boundary hops
                 self.backend.drain_transfers()
-            tok = self._run_prefill(slot, prefix, m)
+            tok = self._run_prefill(slot, prefix, m, start=hit)
             if tok is None:
                 self.backend.free_slots([slot])
                 self.free.append(slot)
@@ -631,6 +654,9 @@ class Scheduler:
                 self._log_recompute(req.rid, len(prefix))
                 self._resume_active(slot, req, m, resume, len(prefix), tok)
                 continue
+            if paged and hasattr(self.backend, "cache_prefix"):
+                # index the freshly committed prompt blocks (DESIGN.md §13)
+                self.backend.cache_prefix(slot, req.prompt)
             m.first_token = now
             m.tokens.append(tok)
             self._total_tokens += 1
@@ -712,6 +738,7 @@ class Scheduler:
             phase="prefill" if st.resume is None else "recompute",
             rid=st.req.rid,
             prefix_len=None if st.resume is None else len(st.prefix),
+            cached_prefix_len=st.cached or None,
             wall_s=wall))
         self._step_i += 1
         if end < len(st.prefix):
@@ -724,6 +751,9 @@ class Scheduler:
             self._resume_active(slot, st.req, st.metrics, st.resume,
                                 len(st.prefix), int(tok))
             return
+        if hasattr(self.backend, "cache_prefix"):
+            # index the freshly committed prompt blocks (DESIGN.md §13)
+            self.backend.cache_prefix(slot, st.req.prompt)
         st.metrics.first_token = now
         st.metrics.tokens.append(int(tok))
         self._total_tokens += 1

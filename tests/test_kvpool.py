@@ -1,17 +1,22 @@
-"""KVPool block-allocator invariants (ISSUE 4 satellite).
+"""KVPool block-allocator invariants (ISSUE 4 satellite; COW — ISSUE 9).
 
 Deterministic unit tests always run; hypothesis drives randomized
-alloc/extend/free/fork schedules against the same invariants when the
+alloc/extend/free/fork/adopt schedules against the same invariants when the
 optional dep is present:
 
   * a page is never double-assigned (live tables are disjoint unless
-    explicitly shared via ``fork``);
+    explicitly shared via ``fork`` / ``adopt``);
   * freed pages rejoin the free list and are reused;
-  * ``stats()`` accounts for every page: free + allocated == num_pages.
+  * ``stats()`` accounts for every page: free + allocated == num_pages,
+    and shared pages count ONCE (physically) in the token columns;
+  * copy-on-write (DESIGN.md §13): growing into a shared partial tail
+    privatizes the page without ever mutating a sibling's committed rows —
+    fingerprinted against a shadow device model replaying ``CowEvent``s —
+    and a pool-oom mid-COW mutates nothing (no half-copied page leaks).
 """
 import pytest
 
-from repro.runtime.kvpool import KVPool, SCRATCH_PAGE
+from repro.runtime.kvpool import CowEvent, KVPool, SCRATCH_PAGE
 
 
 def _assert_invariants(pool: KVPool):
@@ -98,18 +103,27 @@ def test_fork_shares_pages_refcounted():
     _assert_invariants(pool)
 
 
-def test_extend_into_shared_tail_page_refused():
+def test_extend_into_shared_tail_page_cows():
     """Growing a forked sequence whose tail page is shared AND partial
-    would write rows the other owner reads — refused (no copy-on-write);
-    a page-aligned shared prefix grows onto fresh exclusive pages."""
+    copy-on-writes it (DESIGN.md §13): a private page swaps into the
+    grower's table, the sibling keeps the original, and a CowEvent names
+    the committed rows the backend must replay; a page-aligned shared
+    prefix grows onto fresh exclusive pages with no copy."""
     pool = KVPool(num_pages=8, page_size=4)
     pool.allocate(0, 6)                      # tail page half-full
-    pool.fork(0, 1)
-    with pytest.raises(ValueError, match="shared tail"):
-        pool.extend(1, 7)
-    pool.extend(1, 6)                        # same length: no new rows, ok
-    pool.free(0)                             # sole owner again
-    assert len(pool.extend(1, 9)) == 3       # now growth is fine
+    t0 = pool.fork(0, 1)
+    t1 = pool.extend(1, 7)
+    assert t1[0] == t0[0] and t1[-1] != t0[-1], "tail not privatized"
+    assert pool.block_table(0) == t0, "sibling's table moved"
+    assert pool.page_refcount(t0[-1]) == 1
+    assert pool.take_cow_events() == [CowEvent(t0[-1], t1[-1], 2)]
+    assert pool.take_cow_events() == [], "drain is not idempotent"
+    assert pool.stats().cow_copies == 1
+    _assert_invariants(pool)
+    # exclusive partial tail (sibling gone): plain growth, no copy
+    pool.free(0)
+    assert len(pool.extend(1, 9)) == 3
+    assert pool.take_cow_events() == []
     _assert_invariants(pool)
     # page-aligned fork: growth claims fresh pages, never touches shared
     pool2 = KVPool(num_pages=8, page_size=4)
@@ -117,7 +131,74 @@ def test_extend_into_shared_tail_page_refused():
     pool2.fork(0, 1)
     t1 = pool2.extend(1, 9)
     assert t1[:2] == pool2.block_table(0) and len(t1) == 3
+    assert pool2.take_cow_events() == []
+    assert pool2.stats().cow_copies == 0
     _assert_invariants(pool2)
+
+
+def test_cow_crossing_page_boundary_claims_both_atomically():
+    """An extend that both COWs the tail AND grows past it claims every
+    page in one step — the event's committed rows cover only the shared
+    tail's occupancy, and the growth lands after the private copy."""
+    pool = KVPool(num_pages=8, page_size=4)
+    pool.allocate(0, 6)
+    t0 = pool.block_table(0)
+    pool.fork(0, 1)
+    t1 = pool.extend(1, 12)                  # COW page + 1 growth page
+    assert len(t1) == 3 and t1[0] == t0[0]
+    assert t1[1] != t0[1] and t1[2] not in t0
+    (ev,) = pool.take_cow_events()
+    assert ev == CowEvent(t0[1], t1[1], 2)   # 6 - 4 committed tail rows
+    _assert_invariants(pool)
+
+
+def test_pool_oom_during_cow_mutates_nothing():
+    """The scripted-fault case (ISSUE 9): COW needs a page the pool cannot
+    supply — the MemoryError must leave tables, lengths, refcounts, the
+    free list and the event log exactly as they were (the preemption
+    ladder retries from a clean state, no half-copied page leaks)."""
+    pool = KVPool(num_pages=3, page_size=4)  # 2 usable pages
+    pool.allocate(0, 6)                      # takes both
+    pool.fork(0, 1)
+    before = (pool.stats(), pool.block_table(0), pool.block_table(1),
+              pool.length(1), pool.free_pages)
+    with pytest.raises(MemoryError):
+        pool.extend(1, 7)                    # COW page unavailable
+    after = (pool.stats(), pool.block_table(0), pool.block_table(1),
+             pool.length(1), pool.free_pages)
+    assert after == before, "failed COW mutated the pool"
+    assert pool.take_cow_events() == [], "failed COW leaked an event"
+    # freeing the sibling makes the SAME extend succeed copy-free
+    pool.free(0)
+    assert len(pool.extend(1, 7)) == 2
+    assert pool.take_cow_events() == []
+    _assert_invariants(pool)
+
+
+def test_adopt_builds_owner_from_live_pages():
+    """``adopt`` (the prefix index's cache-hit handoff) bumps refcounts on
+    an explicit page list; dead pages, empty lists and ill-fitting token
+    counts are rejected without mutation."""
+    pool = KVPool(num_pages=8, page_size=4)
+    t = pool.allocate(0, 8)
+    assert pool.adopt(5, t, 7) == t          # partial-tail adoption ok
+    assert pool.page_refcount(t[0]) == 2
+    assert pool.length(5) == 7
+    _assert_invariants(pool)
+    pool.free(0)                             # adopter keeps the pages live
+    assert pool.free_pages == 5
+    with pytest.raises(KeyError):
+        pool.adopt(5, t, 8)                  # live owner
+    with pytest.raises(ValueError):
+        pool.adopt(6, [], 1)
+    with pytest.raises(ValueError):
+        pool.adopt(6, t, 4)                  # 2 pages cannot hold 4 exactly
+    with pytest.raises(ValueError):
+        pool.adopt(6, [7], 2)                # page 7 is free, not live
+    assert 6 not in pool.owners(), "rejected adopt left a partial owner"
+    pool.free(5)
+    assert pool.free_pages == 7
+    _assert_invariants(pool)
 
 
 def test_stats_fragmentation_accounting():
@@ -131,6 +212,28 @@ def test_stats_fragmentation_accounting():
     assert s.internal_frag_tokens == 3
     assert s.capacity_tokens == 32
     assert 0 < s.utilization <= 1
+    assert s.shared_pages == 0 and s.cow_copies == 0
+
+
+def test_stats_count_shared_pages_once():
+    """The ISSUE 9 bugfix: a page shared by k owners contributes its rows
+    ONCE to ``used_tokens`` — the old per-owner sum double-counted every
+    ref-shared page, pushing utilization past 1.0 under prefix sharing."""
+    pool = KVPool(num_pages=4, page_size=4)  # 3 usable pages
+    pool.allocate(0, 6)                      # 2 pages, 6 physical rows
+    pool.fork(0, 1)
+    pool.fork(0, 2, length=4)
+    s = pool.stats()
+    assert s.used_tokens == 6, "shared pages double-counted"
+    assert s.shared_pages == 2
+    assert s.internal_frag_tokens == 2
+    assert s.utilization <= 1.0
+    # owners reaching different depths into a shared page: deepest wins
+    pool2 = KVPool(num_pages=4, page_size=4)
+    pool2.allocate(0, 4)
+    pool2.adopt(7, pool2.block_table(0), 2)  # shallower view, same page
+    assert pool2.stats().used_tokens == 4
+    assert pool2.stats().shared_pages == 1
 
 
 def test_pool_too_small_rejected():
@@ -154,7 +257,8 @@ except ImportError:                           # pragma: no cover
 
 
 if HAVE_HYP:
-    op = st.tuples(st.sampled_from(["alloc", "extend", "free", "fork"]),
+    op = st.tuples(st.sampled_from(["alloc", "extend", "free", "fork",
+                                    "adopt"]),
                    st.integers(0, 5), st.integers(1, 24))
 
     @given(ops=st.lists(op, min_size=1, max_size=60),
@@ -170,6 +274,9 @@ if HAVE_HYP:
                     pool.extend(owner, amount)
                 elif kind == "fork":
                     pool.fork(owner, owner + 10)
+                elif kind == "adopt":
+                    pool.adopt(-(owner + 1), pool.block_table(owner),
+                               pool.length(owner))
                 else:
                     pool.free(owner)
             except (KeyError, ValueError, MemoryError):
@@ -179,6 +286,67 @@ if HAVE_HYP:
             pool.free(owner)
         assert pool.free_pages == num_pages - 1
         assert pool.stats().used_tokens == 0
+
+    @given(ops=st.lists(op, min_size=1, max_size=60),
+           num_pages=st.integers(3, 24), page_size=st.integers(1, 8))
+    @settings(max_examples=60, deadline=None)
+    def test_cow_never_corrupts_sibling_rows(ops, num_pages, page_size):
+        """The COW property suite (ISSUE 9): a shadow *device* model
+        replays every ``CowEvent`` as a whole-page copy — exactly what the
+        backends' ``_apply_cow`` does — and fingerprints every owner's
+        committed rows against the values that owner (or its fork source)
+        wrote.  Any schedule in which a grower's write lands in a page a
+        sibling still reads, or a COW copies the wrong rows, shows up as a
+        fingerprint mismatch; refcounts hitting zero at the wrong time
+        show up through ``_assert_invariants``."""
+        pool = KVPool(num_pages, page_size)
+        device = {}    # physical page -> page_size rows of written values
+        expect = {}    # owner -> committed values, logical order
+        stamp = [0]    # globally unique write values
+
+        def replay():
+            for ev in pool.take_cow_events():
+                device[ev.dst] = list(device[ev.src])
+
+        def write(owner, start):
+            table = pool.block_table(owner)
+            for q in range(start, pool.length(owner)):
+                stamp[0] += 1
+                page = device.setdefault(table[q // page_size],
+                                         [0] * page_size)
+                page[q % page_size] = stamp[0]
+                expect[owner].append(stamp[0])
+
+        for kind, owner, amount in ops:
+            try:
+                if kind == "alloc":
+                    pool.allocate(owner, amount)
+                    expect[owner] = []
+                    write(owner, 0)
+                elif kind == "extend":
+                    cur = pool.length(owner)
+                    pool.extend(owner, cur + amount)
+                    replay()                  # backend contract: copy THEN
+                    write(owner, cur)         # write the new positions
+                elif kind == "fork":
+                    n = min(amount, pool.length(owner))
+                    pool.fork(owner, owner + 10, length=n)
+                    expect[owner + 10] = list(expect[owner][:n])
+                elif kind == "adopt":
+                    n = pool.length(owner)
+                    pool.adopt(-(owner + 1), pool.block_table(owner), n)
+                    expect[-(owner + 1)] = list(expect[owner])
+                else:
+                    pool.free(owner)
+                    expect.pop(owner, None)
+            except (KeyError, ValueError, MemoryError):
+                pass                          # rejected ops must not corrupt
+            _assert_invariants(pool)
+            for o in pool.owners():
+                t = pool.block_table(o)
+                got = [device[t[q // page_size]][q % page_size]
+                       for q in range(pool.length(o))]
+                assert got == expect[o], f"owner {o} rows corrupted"
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,509 @@
+"""Cross-request prefix caching end to end (ISSUE 9 acceptance criteria).
+
+1. Index semantics: radix/chain lookup over page-granular blocks, longest
+   cached prefix capped at ``prompt_len - 1``, LRU eviction, ref-counted
+   pages that outlive the slot that wrote them.
+2. Token identity: cache-hit streams (pages adopted, only the novel suffix
+   prefilled) are bitwise identical to the undisturbed solo runs at
+   (t, p) ∈ {(1,1), (2,1), (1,2), (2,2)} — including the COW-divergence
+   case (prompt fully covered by the cache) and preemption under
+   optimistic admission.
+3. Counts: the hit request's executed prefill collectives match
+   ``commodel.prefix_cache_ops`` (suffix rows only), the compiled HLO of
+   the paged pass, and — on PP — the measured boundary transfers.
+4. Analytics: ``slo.predict_slo(hit_rate=...)`` mixes cold and hit TTFT
+   (bitwise-unchanged at hit_rate=0) and the planner re-ranks layouts
+   under template-heavy traffic.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import get_config
+from repro.core import commodel as cm
+from repro.core.hlo_comm import parse_hlo_collectives, summarize
+from repro.core.planner import plan
+from repro.core.slo import predict_slo
+from repro.models.transformer import get_model
+from repro.runtime.backends import make_backend
+from repro.runtime.engine import InferenceEngine
+from repro.runtime.kvpool import KVPool
+from repro.runtime.prefix_index import PrefixIndex
+from repro.runtime.request import Request, make_template_trace
+from repro.runtime.scheduler import Scheduler, VirtualClock
+
+needs_mesh = pytest.mark.skipif(len(jax.devices()) < 4,
+                                reason="needs 4 host-platform devices")
+
+MAX_LEN = 64
+PAGE = 8
+CHUNK = 4
+TEMPLATE_LEN = 16       # two full pages at PAGE=8
+SUF = 5                 # novel suffix of the primary hit request
+
+LAYOUTS = [
+    pytest.param("gspmd", dict(), id="t1p1"),
+    pytest.param("tp", dict(t=2), marks=needs_mesh, id="t2p1"),
+    pytest.param("pp", dict(t=1, p=2), marks=needs_mesh, id="t1p2"),
+    pytest.param("pp", dict(t=2, p=2), marks=needs_mesh, id="t2p2"),
+]
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("llama32-3b").reduced(num_layers=2)
+    params = get_model(cfg).init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _template(cfg, n=TEMPLATE_LEN, seed=7):
+    rng = np.random.default_rng(seed)
+    return rng.integers(2, cfg.vocab_size, n).astype(np.int32)
+
+
+def _warm_requests(cfg):
+    """One request that writes the template's pages and indexes them."""
+    t = _template(cfg)
+    suf = np.random.default_rng(8).integers(
+        2, cfg.vocab_size, SUF).astype(np.int32)
+    return [Request(rid=0, prompt=np.concatenate([t, suf]),
+                    max_new_tokens=4)]
+
+
+def _hit_requests(cfg):
+    """Same template, distinct suffixes — plus one prompt that IS the
+    template exactly (fully covered: hit capped at 15, the shared tail
+    page must COW before the final-position prefill writes it)."""
+    t = _template(cfg)
+    rng = np.random.default_rng(9)
+    reqs = []
+    for i, (s, n) in enumerate([(SUF, 6), (3, 4)]):
+        suf = rng.integers(2, cfg.vocab_size, s).astype(np.int32)
+        suf[0] = 2 + i          # rid-unique first suffix token
+        reqs.append(Request(rid=i + 1, prompt=np.concatenate([t, suf]),
+                            max_new_tokens=n))
+    reqs.append(Request(rid=9, prompt=t.copy(), max_new_tokens=4))
+    return reqs
+
+
+def _solo_reference(cfg, params, req):
+    eng = InferenceEngine(cfg, params, max_len=MAX_LEN, decode_chunk=1)
+    out = eng.generate(np.asarray(req.prompt)[None, :],
+                       max_new_tokens=req.max_new_tokens)
+    return np.asarray(out)[0].tolist()
+
+
+def _hlo_counts(hlo: str):
+    return {k: v["count"]
+            for k, v in summarize(parse_hlo_collectives(hlo)).items()}
+
+
+def _count(ops, phase=None):
+    counts = {}
+    for o in ops:
+        if phase in (None, o.phase):
+            counts[o.collective] = counts.get(o.collective, 0) + o.count
+    return counts
+
+
+# ---------------------------------------------------------------------------
+# index semantics (pool-only, no model)
+# ---------------------------------------------------------------------------
+
+
+def test_index_longest_chain_lookup_and_cap():
+    """Lookup walks the block chain as far as it matches; a fully covered
+    prompt is capped at prompt_len - 1 so the final position is always
+    prefilled (that's what makes the tail page a COW candidate)."""
+    pool = KVPool(num_pages=16, page_size=4)
+    idx = PrefixIndex(pool)
+    toks = np.arange(100, 112, dtype=np.int32)          # 12 = 3 full blocks
+    pages = pool.allocate(0, len(toks))
+    assert idx.insert(toks, pages) == 3
+    assert idx.insert(toks, pages) == 0                 # idempotent
+
+    # longer prompt sharing the prefix: all 3 blocks match, length = 12
+    longer = np.concatenate([toks, np.asarray([7, 8], np.int32)])
+    hit = idx.lookup(longer)
+    assert (hit.length, hit.pages) == (12, list(pages))
+
+    # the exact prompt: capped one short, same pages (tail shared partially)
+    hit = idx.lookup(toks)
+    assert hit.hit and hit.length == 11 and hit.pages == list(pages)
+
+    # divergence at block 2 stops the chain after 2 blocks
+    fork = toks.copy()
+    fork[9] = 999
+    hit = idx.lookup(fork)
+    assert hit.length == 8 and hit.pages == list(pages[:2])
+
+    # divergence at block 0 is a clean miss
+    assert not idx.lookup(np.arange(50, 62, dtype=np.int32)).hit
+    assert idx.stats()["hits"] == 3 and idx.stats()["misses"] == 1
+
+
+def test_index_pins_pages_past_owner_free():
+    """Cached pages stay live (and reclaimable) after the writing slot
+    frees; clear() returns every page to the free list."""
+    pool = KVPool(num_pages=16, page_size=4)
+    idx = PrefixIndex(pool)
+    toks = np.arange(0, 12, dtype=np.int32)
+    pages = pool.allocate(0, len(toks))
+    idx.insert(toks, pages)
+    pool.free(0)
+    assert all(pool.page_refcount(pg) == 1 for pg in pages)
+    assert idx.reclaimable_pages() == 3
+    assert idx.lookup(np.concatenate([toks, toks[:1]])).length == 12
+    assert idx.clear() == 3
+    assert pool.stats().used_tokens == 0
+    assert pool.free_pages == pool.num_pages - 1
+
+
+def test_index_lru_eviction_order():
+    """evict_one drops the least-recently-used entry; a lookup refreshes
+    every matched block, so the untouched chain goes first — and losing
+    block 0 breaks that chain entirely."""
+    pool = KVPool(num_pages=16, page_size=4)
+    idx = PrefixIndex(pool)
+    a = np.arange(0, 8, dtype=np.int32)
+    b = np.arange(40, 48, dtype=np.int32)
+    idx.insert(a, pool.allocate(0, 8))
+    idx.insert(b, pool.allocate(1, 8))
+    idx.lookup(np.concatenate([a, a[:1]]))      # refresh a's entries
+    assert idx.evict_one()
+    assert not idx.lookup(np.concatenate([b, b[:1]])).hit   # b block 0 gone
+    assert idx.lookup(np.concatenate([a, a[:1]])).length == 8
+    idx.clear()
+    assert not idx.evict_one()                  # empty index: False
+
+
+def test_index_capacity_and_validation():
+    pool = KVPool(num_pages=16, page_size=4)
+    with pytest.raises(ValueError):
+        PrefixIndex(pool, max_entries=0)
+    idx = PrefixIndex(pool, max_entries=2)
+    toks = np.arange(0, 12, dtype=np.int32)
+    idx.insert(toks, pool.allocate(0, 12))
+    assert len(idx) == 2 and idx.evictions == 1
+
+
+def test_index_evict_for_frees_pool_pressure():
+    """evict_for pops LRU entries until the pool can satisfy the claim —
+    the primitive behind the backend's claim guard."""
+    pool = KVPool(num_pages=7, page_size=4)     # 6 usable
+    idx = PrefixIndex(pool)
+    for owner in range(3):
+        toks = np.arange(owner * 100, owner * 100 + 8, dtype=np.int32)
+        idx.insert(toks, pool.allocate(owner, 8))
+        pool.free(owner)
+    assert pool.free_pages == 0
+    assert idx.evict_for(4) == 4                # one page per entry
+    assert pool.free_pages >= 4 and len(idx) == 2
+
+
+# ---------------------------------------------------------------------------
+# backend wiring: validation + admission gate under cache pressure
+# ---------------------------------------------------------------------------
+
+
+def test_prefix_cache_requires_paged_c1(setup):
+    cfg, params = setup
+    with pytest.raises(ValueError, match="paged"):
+        make_backend("gspmd", cfg, params, num_slots=2, max_len=MAX_LEN,
+                     prefix_cache=True)
+    with pytest.raises(ValueError, match="c=1|context"):
+        make_backend("gspmd", cfg, params, num_slots=2, max_len=MAX_LEN,
+                     paged=True, page_size=PAGE, c=2, prefix_cache=True)
+
+
+def test_admission_counts_reclaimable_and_evicts_under_pressure(setup):
+    """A pool full of cold cache is not a full pool: can_admit counts the
+    index's reclaimable pages, and the claim guard evicts LRU entries when
+    an allocation would otherwise MemoryError."""
+    cfg, params = setup
+    be = make_backend("gspmd", cfg, params, num_slots=2, max_len=MAX_LEN,
+                      paged=True, page_size=PAGE, num_pages=6,  # 5 usable
+                      prefix_cache=True)
+    sched = Scheduler(be, clock=VirtualClock())
+    sched.run(_warm_requests(cfg))              # 21 tokens -> 3 pages
+    assert len(be.prefix_index) == 2            # 2 full template blocks
+    assert be.pool.free_pages == 3
+    # a 37-token cold prompt needs 5 pages; 3 free + 2 reclaimable fit it
+    assert be.can_admit(37, 1)
+    be.begin_prefill(0, 37, 1)
+    assert len(be.prefix_index) == 0            # both entries evicted
+    assert be.prefix_index.evictions == 2
+    be.free_slots([0])
+    assert be.pool.stats().used_tokens == 0
+
+
+# ---------------------------------------------------------------------------
+# acceptance: cache-hit streams bitwise identical, 4 layouts
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind,kw", LAYOUTS)
+@pytest.mark.parametrize("chunk", [None, CHUNK],
+                         ids=["whole", f"chunk{CHUNK}"])
+def test_cache_hit_streams_bitwise_identical(setup, kind, kw, chunk):
+    """Warm batch writes + indexes the template; hit batch adopts it and
+    prefills only suffixes.  Every hit stream equals the undisturbed solo
+    run — including the fully covered prompt whose shared tail page COWs —
+    and the pool drains to zero once the index is cleared."""
+    cfg, params = setup
+    backend = make_backend(kind, cfg, params, num_slots=4, max_len=MAX_LEN,
+                           paged=True, page_size=PAGE, prefix_cache=True,
+                           **kw)
+    sched = Scheduler(backend, clock=VirtualClock(), chunk_size=chunk)
+    warm = sched.run(_warm_requests(cfg))
+    assert all(m.cached_prefix_len == 0 for m in warm.metrics)
+    assert len(backend.prefix_index) == TEMPLATE_LEN // PAGE
+
+    report = sched.run(_hit_requests(cfg))
+    got = report.tokens_by_rid()
+    for r in _hit_requests(cfg):
+        assert got[r.rid] == _solo_reference(cfg, params, r), \
+            f"{kind}{kw}: cache-hit stream {r.rid} diverged"
+
+    hits = {m.rid: m.cached_prefix_len for m in report.metrics}
+    assert hits[1] == TEMPLATE_LEN and hits[2] == TEMPLATE_LEN
+    assert hits[9] == TEMPLATE_LEN - 1          # full cover, capped
+    assert backend.pool.stats().cow_copies >= 1, \
+        "fully covered prompt must have COWed its shared tail page"
+    if chunk is not None:
+        recs = [s for s in report.steps if s.phase == "prefill"]
+        assert {s.cached_prefix_len for s in recs if s.rid == 1} \
+            == {TEMPLATE_LEN}
+        # suffix-only chunking: ceil(5/4) passes instead of ceil(21/4)
+        assert len([s for s in recs if s.rid == 1]) == -(-SUF // CHUNK)
+
+    backend.prefix_index.clear()
+    assert backend.pool.stats().used_tokens == 0
+    assert backend.pool.free_pages == backend.pool.num_pages - 1
+    assert not backend.pool.owners()
+
+
+# ---------------------------------------------------------------------------
+# acceptance: executed counts == prefix_cache_ops == HLO == PP transfers
+# ---------------------------------------------------------------------------
+
+
+@needs_mesh
+def test_tp_hit_counts_match_commodel_and_hlo(setup):
+    """(2,1): the hit request's phase="prefill" StepRecords sum exactly to
+    prefix_cache_ops' executed column (suffix rows only), each chunk keeps
+    the invariant per-chunk schedule, and the compiled HLO of the paged
+    pass at the actual suffix chunk lengths reports the same counts."""
+    cfg, params = setup
+    backend = make_backend("tp", cfg, params, num_slots=4, max_len=MAX_LEN,
+                           t=2, paged=True, page_size=PAGE,
+                           prefix_cache=True)
+    sched = Scheduler(backend, clock=VirtualClock(), chunk_size=CHUNK)
+    warm = sched.run(_warm_requests(cfg))
+    report = sched.run(_hit_requests(cfg))
+
+    ops = cm.prefix_cache_ops(cfg, TEMPLATE_LEN, SUF, chunk=CHUNK, t=2,
+                              gather_mode="allgather")
+    recs = [s for s in report.steps if s.phase == "prefill" and s.rid == 1]
+    assert len(recs) == -(-SUF // CHUNK)
+    total = {}
+    for r in recs:
+        for k, v in r.collective_counts.items():
+            total[k] = total.get(k, 0) + v
+    assert total == ops.executed_counts
+
+    # per-chunk counts are chunk-length-invariant and match the HLO of the
+    # paged pass at the scheduler's actual suffix splits (4 then 1)
+    per = {"allreduce": 2 * cfg.num_layers + 1, "allgather": 1}
+    for r in recs:
+        assert r.collective_counts == per
+    for q_len in (CHUNK, SUF - CHUNK):
+        assert _hlo_counts(backend.paged_step_hlo(q_len=q_len, batch=1)) \
+            == per
+
+    # savings are real: cold would have chunked the whole 21-token prompt
+    cold_recs = [s for s in warm.steps if s.phase == "prefill"]
+    assert len(cold_recs) == -(-(TEMPLATE_LEN + SUF) // CHUNK)
+    assert ops.skipped_counts["allreduce"] > 0
+    assert ops.skipped_bytes > 0
+
+
+@needs_mesh
+def test_pp_hit_measured_transfers_match_commodel(setup):
+    """(1,2): each suffix chunk of the hit request ships exactly the
+    predicted boundary bytes — the house invariant holds on the cache-hit
+    path's measured transfers too."""
+    cfg, params = setup
+    backend = make_backend("pp", cfg, params, num_slots=4, max_len=MAX_LEN,
+                           t=1, p=2, paged=True, page_size=PAGE,
+                           prefix_cache=True)
+    sched = Scheduler(backend, clock=VirtualClock(), chunk_size=CHUNK)
+    sched.run(_warm_requests(cfg))
+    report = sched.run(_hit_requests(cfg))
+
+    recs = [s for s in report.steps if s.phase == "prefill" and s.rid == 1]
+    sizes = [min(CHUNK, SUF - s) for s in range(0, SUF, CHUNK)]
+    assert len(recs) == len(sizes)
+    for rec, c in zip(recs, sizes):
+        send = [o for o in backend.chunk_comm_ops(c)
+                if o.collective == "send"][0]
+        assert rec.measured_transfers["count"] == send.count == 2
+        assert rec.measured_transfers["bytes"] == send.total_msg_bytes
+
+
+# ---------------------------------------------------------------------------
+# acceptance: preemption of cache-hit requests stays bitwise identical
+# ---------------------------------------------------------------------------
+
+
+def test_preempted_cache_hits_stay_bitwise_identical(setup):
+    """Optimistic admission on an oversubscribed pool with the prefix
+    cache live: hits happen, preemptions happen, and every stream still
+    equals the solo run (a preempted hit recomputes COLD by design — its
+    resumed prefix ends in generated tokens the index never saw)."""
+    cfg, params = setup
+    page, tmpl_len = 4, 8
+    tmpl = _template(cfg, n=tmpl_len, seed=11)
+    rng = np.random.default_rng(12)
+
+    def _pressure_requests():
+        reqs = []
+        for i, (s, n) in enumerate([(3, 8), (5, 6), (2, 10), (4, 7)]):
+            suf = rng.integers(2, cfg.vocab_size, s).astype(np.int32)
+            suf[0] = 2 + i
+            reqs.append(Request(rid=i, prompt=np.concatenate([tmpl, suf]),
+                                max_new_tokens=n))
+        return reqs
+
+    backend = make_backend("gspmd", cfg, params, num_slots=3,
+                           max_len=MAX_LEN, paged=True, page_size=page,
+                           num_pages=10, prefix_cache=True)
+    sched = Scheduler(backend, clock=VirtualClock(), admission="optimistic")
+    warm = sched.run([Request(rid=99,
+                              prompt=np.concatenate([tmpl, tmpl[:1]]),
+                              max_new_tokens=2)])
+    assert len(backend.prefix_index) == tmpl_len // page
+
+    reqs = _pressure_requests()
+    refs = {r.rid: _solo_reference(cfg, params, r) for r in reqs}
+    report = sched.run(reqs)
+    got = report.tokens_by_rid()
+    for r in reqs:
+        assert got[r.rid] == refs[r.rid], \
+            f"preempted cache-hit request {r.rid} diverged"
+    assert report.preemptions > 0, "pool pressure must have preempted"
+    hits = {m.rid: m.cached_prefix_len for m in report.metrics}
+    assert any(v > 0 for v in hits.values()), "no request hit the cache"
+    # recompute passes went cold: their records price the full prefix
+    for rec in report.steps:
+        if rec.phase == "recompute":
+            assert rec.cached_prefix_len is None
+
+    backend.prefix_index.clear()
+    assert backend.pool.stats().used_tokens == 0
+    assert backend.pool.free_pages == backend.pool.num_pages - 1
+
+
+# ---------------------------------------------------------------------------
+# analytics: prefix_cache_ops closed form, SLO mixing, planner re-ranking
+# ---------------------------------------------------------------------------
+
+
+def test_prefix_cache_ops_closed_form(setup):
+    """executed == chunked_prefill_ops over the suffix alone; hit_len=0
+    degenerates to executed == cold; counts are batch- and chunk-length-
+    invariant (only bytes scale)."""
+    cfg, _ = setup
+    ops = cm.prefix_cache_ops(cfg, 16, 5, chunk=4, t=2,
+                              gather_mode="allgather")
+    want = _count(cm.chunked_prefill_ops(cfg, 5, 4, 2, 1,
+                                         gather_mode="allgather"))
+    assert ops.executed_counts == want
+    assert ops.cold_counts == _count(cm.chunked_prefill_ops(
+        cfg, 21, 4, 2, 1, gather_mode="allgather"))
+    assert all(v >= 0 for v in ops.skipped_counts.values())
+    assert ops.skipped_bytes == ops.cold_bytes - ops.executed_bytes > 0
+
+    miss = cm.prefix_cache_ops(cfg, 0, 21, chunk=4, t=2,
+                               gather_mode="allgather")
+    assert miss.executed_counts == miss.cold_counts
+    assert miss.skipped_bytes == 0
+    assert all(v == 0 for v in miss.skipped_counts.values())
+
+    for batch in (1, 3):
+        same = cm.prefix_cache_ops(cfg, 16, 5, chunk=4, t=2, batch=batch,
+                                   gather_mode="allgather")
+        assert same.executed_counts == ops.executed_counts
+
+    with pytest.raises(ValueError):
+        cm.prefix_cache_ops(cfg, -1, 5)
+    with pytest.raises(ValueError):
+        cm.prefix_cache_ops(cfg, 16, 0)
+
+
+def test_predict_slo_hit_rate_mixing():
+    """hit_rate mixes cold and hit reports linearly: TTFT/E2E/volume fall
+    monotonically with hit_rate, TPOT never moves (decode is untouched),
+    and hit_rate=0 is bitwise the uncached report."""
+    cfg = get_config("llama32-3b")
+    base = predict_slo(cfg, 512, 64, 4)
+    zero = predict_slo(cfg, 512, 64, 4, hit_rate=0.0)
+    assert (zero.ttft, zero.tpot, zero.e2e, zero.comm_volume) \
+        == (base.ttft, base.tpot, base.e2e, base.comm_volume)
+
+    reports = [predict_slo(cfg, 512, 64, 4, hit_rate=h, hit_len=256)
+               for h in (0.25, 0.5, 0.9)]
+    ttfts = [r.ttft for r in reports]
+    assert ttfts == sorted(ttfts, reverse=True) and ttfts[0] < base.ttft
+    assert all(r.tpot == base.tpot for r in reports)
+    assert all(r.e2e < base.e2e for r in reports)
+    assert all(r.comm_volume < base.comm_volume for r in reports)
+    r = reports[1]
+    assert r.breakdown["ttft_hit"] < r.breakdown["ttft_cold"]
+    assert r.ttft == pytest.approx(
+        0.5 * r.breakdown["ttft_cold"] + 0.5 * r.breakdown["ttft_hit"])
+    # default hit_len is s_p - 1 (the fully covered prompt's cap)
+    assert predict_slo(cfg, 512, 64, 4,
+                       hit_rate=0.5).breakdown["hit_len"] == 511
+
+    for bad in (-0.1, 1.1):
+        with pytest.raises(ValueError):
+            predict_slo(cfg, 512, 64, 4, hit_rate=bad)
+    for bad_len in (0, 512):
+        with pytest.raises(ValueError):
+            predict_slo(cfg, 512, 64, 4, hit_rate=0.5, hit_len=bad_len)
+
+
+def test_planner_reranks_under_template_traffic():
+    """Template-heavy traffic shrinks prefill-bound advantages: on 8 chips
+    at s_p=8192 pure TP=8 ranks below TP=2 CP=4 cold (CP shards the long
+    prefill) but overtakes it at hit_rate=0.95 — most requests no longer
+    prefill 8192 tokens, so decode-side strength wins."""
+    cfg = get_config("llama32-3b")
+    names = lambda cands: [c.name for c in cands]
+    cold = names(plan(cfg, 8, 8192, 128, objective="ttft"))
+    hot = names(plan(cfg, 8, 8192, 128, objective="ttft", hit_rate=0.95))
+    tp8, cp4 = "TP=8 CP=1 PP=1", "TP=2 CP=4 PP=1"
+    assert cold.index(tp8) > cold.index(cp4)
+    assert hot.index(tp8) < hot.index(cp4)
+    # hit_rate=0 leaves the ranking bitwise unchanged
+    assert names(plan(cfg, 8, 8192, 128, objective="ttft",
+                      hit_rate=0.0)) == cold
+
+
+def test_template_trace_shapes():
+    """make_template_trace: shared templates, rid-unique suffixes, zipf
+    skew toward template 0."""
+    reqs = make_template_trace(32, 0.0, 1000, n_templates=3,
+                               template_len=12, suffix_lens=(2, 4))
+    assert len(reqs) == 32
+    prompts = [r.prompt for r in reqs]
+    assert all(12 + 2 <= len(p) <= 12 + 4 for p in prompts)
+    heads = {p[:12].tobytes() for p in prompts}
+    assert 1 <= len(heads) <= 3                 # few shared templates
+    assert len({p.tobytes() for p in prompts}) == 32   # no identical prompt
+    with pytest.raises(ValueError):
+        make_template_trace(4, 0.0, 1000, n_templates=0)
+    with pytest.raises(ValueError):
+        make_template_trace(4, 0.0, 1000, zipf_a=1.0)
