@@ -16,8 +16,12 @@ configs, CPU-sized):
              all-gather → dequant on the wire
   tp2pp2-q8  the hybrid engine with the same quantized decode collectives
              inside each stage's TP group
+  fused-q4 / tp2pp2-q4
+             the same two shapes with the nibble-packed int4 wire — half
+             the int8 payload again, the aggressive end of the
+             accuracy/bandwidth tradeoff
 
-The two ``-q8`` records carry an accuracy contract next to the timing:
+Each quant record carries an accuracy contract next to the timing:
 ``token_match_rate`` and ``max_logit_drift`` are measured teacher-forced —
 the quantized path replays the bf16 greedy token stream, so every step sees
 identical *inputs* and the drift is the quantization's alone (compounded
@@ -25,8 +29,8 @@ through the KV cache, which is the honest part), while ``token_match_rate``
 is the fraction of (step, sequence) argmax choices that agree with the bf16
 pick.  ``benchmarks/check_baselines.py`` gates both against
 ``kernels.quant_collective.QUANT_TOLERANCE`` and pins the deterministic
-``predicted_decode_wire_ratio`` (closed form, must stay < 0.6 of the bf16
-all-reduce wire).
+``predicted_decode_wire_ratio`` against a per-quant ceiling (closed form;
+int8 must stay < 0.6 of the bf16 all-reduce wire, packed int4 < 0.35).
 
 Emits ``BENCH_decode.json`` at the repo root (tokens/sec and ms/token per
 arch × variant) so the perf trajectory is tracked across PRs.  Every record
@@ -141,34 +145,6 @@ def _measure(dry_run: bool = False):
             pp_once()                                  # warmup / compile
             variants[name] = min(pp_once() for _ in range(repeat))
 
-        # ---- quant series (DESIGN.md §12): int8 two-step collectives ----
-        QUANT = "int8"
-        gen_q = px.tp_generate(cfg, mesh, n_tokens, quant_collectives=QUANT)
-        gen_q(params, fresh(), tok0, jnp.int32(pos))[0].block_until_ready()
-
-        def fused_q_once():
-            c = fresh()
-            t0 = time.perf_counter()
-            out, _ = gen_q(params, c, tok0, jnp.int32(pos))
-            out.block_until_ready()
-            return time.perf_counter() - t0
-        variants["fused-q8"] = min(fused_q_once() for _ in range(repeat))
-
-        eng_q = px.PipelineEngine(cfg, t=2, p=2, unroll=False,
-                                  quant_collectives=QUANT)
-        staged_q = eng_q.prepare(params)
-        _, qcaches0 = eng_q.prefill_with_cache(staged_q, toks, cache_w)
-
-        def ppq_once():
-            caches = [jax.tree.map(jnp.copy, c) for c in qcaches0]
-            t0 = time.perf_counter()
-            out, _ = eng_q.generate(staged_q, caches, tok0, pos, n_tokens)
-            out.block_until_ready()
-            return time.perf_counter() - t0
-
-        ppq_once()                                     # warmup / compile
-        variants["tp2pp2-q8"] = min(ppq_once() for _ in range(repeat))
-
         # accuracy: teacher-forced per-step logits vs the bf16 reference
         def record_tp(step_fn, forced=None):
             cache, tok = fresh(), tok0
@@ -203,16 +179,52 @@ def _measure(dry_run: bool = False):
             drift = float(jnp.max(jnp.abs(q_logits - r_logits)))
             return round(match, 4), round(drift, 6)
 
-        step_q = px.tp_decode_step(cfg, mesh, unroll=True,
-                                   quant_collectives=QUANT)
+        # ---- quant series (DESIGN.md §12): low-bit two-step collectives,
+        # int8 and the packed int4 wire side by side ----
         ref_tp = record_tp(step_u)
-        quant_metrics = {
-            "fused-q8": drift_metrics(
-                ref_tp, record_tp(step_q, forced=ref_tp[1])),
-        }
         ref_pp = record_pp(*pp_engines["tp2pp2"])
-        quant_metrics["tp2pp2-q8"] = drift_metrics(
-            ref_pp, record_pp(eng_q, staged_q, qcaches0, forced=ref_pp[1]))
+        quant_metrics, variant_quant = {}, {}
+        for quant, tag in (("int8", "q8"), ("int4", "q4")):
+            gen_q = px.tp_generate(cfg, mesh, n_tokens,
+                                   quant_collectives=quant)
+            gen_q(params, fresh(), tok0,
+                  jnp.int32(pos))[0].block_until_ready()
+
+            def fused_q_once(gen_q=gen_q):
+                c = fresh()
+                t0 = time.perf_counter()
+                out, _ = gen_q(params, c, tok0, jnp.int32(pos))
+                out.block_until_ready()
+                return time.perf_counter() - t0
+            variants[f"fused-{tag}"] = min(
+                fused_q_once() for _ in range(repeat))
+
+            eng_q = px.PipelineEngine(cfg, t=2, p=2, unroll=False,
+                                      quant_collectives=quant)
+            staged_q = eng_q.prepare(params)
+            _, qcaches0 = eng_q.prefill_with_cache(staged_q, toks, cache_w)
+
+            def ppq_once(eng_q=eng_q, staged_q=staged_q, qcaches0=qcaches0):
+                caches = [jax.tree.map(jnp.copy, c) for c in qcaches0]
+                t0 = time.perf_counter()
+                out, _ = eng_q.generate(staged_q, caches, tok0, pos,
+                                        n_tokens)
+                out.block_until_ready()
+                return time.perf_counter() - t0
+
+            ppq_once()                                 # warmup / compile
+            variants[f"tp2pp2-{tag}"] = min(
+                ppq_once() for _ in range(repeat))
+
+            step_q = px.tp_decode_step(cfg, mesh, unroll=True,
+                                       quant_collectives=quant)
+            quant_metrics[f"fused-{tag}"] = drift_metrics(
+                ref_tp, record_tp(step_q, forced=ref_tp[1]))
+            quant_metrics[f"tp2pp2-{tag}"] = drift_metrics(
+                ref_pp, record_pp(eng_q, staged_q, qcaches0,
+                                  forced=ref_pp[1]))
+            variant_quant[f"fused-{tag}"] = quant
+            variant_quant[f"tp2pp2-{tag}"] = quant
 
         from repro.core import commodel as cm
 
@@ -229,10 +241,11 @@ def _measure(dry_run: bool = False):
 
         parallelism = {"unrolled": (4, 1), "scanned": (4, 1), "fused": (4, 1),
                        "pp4": (1, 4), "tp2pp2": (2, 2),
-                       "fused-q8": (4, 1), "tp2pp2-q8": (2, 2)}
+                       "fused-q8": (4, 1), "tp2pp2-q8": (2, 2),
+                       "fused-q4": (4, 1), "tp2pp2-q4": (2, 2)}
         for name, sec in variants.items():
             t, p = parallelism[name]
-            quant = QUANT if name.endswith("-q8") else None
+            quant = variant_quant.get(name)
             rec = {
                 "arch": arch, "variant": name, "tp": t, "pp": p,
                 "batch": BATCH, "n_tokens": n_tokens, "quant": quant,
@@ -246,7 +259,7 @@ def _measure(dry_run: bool = False):
                 rec["token_match_rate"] = match
                 rec["max_logit_drift"] = drift
                 # closed form vs the bf16 (b=2) wire the two-step replaces;
-                # t-invariant, pinned by the baseline gate (< 0.6)
+                # t-invariant, pinned by the per-quant baseline ceiling
                 rec["predicted_decode_wire_ratio"] = round(
                     cm.quant_ar_wire_ratio(cfg.d_model, t, quant=quant), 6)
             results.append(rec)

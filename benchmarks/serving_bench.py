@@ -7,7 +7,7 @@ measurement — measured TTFT / TPOT / E2E sit next to the analytical
 ``core.slo.predict_slo`` prediction for the same layout, so the two sides of
 the paper's methodology (measure + model) face each other at request level.
 
-Six series (4-device host-platform mesh):
+Seven series (4-device host-platform mesh):
 
   short       gspmd / tp2 / pp2, contiguous slots, prompts 8–48 at three
               arrival rates — the original throughput-vs-latency sweep
@@ -37,6 +37,19 @@ Six series (4-device host-platform mesh):
               (``commodel.prefix_cache_ops``'s executed column), hit TTFT
               strictly below the cold run's on the same rids, and a
               zero-leak pool drain once the index is cleared
+  disagg-mixed  the §14 acceptance bench: one seeded chat+summarize trace
+              served three ways — the chat subset alone (the decode
+              pool's gate baseline), the full mix colocated (long
+              prefill chunks steal decode steps: head-of-line blocking),
+              and the full mix through ``DisaggScheduler`` (longs
+              prefill in a 1-slot prefill pool sharing the decode
+              pool's KVPool, finished pages ship on the modeled
+              interconnect).  ``check_baselines.check_disagg`` gates
+              bitwise chat-stream identity across all three, measured
+              handoff bytes == the ``kv_handoff_ops`` closed form, a
+              zero-leak drain, the §14 planner's decision rule, and (on
+              the full series) decode-pool chat p99 TPOT within 1.10×
+              of the baseline while colocated degrades ≥ 1.5×
   pp-occupancy  the dynamic-schedule payoff curve (DESIGN.md §11): the SAME
               closed request set through pp2/pp4 at in-flight depth
               d ∈ 1..p (``num_slots = 2·d`` so depth adds concurrent
@@ -105,6 +118,26 @@ PC_TEMPLATE_PAGES = 2
 PC_SUFFIX_LENS = (4, 12)
 PC_DECODE_LENS = (4, 8)
 PC_MAX_LEN = 96
+
+# disagg-mixed series (DESIGN.md §14): chat + summarize traffic, three
+# ways — the chat subset alone (the decode pool's gate baseline), the
+# full mix colocated (long prefill chunks steal decode steps: the
+# head-of-line blocking the paper's mixed traces measure), and the full
+# mix through DisaggScheduler (longs prefill in a 1-slot prefill pool
+# sharing the decode pool's KVPool; finished pages ship on the modeled
+# interconnect and chat TPOT is measured on the decode pool's clock).
+DM_CHAT_REQUESTS = 18
+DM_LONG_REQUESTS = 4
+DM_CHAT_PROMPTS = (8, 24)        # strictly under DM_ROUTE: never routed
+DM_CHAT_DECODE = (8, 16)
+DM_LONG_PROMPTS = (192, 320)
+DM_LONG_DECODE = (4, 8)
+DM_CHAT_RATE = 4.0
+DM_LONG_RATE = 1.0
+DM_ROUTE = 48
+DM_MAX_LEN = 352
+DM_PAGES = 128
+DM_SLOTS = 4
 
 # pp-occupancy series: dynamic-schedule depth sweep (DESIGN.md §11).  A
 # request group is OCC_GROUP slots; depth d runs d groups in flight on
@@ -500,6 +533,121 @@ def _measure(dry_run: bool = False):
             "index_stats":
                 backend.prefix_index.stats() if cached else None,
         })
+
+    # -- disagg-mixed series: the §14 acceptance bench.  The SAME seeded
+    #    mixed trace three ways; every checksum below is over token
+    #    streams, so "disagg changes nothing but the schedule" is gated
+    #    bitwise, and the handoff volume is gated against the closed form
+    #    (the scheduler itself asserts measured == predicted per ship).
+    from repro.core.planner import TrafficClass, recommend_disagg
+    from repro.runtime.scheduler import DisaggScheduler
+
+    dm_chat_n = DRY_REQUESTS if dry_run else DM_CHAT_REQUESTS
+    dm_long_n = 2 if dry_run else DM_LONG_REQUESTS
+    dm_long_lens = (96, 128) if dry_run else DM_LONG_PROMPTS
+    dm_long_quantum = 32 if dry_run else 64
+    dm_max = 160 if dry_run else DM_MAX_LEN
+    dm_rates = (0.0, 0.0) if dry_run else (DM_CHAT_RATE, DM_LONG_RATE)
+    dm_chat = make_poisson_trace(dm_chat_n, dm_rates[0], cfg.vocab_size,
+                                 prompt_lens=DM_CHAT_PROMPTS,
+                                 decode_lens=DM_CHAT_DECODE, seed=29,
+                                 quantum=8)
+    dm_long = make_poisson_trace(dm_long_n, dm_rates[1], cfg.vocab_size,
+                                 prompt_lens=dm_long_lens,
+                                 decode_lens=DM_LONG_DECODE, seed=31,
+                                 quantum=dm_long_quantum)
+    for r in dm_long:
+        r.rid += 100                         # chat rids < 100, longs >= 100
+    dm_mixed = sorted(dm_chat + dm_long, key=lambda r: (r.arrival, r.rid))
+    dm_warm = sorted({r.prompt_len for r in dm_mixed})
+
+    def dm_backend(slots, owner_base=0, prefix=False, pool=None):
+        return make_backend("gspmd", cfg, params, num_slots=slots,
+                            max_len=dm_max, paged=True,
+                            page_size=PAGE_SIZE, num_pages=DM_PAGES,
+                            prefix_cache=prefix, pool=pool,
+                            owner_base=owner_base)
+
+    def dm_warm_reqs():
+        wrng = np.random.default_rng(1)
+        return [Request(rid=10_000 + j,
+                        prompt=wrng.integers(2, cfg.vocab_size, s),
+                        max_new_tokens=2)
+                for j, s in enumerate(dm_warm)]
+
+    def dm_stats(metrics, chat_only=False):
+        ms = [m for m in metrics if not chat_only or m.rid < 100]
+        tpots = [m.tpot for m in ms if m.num_generated > 1]
+        return {
+            "chat_tpot_mean_s": float(np.mean(tpots)),
+            "chat_tpot_p99_s": float(np.percentile(tpots, 99)),
+            "chat_ttft_p95_s": float(np.percentile(
+                [m.ttft for m in ms], 95)),
+        }
+
+    def dm_checksum(toks, chat_only=False):
+        sub = {k: v for k, v in toks.items()
+               if not chat_only or int(k) < 100}
+        return hashlib.sha256(
+            json.dumps(sub, sort_keys=True).encode()).hexdigest()
+
+    dm_records = {}
+    for mode in ("chat-only", "colocated", "disagg"):
+        trace = dm_chat if mode == "chat-only" else dm_mixed
+        if mode == "disagg":
+            dec = dm_backend(DM_SLOTS, prefix=True)
+            pre = dm_backend(1, owner_base=DM_SLOTS, pool=dec.pool)
+            sched = lambda: DisaggScheduler(pre, dec,
+                                            chunk_size=CHUNK_SIZE,
+                                            route_prompt_len=DM_ROUTE)
+            sched().run(dm_warm_reqs())
+            dec.prefix_index.clear()         # warm entries must not hit
+        else:
+            backend = dm_backend(DM_SLOTS)
+            sched = lambda: Scheduler(backend, chunk_size=CHUNK_SIZE)
+            sched().run(dm_warm_reqs())
+        report = sched().run(trace)
+        s = report.summary()
+        toks = report.tokens_by_rid()
+        rec = {
+            "series": "disagg-mixed", "arch": cfg.name, "backend": mode,
+            "tp": 1, "cp": 1, "pp": 1, "paged": True,
+            "chunk_size": CHUNK_SIZE, "inflight": 1,
+            "num_slots": DM_SLOTS, "rate_req_s": dm_rates[0], **s,
+            **dm_stats(report.metrics, chat_only=True),
+            "decode_collective_counts": step_collective_counts(
+                dec if mode == "disagg" else backend, 1),
+            "prefill_chunk_counts": chunk_counts(
+                dec if mode == "disagg" else backend, CHUNK_SIZE),
+            "token_checksum": dm_checksum(toks),
+            "chat_token_checksum": dm_checksum(toks, chat_only=True),
+        }
+        if mode == "disagg":
+            dm = s["disagg"]
+            drained_ok = True
+            dec.prefix_index.clear()
+            drained_ok = (dec.pool.stats().used_tokens == 0
+                          and dec.pool.free_pages
+                          == dec.pool.num_pages - 1)
+            # the decision rule the bench motivates, scored by the
+            # analytical §14 planner at serving scale (closed form —
+            # deterministic, drift-gated)
+            full = get_config(ARCH)
+            mixed_cls = [TrafficClass("chat", 24, 128, 4.0),
+                         TrafficClass("summarize", 2048, 32, 0.6)]
+            best_mixed = recommend_disagg(full, 8, mixed_cls)
+            best_chat = recommend_disagg(full, 8, mixed_cls[:1])
+            rec.update({
+                "handoffs": dm["handoffs"],
+                "handoff_pages": dm["handoff_pages"],
+                "handoff_bytes": dm["handoff_bytes"],
+                "predicted_handoff_bytes": dm["predicted_handoff_bytes"],
+                "pool_drained": drained_ok,
+                "planner_mixed_mode": best_mixed.mode,
+                "planner_chat_mode": best_chat.mode,
+            })
+        dm_records[mode] = rec
+        results.append(rec)
     print("SERVEJSON:" + json.dumps(results))
 
 

@@ -1,0 +1,139 @@
+"""Disaggregated prefill/decode demo: two pools, one modeled KV handoff.
+
+Serves a mixed chat+summarize trace two ways through the SAME model
+(DESIGN.md §14): colocated — one scheduler where every long prompt's
+prefill chunks steal decode steps from the chat requests (head-of-line
+blocking) — and disaggregated, where a 1-slot prefill pool absorbs the
+long prompts and ships their finished KV pages into the decode pool's
+shared ``KVPool`` over the modeled interconnect.  Prints each handoff
+(pages, bytes, and the ``commodel.kv_handoff_ops`` prediction the
+scheduler asserts against), chat-request TPOT under both schedules, and
+the §14 planner's colocated-vs-disagg decision for the same workload
+shape, then checks the invariants end to end:
+
+  * every stream — chat and long, both schedules — is bitwise identical
+    to an undisturbed solo run of the same request;
+  * measured handoff bytes equal the closed form exactly (the scheduler
+    raises on any drift, so the demo finishing is itself the check);
+  * clearing the prefix index drains the shared pool to zero leaked
+    pages.
+
+    PYTHONPATH=src python examples/disagg_demo.py --chat 6 --longs 2
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.planner import TrafficClass, plan_disagg
+from repro.models.transformer import get_model
+from repro.runtime.backends import make_backend
+from repro.runtime.engine import InferenceEngine
+from repro.runtime.request import make_poisson_trace
+from repro.runtime.scheduler import DisaggScheduler, Scheduler
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama32-3b")
+    ap.add_argument("--chat", type=int, default=6)
+    ap.add_argument("--longs", type=int, default=2)
+    ap.add_argument("--slots", type=int, default=3,
+                    help="decode-pool slots (the prefill pool gets 1)")
+    ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--chunk", type=int, default=16)
+    ap.add_argument("--route", type=int, default=32,
+                    help="prompts >= this route through the prefill pool")
+    ap.add_argument("--max-len", type=int, default=96)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced(num_layers=2)
+    params = get_model(cfg).init(jax.random.PRNGKey(0))
+
+    def trace():
+        chat = make_poisson_trace(
+            args.chat, 0.0, cfg.vocab_size, prompt_lens=(6, 14),
+            decode_lens=(4, 8), seed=args.seed, quantum=2)
+        longs = make_poisson_trace(
+            args.longs, 0.0, cfg.vocab_size,
+            prompt_lens=(args.route, args.max_len - 12),
+            decode_lens=(3, 6), seed=args.seed + 1, quantum=4)
+        for r in longs:
+            r.rid += 100                     # chat rids < 100
+        return chat + longs
+
+    # colocated: one pool, one scheduler, chunked prefill interleaved
+    colo_backend = make_backend("gspmd", cfg, params, num_slots=args.slots,
+                                max_len=args.max_len, paged=True,
+                                page_size=args.page_size)
+    colo = Scheduler(colo_backend, chunk_size=args.chunk).run(trace())
+
+    # disaggregated: decode pool + 1-slot prefill pool on ONE KVPool,
+    # disjoint owner ranges; the decode pool's prefix index receives the
+    # shipped prompt blocks
+    dec = make_backend("gspmd", cfg, params, num_slots=args.slots,
+                       max_len=args.max_len, paged=True,
+                       page_size=args.page_size, prefix_cache=True)
+    pre = make_backend("gspmd", cfg, params, num_slots=1,
+                       max_len=args.max_len, paged=True,
+                       page_size=args.page_size, pool=dec.pool,
+                       owner_base=args.slots)
+    sched = DisaggScheduler(pre, dec, chunk_size=args.chunk,
+                            route_prompt_len=args.route)
+    reqs = trace()
+    report = sched.run(reqs)
+
+    print(f"disaggregated serve, {args.chat} chat + {args.longs} long "
+          f"requests, route >= {args.route}, page {args.page_size}:")
+    for h in report.handoffs:
+        print(f"  handoff rid {h.rid:<4d} {h.pages} pages  "
+              f"{h.bytes:>9,d} B measured == {int(h.predicted_bytes):,d} B "
+              f"predicted  (prefill {1e3 * h.prefill_s:.1f} ms)")
+
+    def chat_tpot(rep):
+        return float(np.mean([m.tpot for m in rep.metrics
+                              if m.rid < 100 and m.num_generated > 1]))
+
+    print(f"  chat TPOT       colocated {1e3 * chat_tpot(colo):.2f} ms, "
+          f"disagg decode pool {1e3 * chat_tpot(report):.2f} ms "
+          f"(decode-pool clock: long prefills run elsewhere)")
+
+    # invariant 1: bitwise identity vs undisturbed solo serving, both ways
+    eng = InferenceEngine(cfg, params, max_len=args.max_len, decode_chunk=1)
+    got_colo, got_dis = colo.tokens_by_rid(), report.tokens_by_rid()
+    for r in reqs:
+        solo = np.asarray(eng.generate(
+            np.asarray(r.prompt)[None, :],
+            max_new_tokens=r.max_new_tokens))[0].tolist()
+        assert got_colo[r.rid] == solo, f"rid {r.rid}: colocated diverged"
+        assert got_dis[r.rid] == solo, f"rid {r.rid}: disagg diverged"
+
+    # invariant 2: the handoff volume sits exactly on the closed form
+    # (the scheduler asserts per ship; re-check the totals here)
+    assert report.handoff_bytes == int(sum(h.predicted_bytes
+                                           for h in report.handoffs))
+    assert len(report.handoffs) == args.longs
+
+    # invariant 3: zero-leak drain of the SHARED pool
+    evicted = dec.prefix_index.clear()
+    stats = dec.pool.stats()
+    assert stats.used_tokens == 0 and \
+        dec.pool.free_pages == dec.pool.num_pages - 1, \
+        f"shared pool leaked pages after draining the index: {stats}"
+    print(f"  drained         {evicted} index entries evicted, "
+          f"0 pages leaked across the pool boundary")
+
+    # the §14 decision rule at serving scale (closed form, full config)
+    full = get_config(args.arch)
+    classes = [TrafficClass("chat", 24, 128, 4.0),
+               TrafficClass("summarize", 2048, 32, 0.6)]
+    best = plan_disagg(full, 8, classes)[0]
+    print(f"  planner         mixed workload on 8 chips -> {best.name}")
+    print("OK: streams bitwise identical under both schedules, handoff "
+          "bytes == kv_handoff_ops closed form, zero-leak drain")
+
+
+if __name__ == "__main__":
+    main()

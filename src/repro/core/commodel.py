@@ -52,8 +52,10 @@ _WIRE_FACTOR = {
 # allreduce ships its payload at one of these widths while the per-chunk
 # scales travel as f32.  fp8 is modeled at its nominal 1-byte width — real
 # accelerator wire bytes; host-CPU XLA upcasts the f8 payload to f16 on the
-# wire, which the HLO-parity tests gate per-platform.
-QUANT_WIRE_BYTES = {"int8": 1, "fp8": 1}
+# wire, which the HLO-parity tests gate per-platform.  int4 ships two
+# values per uint8 byte (``kernels.quant_collective.nibble_pack``), hence
+# the half-byte wire width.
+QUANT_WIRE_BYTES = {"int8": 1, "fp8": 1, "int4": 0.5}
 QUANT_SCALE_BYTES = 4
 DEFAULT_QUANT_CHUNK = 128
 
@@ -123,6 +125,13 @@ def quant_decode_ar_ops(phase: str, count: int, rows: int, h: int, t: int,
          exact integer addition under the floor(qmax/t) headroom,
       3. one 1-byte [rows, h] allgather — redistributing the reduced shards.
 
+    ``quant="int4"`` swaps the reducescatter for a half-byte [rows, h]
+    alltoall: packed nibbles cannot be partially summed on the wire, so
+    each rank instead receives every rank's packed copy of its own hidden
+    block, reduces exactly in int32, and the re-packed halves ride the
+    half-byte allgather — same two payload hops, both at 0.5 bytes/element
+    (``parallel_exec.quantized_psum``, DESIGN.md §12).
+
     Counts stay batch-invariant (``rows`` scales message bytes only) and the
     closed-form wire ratio vs one b-byte allreduce is
     ``(payload·2h + scale·2·4K) / (2·2h)`` — see ``quant_ar_wire_ratio``.
@@ -132,9 +141,10 @@ def quant_decode_ar_ops(phase: str, count: int, rows: int, h: int, t: int,
                          f"expected one of {sorted(QUANT_WIRE_BYTES)}")
     K = quant_chunks(h, chunk)
     w = QUANT_WIRE_BYTES[quant]
+    payload = "alltoall" if quant == "int4" else "reducescatter"
     return [
         CommOp("allreduce", phase, count, (rows, K), t, QUANT_SCALE_BYTES),
-        CommOp("reducescatter", phase, count, (rows, h), t, w),
+        CommOp(payload, phase, count, (rows, h), t, w),
         CommOp("allgather", phase, count, (rows, h), t, w),
     ]
 
@@ -293,7 +303,8 @@ def hybrid_stage_collectives(cfg: ModelConfig, t: int, p: int,
     reducescatter + one allgather, so the stage module shows 2·L_s
     allreduces still (now tiny f32 scale exchanges) plus 2·L_s of each
     two-step half next to the boundary/logit all-gathers; the stage-0
-    embedding psum stays full-width."""
+    embedding psum stays full-width.  int4 replaces the reducescatter
+    half with the packed-nibble alltoall (``quant_decode_ar_ops``)."""
     L_s = stage_layer_partition(cfg.num_layers, p)[stage]
     counts: dict = {}
     if t > 1:
@@ -302,7 +313,10 @@ def hybrid_stage_collectives(cfg: ModelConfig, t: int, p: int,
         if ag:
             counts["allgather"] = ag
         if quant is not None and phase == "decode":
-            counts["reducescatter"] = 2 * L_s
+            if quant == "int4":
+                counts["alltoall"] = 2 * L_s
+            else:
+                counts["reducescatter"] = 2 * L_s
             counts["allgather"] = counts.get("allgather", 0) + 2 * L_s
     if c > 1 and phase == "prefill":
         counts["collectivepermute"] = 2 * L_s * (c - 1)
@@ -630,6 +644,58 @@ def prefix_cache_ops(cfg: ModelConfig, hit_len: int, suffix_len: int,
         gather_mode=gather_mode)
     return PrefixCacheOps(hit_len=hit_len, suffix_len=suffix_len,
                           executed=executed, cold=cold)
+
+
+# ---------------------------------------------------------------------------
+# Disaggregated prefill/decode — the KV-page handoff transfer (DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+
+def kv_page_bytes(cfg: ModelConfig, page_size: int, b: int = 2) -> int:
+    """Device bytes of ONE KV page across every layer: each layer's page
+    holds ``page_size × kv_heads × head_dim`` K rows plus the same V rows,
+    so the unit the disaggregated handoff ships is
+    ``2 · L · page_size · kv · D · b`` — the exact footprint a
+    ``KVPool`` page occupies in each backend's [L, P, ps, kv, D] pools."""
+    if page_size < 1:
+        raise ValueError(f"page_size must be >= 1, got {page_size}")
+    return 2 * cfg.num_layers * page_size * cfg.num_kv_heads \
+        * cfg.head_dim * b
+
+
+def kv_handoff_pages(prompt_len: int, page_size: int) -> int:
+    """Closed-form page count of ONE request's prefill→decode handoff:
+    exactly the prompt's FULL blocks — what ``PrefixIndex.insert`` indexes
+    (a partial tail page keeps being rewritten by the suffix prefill and
+    decode, so it never ships; the decode pool recomputes it).  This is the
+    single source for both the predicted side (``kv_handoff_ops``,
+    ``slo.predict_slo``'s interconnect term) and the measured side (the
+    scheduler ships the pages a lookup of the freshly inserted prompt
+    returns)."""
+    if prompt_len < 0:
+        raise ValueError(f"prompt_len must be >= 0, got {prompt_len}")
+    if page_size < 1:
+        raise ValueError(f"page_size must be >= 1, got {page_size}")
+    return prompt_len // page_size
+
+
+def kv_handoff_ops(cfg: ModelConfig, pages: int, page_size: int, *,
+                   b: int = 2, count: int = 1) -> List[CommOp]:
+    """The disaggregated prefill→decode KV handoff as a modeled transfer
+    (DESIGN.md §14): when the prefill pool finishes a prompt, its ``pages``
+    full KV pages cross the pool interconnect to the decode pool — one
+    send/recv pair per handed-off request, ``bytes = pages × page_bytes``
+    with no wire-factor discount (a p2p copy ships every byte once, like
+    the PP boundary rows).  The scheduler logs exactly these rows on each
+    phase="handoff" StepRecord, so measured handoff transfers can be
+    asserted equal to this closed form the same way boundary transfers
+    match ``pp_comm_ops``."""
+    if pages < 0:
+        raise ValueError(f"pages must be >= 0, got {pages}")
+    shape = (pages, 2 * cfg.num_layers * page_size
+             * cfg.num_kv_heads * cfg.head_dim)
+    return [CommOp("send", "handoff", count, shape, 2, b),
+            CommOp("recv", "handoff", count, shape, 2, b)]
 
 
 # ---------------------------------------------------------------------------

@@ -53,7 +53,8 @@ from repro.config.base import ModelConfig
 from repro.core.commodel import DEFAULT_QUANT_CHUNK, stage_layer_partition
 from repro.kernels.quant_collective import (QUANT_DTYPES, chunk_amax,
                                             chunk_dequantize, chunk_quantize,
-                                            collective_qmax, scales_from_amax)
+                                            collective_qmax, nibble_pack,
+                                            nibble_unpack, scales_from_amax)
 from repro.models.layers import apply_rope, decode_attn_mask, \
     decode_positions, gqa_attention, make_mask, mlp_apply, paged_attn_mask, \
     paged_cache_update, paged_gather, ring_cache_update, ring_kv_assemble, \
@@ -140,6 +141,16 @@ def quantized_psum(x, axis, t: int, quant: str = "int8",
       5. dequantize with the same shared scales (known on every rank from
          the pmax) back to x.dtype.
 
+    ``quant="int4"`` swaps steps 2–4 for the packed-nibble variant: the
+    reduce-scatter cannot carry 4-bit fields (integer partial sums would
+    bleed across nibble boundaries), so the payload rides a tiled
+    ``all_to_all`` instead — each rank receives every rank's packed copy
+    of its own hidden block, unpacks, sums EXACTLY in int32 (|sum| <= 7t,
+    which is why int4 keeps the full +-7 grid, see ``collective_qmax``),
+    requantizes the reduced block by t back onto the 4-bit grid, and
+    all-gathers the re-packed halves.  The wire moves 0.5 bytes/element on
+    both hops; dequant runs at ``scales * t`` to undo the requantize.
+
     Identity fallbacks: ``axis=None`` / ``quant=None`` / ``t<=1`` run the
     plain ``_maybe_psum`` — bitwise-identical to the unquantized path with
     zero quant ops in the compiled module.
@@ -154,6 +165,23 @@ def quantized_psum(x, axis, t: int, quant: str = "int8",
     amax = jax.lax.pmax(chunk_amax(x, chunk), axis)
     scales = scales_from_amax(amax, qmax)
     q = chunk_quantize(x, scales, chunk, quant)
+    if quant == "int4":
+        if h % (2 * t):
+            raise ValueError(f"int4 packs two values per byte and ships "
+                             f"h/t-element blocks: h={h} must divide 2t="
+                             f"{2 * t}")
+        pa = jax.lax.all_to_all(nibble_pack(q), axis,
+                                split_axis=x.ndim - 1,
+                                concat_axis=x.ndim - 1, tiled=True)
+        qa = nibble_unpack(pa)          # t source copies of the local block
+        r = qa.astype(jnp.int32).reshape(*x.shape[:-1], t, h // t) \
+              .sum(axis=-2)             # exact: |r| <= 7t
+        rq = jnp.clip(jnp.round(r.astype(jnp.float32) / t),
+                      -7, 7).astype(jnp.int8)
+        pg = jax.lax.all_gather(nibble_pack(rq), axis, axis=x.ndim - 1,
+                                tiled=True)
+        return chunk_dequantize(nibble_unpack(pg), scales * t, chunk,
+                                x.dtype)
     qs = jax.lax.psum_scatter(q, axis, scatter_dimension=x.ndim - 1,
                               tiled=True)
     qg = jax.lax.all_gather(qs, axis, axis=x.ndim - 1, tiled=True)

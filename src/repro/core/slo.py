@@ -26,7 +26,7 @@ from typing import Dict
 
 from repro.config.base import HardwareProfile, H100_NODE, ModelConfig
 from repro.core.commodel import DEFAULT_QUANT_CHUNK, CommOp, comm_ops_for, \
-    cp_comm_ops, cp_shard_len
+    cp_comm_ops, cp_shard_len, kv_handoff_ops
 
 
 @dataclasses.dataclass(frozen=True)
@@ -96,7 +96,9 @@ def predict_slo(cfg: ModelConfig, s_p: int, s_d: int, t: int = 1, p: int = 1,
                 c: int = 1, inflight: int = 1, quant: str = None,
                 quant_chunk: int = DEFAULT_QUANT_CHUNK,
                 hit_rate: float = 0.0,
-                hit_len: int = None) -> SLOReport:
+                hit_len: int = None,
+                handoff_pages: int = 0,
+                page_size: int = 16) -> SLOReport:
     """Predict TTFT/TPOT/E2E for a (t, c, p) layout of one inference
     request.  Context parallelism (``c > 1``, DESIGN.md §9) divides the
     prefill compute over t·c workers and adds the per-layer ring latency
@@ -136,22 +138,37 @@ def predict_slo(cfg: ModelConfig, s_p: int, s_d: int, t: int = 1, p: int = 1,
     planner's ranking shifts under template-heavy traffic: layouts that
     buy prefill time (CP's ring, prefill-lean PP splits) lose their edge
     when prefill is mostly skipped, while decode-bound layouts keep
-    theirs."""
+    theirs.
+
+    ``handoff_pages`` (DESIGN.md §14) prices disaggregated admission: the
+    request's prompt KV was prefilled on a SEPARATE pool and its full
+    blocks cross the interconnect before this layout's decode starts —
+    TTFT gains one cross-node α plus ``handoff_pages`` × page bytes at
+    ``hw.inter_bw`` (``commodel.kv_handoff_ops``), and the bytes join
+    ``comm_volume``.  ``handoff_pages=0`` is bitwise the colocated
+    report."""
     if not 0.0 <= hit_rate <= 1.0:
         raise ValueError(f"hit_rate must be in [0, 1], got {hit_rate}")
+    if handoff_pages < 0:
+        raise ValueError(
+            f"handoff_pages must be >= 0, got {handoff_pages}")
     if hit_rate > 0.0:
         hit = s_p - 1 if hit_len is None else int(hit_len)
         if not 1 <= hit < s_p:
             raise ValueError(
                 f"hit_len must be in [1, s_p) — the final position is "
                 f"always prefilled — got {hit} at s_p={s_p}")
+        # the handoff term rides through both legs: mixing is linear, so
+        # the constant addend survives exactly once
         cold = predict_slo(cfg, s_p, s_d, t, p, hw=hw, ov=ov, batch=batch,
                            dtype_bytes=dtype_bytes, c=c, inflight=inflight,
-                           quant=quant, quant_chunk=quant_chunk)
+                           quant=quant, quant_chunk=quant_chunk,
+                           handoff_pages=handoff_pages, page_size=page_size)
         hot = predict_slo(cfg, s_p - hit, s_d, t, p, hw=hw, ov=ov,
                           batch=batch, dtype_bytes=dtype_bytes, c=c,
                           inflight=inflight, quant=quant,
-                          quant_chunk=quant_chunk)
+                          quant_chunk=quant_chunk,
+                          handoff_pages=handoff_pages, page_size=page_size)
         mix = lambda a, b: (1.0 - hit_rate) * a + hit_rate * b
         breakdown = dict(cold.breakdown)
         breakdown.update({"hit_rate": hit_rate, "hit_len": hit,
@@ -197,16 +214,30 @@ def predict_slo(cfg: ModelConfig, s_p: int, s_d: int, t: int = 1, p: int = 1,
                 cross = dataclasses.replace(o, count=n_cross)
                 total += _collective_time(intra, hw, False)
                 total += _collective_time(cross, hw, True)
-            elif (quant is not None and o.dtype_bytes == 1
-                  and o.collective in ("reducescatter", "allgather")):
-                # quantized two-step payload rows: bytes-only — the α is
-                # carried once per quantized AR by the amax-allreduce row
-                # (see the quant paragraph in the docstring)
+            elif (quant is not None and o.dtype_bytes <= 1
+                  and o.collective in ("reducescatter", "allgather",
+                                       "alltoall")):
+                # quantized two-step payload rows (1-byte int8/fp8, or the
+                # half-byte int4 alltoall/allgather pair): bytes-only — the
+                # α is carried once per quantized AR by the amax-allreduce
+                # row (see the quant paragraph in the docstring)
                 bw = hw.inter_bw if tp_cross else hw.intra_bw
                 total += o.wire_bytes / bw
             else:
                 total += _collective_time(o, hw, tp_cross)
         return total
+
+    # disaggregated admission (DESIGN.md §14): KV pages cross from the
+    # prefill pool before decode starts — one cross-node α (the transfer
+    # is a single batched send) plus the pages' wire bytes
+    handoff_s = 0.0
+    if handoff_pages:
+        handoff_bytes = float(sum(
+            o.wire_bytes for o in kv_handoff_ops(cfg, handoff_pages,
+                                                 page_size,
+                                                 b=dtype_bytes)))
+        handoff_s = hw.inter_alpha + handoff_bytes / hw.inter_bw
+        comm_volume += handoff_bytes
 
     eff = _prefill_eff(n_active, ov)
     prefill_flops = 2 * n_active * s_p * batch
@@ -214,6 +245,7 @@ def predict_slo(cfg: ModelConfig, s_p: int, s_d: int, t: int = 1, p: int = 1,
     # (CP shards the prefill sequence — each worker runs s_p/c positions)
     prefill_compute = prefill_flops / (max(t * c, 1) * hw.peak_flops * eff)
     ttft = (ov.request_overhead + prefill_compute + phase_comm("prefill")
+            + handoff_s
             + (p * ov.stage_overhead_prefill if p > 1 else 0.0)
             + (2 * cfg.num_layers * (c - 1) * ov.cp_round_overhead
                if c > 1 else 0.0))
@@ -234,14 +266,18 @@ def predict_slo(cfg: ModelConfig, s_p: int, s_d: int, t: int = 1, p: int = 1,
     tpot_effective = tpot / depth_eff if p > 1 else tpot
 
     e2e = ttft + max(s_d - 1, 0) * tpot_effective
-    return SLOReport(ttft, tpot, e2e, comm_volume, {
+    breakdown = {
         "prefill_compute": prefill_compute,
         "prefill_comm": phase_comm("prefill"),
         "decode_compute": decode_compute,
         "decode_comm_per_tok": decode_comm,
         "pp_occupancy": occ, "tpot_effective": tpot_effective,
         "nodes": nodes, "tp_cross": tp_cross, "cross_links": cross_links,
-    }, occupancy=occ)
+    }
+    if handoff_pages:
+        breakdown["handoff_s"] = handoff_s
+        breakdown["handoff_bytes"] = handoff_bytes
+    return SLOReport(ttft, tpot, e2e, comm_volume, breakdown, occupancy=occ)
 
 
 # ---------------------------------------------------------------------------

@@ -28,13 +28,20 @@ import jax.numpy as jnp
 
 from repro.kernels.quant_collective.ref import (chunk_amax_ref,
                                                 chunk_dequantize_ref,
-                                                chunk_quantize_ref)
+                                                chunk_quantize_ref,
+                                                nibble_pack_ref,
+                                                nibble_unpack_ref)
 from repro.kernels.quant_collective.quant_kernel import (
-    chunk_amax_pallas, chunk_dequantize_pallas, chunk_quantize_pallas)
+    chunk_amax_pallas, chunk_dequantize_pallas, chunk_quantize_pallas,
+    nibble_pack_pallas, nibble_unpack_pallas)
 
+# int4 has no native jnp dtype: values live in int8 storage (|q| <= 7) and
+# ``nibble_pack``/``nibble_unpack`` convert to/from the 2-per-byte uint8
+# wire form the packed all-to-all actually ships (DESIGN.md §12).
 QUANT_DTYPES = {
     "int8": jnp.int8,
     "fp8": jnp.float8_e4m3fn,
+    "int4": jnp.int8,
 }
 
 DEFAULT_CHUNK = 128
@@ -51,6 +58,19 @@ DEFAULT_CHUNK = 128
 QUANT_TOLERANCE = {
     "int8": {"token_match_floor": 0.90, "logit_drift_ceiling": 0.25},
     "fp8": {"token_match_floor": 0.75, "logit_drift_ceiling": 0.30},
+    # int4 keeps the full +-7 grid (no /t headroom — the packed all-to-all
+    # sums exactly in int32, see ``collective_qmax``) but requantizes the
+    # reduced row back onto the 4-bit grid before the gather, so per-psum
+    # error is bounded by t * (amax/7) and grows with the TP degree.
+    # Calibrated like the rows above, from the BENCH_decode series: worst
+    # full-bench token_match 0.4688 / drift 1.632 (fused-q4 at t=4; the
+    # t=2 hybrid sits near 0.59-0.61 match).  The dry-run bench samples
+    # only 16 tokens, so its match rate quantizes to 1/16 steps and
+    # bottoms out at 5/16 = 0.3125 — the floor sits one flipped token
+    # below that.  4-bit wire is the aggressive end of the tradeoff — the
+    # contract only pins that it does not silently get WORSE, not that it
+    # is deployable for greedy decode.
+    "int4": {"token_match_floor": 0.25, "logit_drift_ceiling": 2.0},
 }
 
 
@@ -61,6 +81,12 @@ def collective_qmax(quant: str, t: int) -> float:
     every |q| <= qmax; capping qmax at ``range/t`` bounds the reduce-scatter
     partial sum by the wire dtype's max — the integer sum is exact and the
     fp8 sum cannot saturate.
+
+    int4 is the exception: ``floor(7/t)`` would collapse the grid to +-1 at
+    t >= 4, so the packed path keeps the full +-7 range and gets exactness
+    elsewhere — the all-to-all ships per-rank nibbles unsummed, every rank
+    accumulates its hidden block in int32 (|sum| <= 7t, exact), and only the
+    requantize-by-t before the gather rounds (DESIGN.md §12).
     """
     if quant not in QUANT_DTYPES:
         raise ValueError(f"unknown quant mode {quant!r}; "
@@ -69,6 +95,8 @@ def collective_qmax(quant: str, t: int) -> float:
         raise ValueError(f"t must be >= 1, got {t}")
     if quant == "int8":
         return float(127 // t)
+    if quant == "int4":
+        return 7.0
     return 448.0 / t
 
 
@@ -110,3 +138,19 @@ def chunk_dequantize(q, scales, chunk: int = DEFAULT_CHUNK,
                                        out_dtype=out_dtype,
                                        interpret=interpret)
     return chunk_dequantize_ref(q, scales, chunk, out_dtype)
+
+
+def nibble_pack(q):
+    """int4 values (int8 storage, |q| <= 7) -> 2-per-byte uint8 wire form."""
+    pallas, interpret = _use_pallas()
+    if pallas:
+        return nibble_pack_pallas(q, interpret=interpret)
+    return nibble_pack_ref(q)
+
+
+def nibble_unpack(b):
+    """2-per-byte uint8 wire form -> sign-extended int8 values."""
+    pallas, interpret = _use_pallas()
+    if pallas:
+        return nibble_unpack_pallas(b, interpret=interpret)
+    return nibble_unpack_ref(b)

@@ -102,6 +102,58 @@ def chunk_quantize_pallas(x, scales, chunk: int = 128, qdtype=jnp.int8,
     return out[:rows, :h].reshape(x.shape)
 
 
+def _pack_kernel(q_ref, o_ref):
+    q = q_ref[...].astype(jnp.uint8)
+    br, hp = q.shape
+    pairs = q.reshape(br, hp // 2, 2)
+    o_ref[...] = (pairs[..., 0] & 0xF) | ((pairs[..., 1] & 0xF) << 4)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def nibble_pack_pallas(q, block_rows: int = 256, interpret: bool = False):
+    qf, rows, h = _flatten_rows(q)
+    if h % 2:
+        raise ValueError(f"nibble packing needs an even last axis, got {h}")
+    block_rows = min(block_rows, rows)
+    qf = _pad_axes(qf, block_rows, 2)
+    n = qf.shape[0] // block_rows
+    out = pl.pallas_call(
+        _pack_kernel,
+        grid=(n,),
+        in_specs=[pl.BlockSpec((block_rows, h), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows, h // 2), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((qf.shape[0], h // 2), jnp.uint8),
+        interpret=interpret,
+    )(qf)
+    return out[:rows].reshape(*q.shape[:-1], h // 2)
+
+
+def _unpack_kernel(b_ref, o_ref):
+    b = b_ref[...]
+    br, m = b.shape
+    lo = (b & 0xF).astype(jnp.int8)
+    hi = ((b >> 4) & 0xF).astype(jnp.int8)
+    pairs = jnp.stack([(lo ^ 8) - 8, (hi ^ 8) - 8], axis=-1)
+    o_ref[...] = pairs.reshape(br, 2 * m).astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def nibble_unpack_pallas(b, block_rows: int = 256, interpret: bool = False):
+    bf, rows, m = _flatten_rows(b)
+    block_rows = min(block_rows, rows)
+    bf = _pad_axes(bf, block_rows, 1)
+    n = bf.shape[0] // block_rows
+    out = pl.pallas_call(
+        _unpack_kernel,
+        grid=(n,),
+        in_specs=[pl.BlockSpec((block_rows, m), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows, 2 * m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bf.shape[0], 2 * m), jnp.int8),
+        interpret=interpret,
+    )(bf)
+    return out[:rows].reshape(*b.shape[:-1], 2 * m)
+
+
 def _dequantize_kernel(q_ref, s_ref, o_ref, *, chunk):
     q = q_ref[...].astype(jnp.float32)
     br, hp = q.shape

@@ -115,6 +115,19 @@ def _write_slot(big, small, slot):
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
+def _write_page(pools, rows, page):
+    """Land one exported KV page's rows {k, v: [L, ps, kv, D]} at physical
+    page ``page`` of the device page pools ([L, P, ps, kv, D] leaves, page
+    axis 1) — the import half of the disaggregated KV handoff
+    (DESIGN.md §14).  ``page`` is a traced scalar, so repeated imports
+    compile once per pool shape, like ``_copy_page_rows``."""
+    def one(a, d):
+        return jax.lax.dynamic_update_slice_in_dim(a, d[:, None], page,
+                                                   axis=1)
+    return jax.tree.map(one, pools, rows)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
 def _copy_page_rows(pools, src, dst):
     """Replay one ``KVPool`` copy-on-write on the device page pools: copy
     physical page ``src``'s rows into page ``dst`` on every leaf (page axis
@@ -153,7 +166,8 @@ class _BackendBase:
                  num_pages: Optional[int] = None, c: int = 1,
                  quant_collectives: Optional[str] = None,
                  quant_chunk: int = DEFAULT_QUANT_CHUNK,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False,
+                 pool: Optional[KVPool] = None, owner_base: int = 0):
         if not cfg.is_decoder:
             raise ValueError(f"{cfg.name} is encoder-only: no decode")
         if quant_collectives is not None and paged:
@@ -180,6 +194,13 @@ class _BackendBase:
         self.inflight = 1
         self.group_size = self.num_slots
         self.paged = bool(paged)
+        if owner_base < 0:
+            raise ValueError(
+                f"owner_base must be >= 0 (negative ids belong to the "
+                f"prefix index), got {owner_base}")
+        self._owner_base = int(owner_base)
+        if pool is not None and not paged:
+            raise ValueError("a shared KVPool needs paged=True")
         if self.paged:
             if cfg.family != "dense":
                 raise ValueError(
@@ -191,12 +212,27 @@ class _BackendBase:
                     f"{cfg.name} uses a sliding window — serve it contiguous")
             self.page_size = int(page_size)
             self.pages_per_slot = -(-self.max_len // self.page_size)
-            if num_pages is None:
-                # capacity parity with the contiguous slot cache, +1 for the
-                # reserved scratch page; a smaller pool oversubscribes
-                # (long-context mixes that would OOM contiguous slots)
-                num_pages = 1 + self.num_slots * self.pages_per_slot
-            self.pool = KVPool(num_pages, self.page_size)
+            if pool is not None:
+                # disaggregated pools (DESIGN.md §14) share ONE page space:
+                # both backends' block tables name pages of the same host
+                # allocator, so pages the prefill pool wrote are adoptable
+                # by the decode pool; owner_base keeps their slot owner ids
+                # disjoint.  NOTE: device page pools stay per-backend —
+                # sharing the allocator shares *addressing*, the page
+                # CONTENT still crosses via export_page/import_page.
+                if pool.page_size != self.page_size:
+                    raise ValueError(
+                        f"shared pool page_size {pool.page_size} != "
+                        f"backend page_size {self.page_size}")
+                self.pool = pool
+            else:
+                if num_pages is None:
+                    # capacity parity with the contiguous slot cache, +1 for
+                    # the reserved scratch page; a smaller pool
+                    # oversubscribes (long-context mixes that would OOM
+                    # contiguous slots)
+                    num_pages = 1 + self.num_slots * self.pages_per_slot
+                self.pool = KVPool(num_pages, self.page_size)
             self.block_tables = np.zeros(
                 (self.num_slots, self.pages_per_slot), np.int32)
             self._decodable: set = set()
@@ -208,8 +244,14 @@ class _BackendBase:
         if not self.paged:
             raise RuntimeError("chunked-prefill API needs paged=True")
 
+    def _owner(self, slot: int) -> int:
+        """Pool owner id of a local slot.  Backends sharing one KVPool
+        (disaggregated pools, DESIGN.md §14) claim disjoint owner ranges
+        via ``owner_base``; single-pool backends keep owner == slot."""
+        return self._owner_base + slot
+
     def _set_table(self, slot: int) -> None:
-        table = self.pool.block_table(slot)
+        table = self.pool.block_table(self._owner(slot))
         row = np.zeros(self.pages_per_slot, np.int32)
         row[:len(table)] = table
         self.block_tables[slot] = row
@@ -252,10 +294,16 @@ class _BackendBase:
                                        if self.prefix_index else 0)
         if optimistic:
             return free >= self._pages_for(self._alloc_len(prompt_len))
+        # committed growth of THIS backend's own slots (index owners never
+        # grow — negative ids — and a pool-sharing sibling backend tracks
+        # its own commitments: its live pages are already out of ``free``,
+        # and its future growth is recovered by preemption, not reserved
+        # across the pool boundary)
         committed = sum(
-            max(0, self._worst.get(s, 0) - len(self.pool.block_table(s)))
-            for s in self.pool.owners()
-            if s >= 0)     # index owners never grow (negative ids)
+            max(0, self._worst.get(o - self._owner_base, 0)
+                - len(self.pool.block_table(o)))
+            for o in self.pool.owners()
+            if 0 <= o - self._owner_base < self.num_slots)
         need = self._pages_for(max(self._alloc_len(prompt_len),
                                    prompt_len + max_new_tokens - 1))
         return free - committed >= need
@@ -283,16 +331,39 @@ class _BackendBase:
         """Copy physical page src -> dst on this backend's device pools."""
         raise NotImplementedError
 
+    # -- KV-page handoff (disaggregated pools, DESIGN.md §14) --------------
+    def export_page(self, page: int) -> dict:
+        """Read physical ``page``'s KV rows off this backend's device page
+        pools as host arrays {k, v: [L, ps, kv, D]} — the unit the
+        disaggregated prefill→decode handoff ships
+        (``commodel.kv_handoff_ops``)."""
+        self._require_paged()
+        return {key: np.asarray(self.cache[key][:, page])
+                for key in ("k", "v")}
+
+    def import_page(self, page: int, data: dict) -> int:
+        """Land exported KV rows {k, v: [L, ps, kv, D]} at physical
+        ``page`` of this backend's device page pools; returns the device
+        bytes written — the measured half of the handoff invariant
+        (asserted equal to ``kv_handoff_ops``'s closed form per request)."""
+        self._require_paged()
+        rows = {key: jnp.asarray(np.asarray(data[key]),
+                                 jnp.dtype(self.cfg.dtype))
+                for key in ("k", "v")}
+        self.cache = _write_page(self.cache, rows, jnp.int32(page))
+        return sum(int(a.nbytes) for a in rows.values())
+
     def begin_prefill(self, slot: int, prompt_len: int,
                       max_new_tokens: int = 1) -> None:
         """Allocate the slot's pages for a new request's prompt (CP-padded
         when c > 1) and commit its worst-case decode growth
         (see ``can_admit``)."""
         self._require_paged()
-        self.pool.free(slot)                # defensive: slot may be reused
+        self.pool.free(self._owner(slot))   # defensive: slot may be reused
         self._decodable.discard(slot)
         self._claim_guard(
-            lambda: self.pool.allocate(slot, self._alloc_len(prompt_len)))
+            lambda: self.pool.allocate(self._owner(slot),
+                                       self._alloc_len(prompt_len)))
         self._worst[slot] = self._pages_for(
             max(self._alloc_len(prompt_len),
                 prompt_len + max_new_tokens - 1))
@@ -313,18 +384,20 @@ class _BackendBase:
         if self.prefix_index is None:
             self.begin_prefill(slot, len(prompt), max_new_tokens)
             return 0
-        self.pool.free(slot)                # defensive: slot may be reused
+        self.pool.free(self._owner(slot))   # defensive: slot may be reused
         self._decodable.discard(slot)
         hit = self.prefix_index.lookup(prompt)
         if not hit.hit:
             self.begin_prefill(slot, len(prompt), max_new_tokens)
             return 0
-        self.pool.adopt(slot, hit.pages, hit.length)
+        self.pool.adopt(self._owner(slot), hit.pages, hit.length)
         try:
             self._claim_guard(
-                lambda: self.pool.extend(slot, self._alloc_len(len(prompt))))
+                lambda: self.pool.extend(self._owner(slot),
+                                         self._alloc_len(len(prompt))))
         except MemoryError:
-            self.pool.free(slot)     # nothing half-claimed: extend is atomic
+            # nothing half-claimed: extend is atomic
+            self.pool.free(self._owner(slot))
             raise
         self._apply_cow()
         self._worst[slot] = self._pages_for(
@@ -342,7 +415,8 @@ class _BackendBase:
         if not self.paged or self.prefix_index is None:
             return 0
         tokens = np.asarray(tokens, np.int32).reshape(-1)
-        return self.prefix_index.insert(tokens, self.pool.block_table(slot))
+        return self.prefix_index.insert(
+            tokens, self.pool.block_table(self._owner(slot)))
 
     def prefill_chunk(self, slot: int, tokens, start: int) -> int:
         """One chunked-prefill pass for ``tokens`` at positions
@@ -402,7 +476,8 @@ class _BackendBase:
         pos = np.asarray(pos)
         for slot in sorted(self._decodable):
             self._claim_guard(
-                lambda s=slot: self.pool.extend(s, int(pos[s]) + 1))
+                lambda s=slot: self.pool.extend(self._owner(s),
+                                                int(pos[s]) + 1))
             self._set_table(slot)
         self._apply_cow()
         bt = self.block_tables.copy()
@@ -472,7 +547,8 @@ class _BackendBase:
                 raise IndexError(f"slot {s} out of range")
         if self.paged:
             for s in slots:
-                self.pool.free(s)           # no-op for never-admitted slots
+                # no-op for never-admitted slots
+                self.pool.free(self._owner(s))
                 self.block_tables[s] = 0
                 self._decodable.discard(s)
                 self._worst.pop(s, None)
@@ -543,10 +619,12 @@ class ModelBackend(_BackendBase):
     def __init__(self, cfg: ModelConfig, params, num_slots: int,
                  max_len: int = 256, paged: bool = False,
                  page_size: int = 16, num_pages: Optional[int] = None,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False, pool: Optional[KVPool] = None,
+                 owner_base: int = 0):
         super().__init__(cfg, num_slots, max_len, t=1, p=1, paged=paged,
                          page_size=page_size, num_pages=num_pages,
-                         prefix_cache=prefix_cache)
+                         prefix_cache=prefix_cache, pool=pool,
+                         owner_base=owner_base)
         self.model = get_model(cfg)
         self.params = params
         if self.paged:
@@ -603,13 +681,15 @@ class TPBackend(_BackendBase):
                  num_pages: Optional[int] = None, c: int = 1,
                  quant_collectives: Optional[str] = None,
                  quant_chunk: int = DEFAULT_QUANT_CHUNK,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False, pool: Optional[KVPool] = None,
+                 owner_base: int = 0):
         super().__init__(cfg, num_slots, max_len, t=t, p=1, c=c,
                          paged=paged, page_size=page_size,
                          num_pages=num_pages,
                          quant_collectives=quant_collectives,
                          quant_chunk=quant_chunk,
-                         prefix_cache=prefix_cache)
+                         prefix_cache=prefix_cache, pool=pool,
+                         owner_base=owner_base)
         if cfg.family != "dense":
             raise ValueError("explicit TP engine covers the dense family")
         self.params = params
@@ -666,7 +746,7 @@ class TPBackend(_BackendBase):
         return self._prefill(self.params, self._as_prompt(prompt))
 
     def _seed_slot_pages(self, small, slot: int) -> None:
-        n = len(self.pool.block_table(slot))
+        n = len(self.pool.block_table(self._owner(slot)))
         bt = jnp.asarray(self.block_tables[slot:slot + 1, :n])
         self.cache = self._seed(self.cache, small, bt)
 
@@ -749,13 +829,15 @@ class PPBackend(_BackendBase):
                  c: int = 1, inflight: int = 1,
                  quant_collectives: Optional[str] = None,
                  quant_chunk: int = DEFAULT_QUANT_CHUNK,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False, pool: Optional[KVPool] = None,
+                 owner_base: int = 0):
         super().__init__(cfg, num_slots, max_len, t=t, p=p, c=c,
                          paged=paged, page_size=page_size,
                          num_pages=num_pages,
                          quant_collectives=quant_collectives,
                          quant_chunk=quant_chunk,
-                         prefix_cache=prefix_cache)
+                         prefix_cache=prefix_cache, pool=pool,
+                         owner_base=owner_base)
         if cfg.family != "dense":
             raise ValueError("PipelineEngine covers the dense family")
         if inflight < 1 or num_slots % inflight:
@@ -828,7 +910,7 @@ class PPBackend(_BackendBase):
             for s in range(self.p)]
 
     def _seed_slot_pages(self, small, slot: int) -> None:
-        n = len(self.pool.block_table(slot))
+        n = len(self.pool.block_table(self._owner(slot)))
         bt = jnp.asarray(self.block_tables[slot:slot + 1, :n])
         self.caches = [self._seed(self.caches[s], small[s], bt)
                        for s in range(self.p)]
@@ -841,6 +923,27 @@ class PPBackend(_BackendBase):
     def _copy_page(self, src: int, dst: int) -> None:
         s, d = jnp.int32(src), jnp.int32(dst)
         self.caches = [_copy_page_rows(c, s, d) for c in self.caches]
+
+    def export_page(self, page: int) -> dict:
+        """Full-depth page rows, stages concatenated over the layer axis —
+        the same [L, ps, kv, D] unit the single-pool backends export."""
+        self._require_paged()
+        return {key: np.concatenate(
+                    [np.asarray(c[key][:, page]) for c in self.caches])
+                for key in ("k", "v")}
+
+    def import_page(self, page: int, data: dict) -> int:
+        self._require_paged()
+        total = 0
+        for s in range(self.p):
+            lo, hi = px.stage_layer_range(self.cfg, self.p, s)
+            rows = {key: jnp.asarray(np.asarray(data[key][lo:hi]),
+                                     jnp.dtype(self.cfg.dtype))
+                    for key in ("k", "v")}
+            self.caches[s] = _write_page(self.caches[s], rows,
+                                         jnp.int32(page))
+            total += sum(int(a.nbytes) for a in rows.values())
+        return total
 
     def decode_step(self, tokens, pos) -> np.ndarray:
         if self.paged:
@@ -878,7 +981,7 @@ class PPBackend(_BackendBase):
                 if lo <= slot < lo + G:
                     self._claim_guard(
                         lambda s=slot: self.pool.extend(
-                            s, int(full_pos[s]) + 1))
+                            self._owner(s), int(full_pos[s]) + 1))
                     self._set_table(slot)
             self._apply_cow()
             bt = self.block_tables[lo:lo + G].copy()
@@ -955,7 +1058,9 @@ def make_backend(kind: str, cfg: ModelConfig, params, num_slots: int,
                  c: int = 1, inflight: int = 1,
                  quant_collectives: Optional[str] = None,
                  quant_chunk: int = DEFAULT_QUANT_CHUNK,
-                 prefix_cache: bool = False) -> DecodeBackend:
+                 prefix_cache: bool = False,
+                 pool: Optional[KVPool] = None,
+                 owner_base: int = 0) -> DecodeBackend:
     """Backend factory keyed by engine kind: "gspmd" | "tp" | "pp".
 
     Degenerate layouts are rejected, not coerced — a silently bumped t/c/p
@@ -973,10 +1078,14 @@ def make_backend(kind: str, cfg: ModelConfig, params, num_slots: int,
     collectives and the paged engines run full-width — both reject it.
     ``prefix_cache=True`` (DESIGN.md §13) attaches a cross-request
     ``PrefixIndex`` to the page pool: paged-only, c=1-only (the suffix
-    prefill needs the chunk-offset path).
+    prefill needs the chunk-offset path).  ``pool``/``owner_base``
+    (DESIGN.md §14) make this backend share another backend's ``KVPool``
+    under a disjoint slot-owner range — how the disaggregated prefill and
+    decode pools address one page space while their device page pools stay
+    separate (content crosses via ``export_page``/``import_page``).
     """
     kw = dict(paged=paged, page_size=page_size, num_pages=num_pages,
-              prefix_cache=prefix_cache)
+              prefix_cache=prefix_cache, pool=pool, owner_base=owner_base)
     if kind != "pp" and inflight != 1:
         raise ValueError(
             "in-flight microbatching fills the PP decode bubble; the "

@@ -45,16 +45,19 @@ class PermanentFault(RuntimeError):
     """An unrecoverable failure: retrying cannot help."""
 
 
-SITES = ("decode", "prefill", "pool", "pp_transfer")
+SITES = ("decode", "prefill", "pool", "pp_transfer", "handoff")
 
 # how an injected fault at each site manifests, and with what weight the
-# random mode picks each kind (delays only exist at the transfer site —
-# a slow boundary hop is a latency spike, not an exception)
+# random mode picks each kind (delays only exist at the transfer sites —
+# a slow boundary hop or a slow KV-page ship is a latency spike, not an
+# exception; "handoff" is the disaggregated prefill→decode page transfer,
+# DESIGN.md §14)
 _KINDS = {
     "decode": ("transient", "permanent"),
     "prefill": ("transient", "permanent"),
     "pool": ("oom",),
     "pp_transfer": ("delay", "transient"),
+    "handoff": ("delay", "transient", "permanent"),
 }
 
 

@@ -54,8 +54,10 @@ import dataclasses
 import time
 from typing import Dict, List, Optional, Sequence
 
+import jax.numpy as jnp
 import numpy as np
 
+from repro.core.commodel import kv_handoff_ops, kv_handoff_pages
 from repro.runtime.backends import DecodeBackend
 from repro.runtime.faults import PermanentFault, TransientFault
 from repro.runtime.request import Request, RequestMetrics
@@ -621,15 +623,19 @@ class Scheduler:
             hit = 0
             if paged:
                 # prefix-cache lookup (DESIGN.md §13) covers fresh prompts
-                # only: a recompute prefix ends in generated tokens the
-                # index never saw, and recomputing it cold keeps the
-                # preemption token-identity check an honest recompute
-                if resume is None and \
-                        getattr(self.backend, "prefix_index", None) \
-                        is not None:
+                # AND recompute prefixes: a recompute prefix begins with
+                # the very prompt whose blocks the index pinned at first
+                # admission, so re-admission adopts those pages and
+                # recomputes only from the first novel position on.  The
+                # §10 token-identity assertion stays honest — generated
+                # tokens never enter the index (``cache_prefix`` indexes
+                # prompts only), so a hit can never cover the recomputed
+                # tail whose final token the assertion checks.
+                if getattr(self.backend, "prefix_index", None) is not None:
                     hit = self.backend.begin_prefill_cached(slot, prefix,
                                                             budget)
-                    m.cached_prefix_len = hit
+                    if resume is None:
+                        m.cached_prefix_len = hit
                 else:
                     self.backend.begin_prefill(slot, len(prefix), budget)
                 if self.chunk_size is not None:
@@ -651,7 +657,7 @@ class Scheduler:
             self._queue.note_prefill(slot)
             now = self.clock.now()
             if resume is not None:
-                self._log_recompute(req.rid, len(prefix))
+                self._log_recompute(req.rid, len(prefix), cached=hit)
                 self._resume_active(slot, req, m, resume, len(prefix), tok)
                 continue
             if paged and hasattr(self.backend, "cache_prefix"):
@@ -667,14 +673,20 @@ class Scheduler:
             if reason:
                 self._finish(slot, reason, now)
 
-    def _log_recompute(self, rid: int, prefix_len: int) -> None:
-        ops = self.backend.prefill_comm_ops(prefix_len)
+    def _log_recompute(self, rid: int, prefix_len: int,
+                       cached: int = 0) -> None:
+        """Log one recompute pass.  A warm recompute (prefix-cache hit on
+        re-admission) only executes ``prefix_len - cached`` positions, so
+        predicted wire bytes scale with the honest suffix — counts are
+        prefill-length-invariant either way."""
+        ops = self.backend.prefill_comm_ops(prefix_len - cached)
         self.step_log.append(StepRecord(
             step=self._step_i, n_active=len(self.active),
             collective_counts=self._count(ops),
             predicted_wire_bytes=sum(o.wire_bytes for o in ops),
             measured_transfers=self.backend.drain_transfers(),
-            phase="recompute", rid=rid, prefix_len=prefix_len))
+            phase="recompute", rid=rid, prefix_len=prefix_len,
+            cached_prefix_len=cached or None))
         self._step_i += 1
 
     def _resume_active(self, slot: int, req: Request, m: RequestMetrics,
@@ -947,3 +959,473 @@ def serve(backend: DecodeBackend, requests: Sequence[Request],
           clock=None) -> ServingReport:
     """One-shot convenience wrapper: schedule ``requests`` to completion."""
     return Scheduler(backend, clock=clock).run(requests)
+
+
+# ---------------------------------------------------------------------------
+# disaggregated prefill/decode pools (DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+
+class _ShiftedClock:
+    """The decode pool's view of time when both pools run in ONE process:
+    ``now()`` is the base clock minus every second the prefill pool has spent
+    computing and shipping pages so far.  On real disaggregated hardware
+    those seconds overlap the decode pool's work; subtracting them is what
+    makes the in-process measurement honest — decode-side TTFT/TPOT read as
+    if the prefill pool were a separate machine.  With a ``VirtualClock``
+    base the offset stays 0 (prefill passes take no virtual time) and the
+    two timelines coincide exactly."""
+
+    def __init__(self, base):
+        self.base = base
+        self.offset = 0.0
+
+    def now(self) -> float:
+        return self.base.now() - self.offset
+
+    def wait_until(self, t: float) -> None:
+        self.base.wait_until(t + self.offset)
+
+
+@dataclasses.dataclass
+class HandoffRecord:
+    """One request's prefill→decode KV handoff, predicted next to measured.
+
+    ``queue_s`` and ``prefill_s`` live on the BASE clock (the prefill pool's
+    own timeline); ``submitted`` is the decode-clock instant the request
+    joined the decode pool's queue — its rewritten arrival, from which every
+    decode-side metric of this request is measured."""
+
+    rid: int
+    pages: int                # full prompt blocks shipped (kv_handoff_pages)
+    bytes: int                # measured: device bytes landed by import_page
+    predicted_bytes: float    # commodel.kv_handoff_ops closed form
+    queue_s: float            # arrival → prefill start on the prefill pool
+    prefill_s: float          # prefill-pool busy span (compute + page ship)
+    submitted: float          # decode-clock arrival at the decode pool
+    first_token: int          # prefill pool's final-position greedy token —
+    #                           asserted equal to the decode pool's first
+    #                           streamed token (cross-pool identity, §14)
+
+
+@dataclasses.dataclass
+class DisaggReport:
+    """A disaggregated run: the decode pool's ServingReport (every
+    per-request metric, on the decode clock) plus the handoff ledger.
+    phase="handoff" StepRecords are interleaved into ``decode.steps``."""
+
+    decode: ServingReport
+    handoffs: List[HandoffRecord]
+    wall_time: float          # base-clock span: prefill + ship + decode
+
+    @property
+    def metrics(self) -> List[RequestMetrics]:
+        return self.decode.metrics
+
+    @property
+    def total_tokens(self) -> int:
+        return self.decode.total_tokens
+
+    def tokens_by_rid(self) -> Dict[int, List[int]]:
+        return self.decode.tokens_by_rid()
+
+    @property
+    def handoff_pages(self) -> int:
+        return sum(h.pages for h in self.handoffs)
+
+    @property
+    def handoff_bytes(self) -> int:
+        return sum(h.bytes for h in self.handoffs)
+
+    def summary(self) -> dict:
+        out = self.decode.summary()
+        queue = [h.queue_s for h in self.handoffs]
+        out["disagg"] = {
+            "handoffs": len(self.handoffs),
+            "handoff_pages": self.handoff_pages,
+            "handoff_bytes": self.handoff_bytes,
+            "predicted_handoff_bytes": float(
+                sum(h.predicted_bytes for h in self.handoffs)),
+            "prefill_pool_busy_s": float(
+                sum(h.prefill_s for h in self.handoffs)),
+            "prefill_queue_p95_s": float(np.percentile(queue, 95))
+            if queue else 0.0,
+            "base_wall_time_s": self.wall_time,
+        }
+        return out
+
+
+class DisaggScheduler:
+    """Two engine pools, one serving plane (DESIGN.md §14).
+
+    Fresh long-prompt admissions route to a *prefill pool* (monolithic
+    batch-1 prefill, CP or TP layout); short prompts go straight to the
+    *decode pool* (a full ``Scheduler`` over a paged, prefix-cached
+    backend).  When the prefill pool finishes a prompt it hands the KV off:
+    the prompt's full blocks ship page-by-page (``export_page`` →
+    ``import_page``, measured device bytes), the pages are then pinned into
+    the SHARED prefix index (``cache_prefix``), the prefill slot is freed,
+    and the request is resubmitted to the decode pool — whose cache-aware
+    admission (§13) hits on the freshly indexed blocks and prefills only
+    the final partial page.  Head-of-line blocking dies here: a 2k-token
+    prompt no longer stalls the decode pool's running batch for its whole
+    prefill, only for one ≤ page_size suffix chunk.
+
+    The handoff is a first-class *modeled* transfer: each one logs a
+    phase="handoff" StepRecord whose predicted wire bytes
+    (``commodel.kv_handoff_ops`` — pages × kv_page_bytes) are asserted
+    EQUAL to the measured device bytes the import landed, per request.
+
+    Invariants (asserted at runtime):
+
+      * **Cross-pool token identity.**  The decode pool's first streamed
+        token must equal the greedy token the prefill pool computed at the
+        prompt's final position.  Greedy decode is deterministic, so this
+        holds whenever both pools' prefill numerics agree bitwise — which
+        they do when the pools share a layout kind (e.g. TP/TP).  A CP
+        prefill pool's projection matmuls tile differently (~1e-7 KV noise,
+        see tests/test_cp.py), giving token-level but not guaranteed-bitwise
+        equality; the assertion is what surfaces a pairing that drifts.
+      * **Handoff accounting.**  measured bytes == predicted bytes ==
+        ``kv_handoff_pages(prompt_len, page_size)`` × page bytes, exactly.
+
+    Timeline semantics: the decode pool runs on a ``_ShiftedClock`` that
+    subtracts prefill-pool busy time from the base clock, so decode-side
+    TTFT/TPOT measure the decode pool as dedicated hardware.  Handed-off
+    requests' arrivals are rewritten to the handoff-completion instant on
+    the decode clock (prefill-side latency lives in ``HandoffRecord``);
+    deadlines therefore apply per pool — the prefill queue sheds against
+    the original arrival, the decode pool against the rewritten one.
+    """
+
+    def __init__(self, prefill_backend: DecodeBackend,
+                 decode_backend: DecodeBackend, clock=None,
+                 chunk_size: int = None, admission: str = "conservative",
+                 faults=None, route_prompt_len: Optional[int] = None,
+                 retry_limit: int = 3, retry_backoff: float = 0.05):
+        if not getattr(prefill_backend, "paged", False) \
+                or not getattr(decode_backend, "paged", False):
+            raise ValueError(
+                "disaggregated pools hand KV off as pages — construct BOTH "
+                "backends with paged=True")
+        if decode_backend.prefix_index is None:
+            raise ValueError(
+                "the decode pool admits handed-off requests through its "
+                "prefix index — construct the decode backend with "
+                "prefix_cache=True (DESIGN.md §13/§14)")
+        if prefill_backend.pool is not decode_backend.pool:
+            raise ValueError(
+                "disaggregated pools must share ONE KVPool (construct the "
+                "prefill backend with pool=decode_backend.pool) — the "
+                "handoff names pages of a common address space")
+        pr = (prefill_backend._owner_base,
+              prefill_backend._owner_base + prefill_backend.num_slots)
+        dr = (decode_backend._owner_base,
+              decode_backend._owner_base + decode_backend.num_slots)
+        if max(pr[0], dr[0]) < min(pr[1], dr[1]):
+            raise ValueError(
+                f"pool-sharing backends need disjoint owner ranges, got "
+                f"{pr} and {dr} — construct one with "
+                f"owner_base=<the other's num_slots>")
+        if prefill_backend.cfg is not decode_backend.cfg \
+                and prefill_backend.cfg != decode_backend.cfg:
+            raise ValueError(
+                "both pools must serve the same model config — cross-pool "
+                "token identity is asserted per request")
+        self.prefill_backend = prefill_backend
+        self.decode_backend = decode_backend
+        # one index, both pools: the prefill pool INSERTS finished prompts
+        # (and may evict cold entries under page pressure, §13), the decode
+        # pool HITS on them at admission
+        prefill_backend.prefix_index = decode_backend.prefix_index
+        self.index = decode_backend.prefix_index
+        self.base_clock = clock if clock is not None else WallClock()
+        self._dclock = _ShiftedClock(self.base_clock)
+        self.decode = Scheduler(decode_backend, clock=self._dclock,
+                                chunk_size=chunk_size, admission=admission,
+                                faults=faults, retry_limit=retry_limit,
+                                retry_backoff=retry_backoff)
+        ps = decode_backend.page_size
+        self.route_prompt_len = (2 * ps if route_prompt_len is None
+                                 else int(route_prompt_len))
+        if self.route_prompt_len < ps:
+            raise ValueError(
+                f"route_prompt_len {self.route_prompt_len} < page_size "
+                f"{ps}: a prompt with no full block has nothing to hand "
+                f"off — the decode pool would cold-prefill it anyway")
+        self.faults = faults
+        self.retry_limit = int(retry_limit)
+        self.retry_backoff = float(retry_backoff)
+        self.pending: List[Request] = []      # prefill-pool queue, by arrival
+        self.handoffs: List[HandoffRecord] = []
+        self.finished_prefill: List[RequestMetrics] = []  # shed/errored here
+        self._expected_first: Dict[int, int] = {}
+        self._pre_retries: Dict[int, int] = {}
+        self._rids: set = set()
+        self._b = jnp.dtype(decode_backend.cfg.dtype).itemsize
+
+    # ------------------------------------------------------------- intake
+    def submit(self, requests) -> None:
+        """Route: prompts of ``route_prompt_len``+ tokens queue for the
+        prefill pool; everything else goes straight to the decode pool
+        (its own ``submit`` validates capacity).  Prefill-routed requests
+        are checked against BOTH pools now, so a request that could never
+        fit fails at submit, not mid-run at handoff."""
+        reqs = [requests] if isinstance(requests, Request) else list(requests)
+        routed: List[Request] = []
+        for r in reqs:
+            if r.rid in self._rids:
+                raise ValueError(
+                    f"duplicate rid {r.rid}: already submitted this run")
+            self._rids.add(r.rid)
+            if r.prompt_len >= self.route_prompt_len:
+                routed.append(r)
+            else:
+                self.decode.submit(r)
+        pb, db = self.prefill_backend, self.decode_backend
+        usable = db.pool.num_pages - 1          # minus the scratch page
+        for r in routed:
+            pre_len = pb._alloc_len(r.prompt_len)
+            if pre_len > pb.max_len:
+                raise ValueError(
+                    f"request {r.rid} prompt ({pre_len} CP-padded "
+                    f"positions) > prefill pool max_len {pb.max_len}")
+            need = r.prompt_len + r.max_new_tokens - 1
+            if need > db.max_len:
+                raise ValueError(
+                    f"request {r.rid} needs {need} cache positions > "
+                    f"decode pool max_len {db.max_len}")
+            need_pages = max(-(-pre_len // pb.page_size),
+                             -(-need // db.page_size))
+            if need_pages > usable:
+                raise ValueError(
+                    f"request {r.rid} needs {need_pages} pages > shared "
+                    f"pool capacity {usable}")
+            bisect.insort(self.pending, r, key=lambda x: x.arrival)
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel wherever the request lives — the prefill-pool queue or
+        anywhere inside the decode pool."""
+        for req in self.pending:
+            if req.rid == rid:
+                self.pending.remove(req)
+                self._fail(req, "cancelled")
+                return True
+        return self.decode.cancel(rid)
+
+    # ------------------------------------------------------------- faults
+    def _apply_fault(self, site: str) -> None:
+        """Prefill-pool fault draws run on the BASE clock: a delay here
+        stretches the prefill pool's timeline (and so the clock offset),
+        never the decode pool's."""
+        if self.faults is None:
+            return
+        f = self.faults.draw(site)
+        if f is None:
+            return
+        if f.kind == "delay":
+            self.base_clock.wait_until(self.base_clock.now() + f.delay_s)
+        elif f.kind == "oom":
+            raise MemoryError(f"injected fault at {site}")
+        elif f.kind == "transient":
+            raise TransientFault(f"injected fault at {site}")
+        else:
+            raise PermanentFault(f"injected fault at {site}")
+
+    def _backoff(self, attempt: int) -> None:
+        self.base_clock.wait_until(
+            self.base_clock.now()
+            + self.retry_backoff * 2.0 ** (attempt - 1))
+
+    def _fail(self, req: Request, reason: str) -> None:
+        """Finish a request on the prefill side (shed / cancelled /
+        errored before handoff) — its metrics row joins the final report
+        with no tokens, timeline on the base clock."""
+        m = RequestMetrics(rid=req.rid, prompt_len=req.prompt_len,
+                           arrival=req.arrival)
+        m.retries = self._pre_retries.pop(req.rid, 0)
+        m.finished = self.base_clock.now()
+        m.finish_reason = reason
+        self.finished_prefill.append(m)
+
+    def _shed_pending(self, now: float) -> None:
+        for req in [r for r in self.pending
+                    if Scheduler._expired(r, now, True)]:
+            self.pending.remove(req)
+            self._fail(req, "deadline")
+
+    # ------------------------------------------------------------- handoff
+    def _prefill_arrived(self, now: float) -> bool:
+        """Prefill + hand off every pending request whose arrival has
+        passed, in arrival order.  Returns True if anything happened."""
+        did = False
+        while self.pending and self.pending[0].arrival <= now:
+            if not self._prefill_one(self.pending[0]):
+                break                     # deferred on pool pressure
+            did = True
+            now = self.base_clock.now()
+            self._shed_pending(now)       # the pass moved the clock
+        return did
+
+    def _prefill_one(self, req: Request) -> bool:
+        """One monolithic prefill + page handoff.  Returns False when the
+        request was deferred (shared pool exhausted while the decode pool
+        still holds pages — retried next iteration), True otherwise."""
+        be = self.prefill_backend
+        t_start = self.base_clock.now()
+        try:
+            # slot 0: the prefill pool runs one batch-1 pass at a time
+            be.begin_prefill(0, req.prompt_len, 1)
+        except MemoryError:
+            # pool exhausted and the index drained of cold entries: wait
+            # for the decode pool to free pages — unless it is idle too,
+            # in which case the pages simply don't exist
+            if (self.decode.active or self.decode.prefilling
+                    or self.decode._queue.in_flight):
+                return False
+            self.pending.remove(req)
+            self._fail(req, "error")
+            return True
+        self.pending.remove(req)
+        queue_s = max(0.0, t_start - req.arrival)
+        attempt = 0
+        while True:
+            try:
+                self._apply_fault("prefill")
+                tok = be.prefill_whole(0, req.prompt)
+                break
+            except (TransientFault, MemoryError):
+                # injected prefill oom retries too: the slot's pages are
+                # already claimed, and re-prefilling them is idempotent
+                attempt += 1
+                if attempt > self.retry_limit:
+                    be.free_slots([0])
+                    self._fail(req, "error")
+                    return True
+                self._pre_retries[req.rid] = \
+                    self._pre_retries.get(req.rid, 0) + 1
+                self._backoff(attempt)
+            except PermanentFault:
+                be.free_slots([0])
+                self._fail(req, "error")
+                return True
+        # ship the prompt's full blocks BEFORE indexing them: an index
+        # entry must never name a page whose decode-side content has not
+        # landed — a hit on it would silently decode over garbage KV
+        n_pages = kv_handoff_pages(req.prompt_len, be.page_size)
+        table = [int(p) for p in
+                 be.pool.block_table(be._owner(0))[:n_pages]]
+        measured, shipped, attempt = 0, 0, 0
+        while shipped < len(table):
+            try:
+                self._apply_fault("handoff")
+                pg = table[shipped]
+                measured += self.decode_backend.import_page(
+                    pg, be.export_page(pg))
+                shipped += 1
+            except TransientFault:
+                attempt += 1
+                if attempt > self.retry_limit:
+                    be.free_slots([0])
+                    self._fail(req, "error")
+                    return True
+                self._pre_retries[req.rid] = \
+                    self._pre_retries.get(req.rid, 0) + 1
+                self._backoff(attempt)
+            except PermanentFault:
+                be.free_slots([0])
+                self._fail(req, "error")
+                return True
+        be.cache_prefix(0, req.prompt)        # pins the shipped pages
+        hit = self.index.lookup(np.asarray(req.prompt, np.int32))
+        # §13 caps a lookup one position short, so a block-aligned prompt
+        # hits one block fewer than it shipped — the last shipped page
+        # stays pinned for FUTURE prompts sharing the prefix
+        if list(hit.pages) != table[:len(hit.pages)] \
+                or len(hit.pages) < n_pages - 1:
+            raise RuntimeError(
+                f"handoff pages diverged for rid {req.rid}: shipped "
+                f"{table}, index holds {list(hit.pages)}")
+        be.free_slots([0])
+        elapsed = self.base_clock.now() - t_start
+        # dedicated-hardware semantics: the decode clock does not see the
+        # prefill pool's busy span
+        self._dclock.offset += elapsed
+        submitted = self._dclock.now()
+        ops = kv_handoff_ops(be.cfg, n_pages, be.page_size, b=self._b)
+        predicted = sum(o.wire_bytes for o in ops)
+        if measured != int(predicted):
+            raise RuntimeError(
+                f"handoff bytes diverged for rid {req.rid}: measured "
+                f"{measured} != predicted {int(predicted)} "
+                f"({n_pages} pages × kv_page_bytes)")
+        self.decode.step_log.append(StepRecord(
+            step=self.decode._step_i, n_active=len(self.decode.active),
+            collective_counts=Scheduler._count(ops),
+            predicted_wire_bytes=predicted,
+            measured_transfers={"count": n_pages, "bytes": measured},
+            phase="handoff", rid=req.rid,
+            prefix_len=n_pages * be.page_size, wall_s=elapsed))
+        self.handoffs.append(HandoffRecord(
+            rid=req.rid, pages=n_pages, bytes=measured,
+            predicted_bytes=predicted, queue_s=queue_s, prefill_s=elapsed,
+            submitted=submitted, first_token=int(tok)))
+        self._expected_first[req.rid] = int(tok)
+        self.decode.submit(dataclasses.replace(req, arrival=submitted))
+        return True
+
+    # ------------------------------------------------------------- driving
+    def run(self, requests=None) -> DisaggReport:
+        """Drive both pools until every submitted request has finished."""
+        t0 = self.base_clock.now()
+        d0 = self._dclock.now()
+        if requests is not None:
+            self.submit(requests)
+        while True:
+            now = self.base_clock.now()
+            self._shed_pending(now)
+            progressed = self._prefill_arrived(now)
+            decode_idle = (not self.decode.active
+                           and not self.decode.prefilling
+                           and not self.decode._queue.in_flight)
+            if decode_idle and self.pending and not progressed:
+                # the decode pool would nap until ITS next arrival; if the
+                # prefill pool's next request is due sooner on the base
+                # clock, advance to it instead of letting a due handoff
+                # wait behind the nap
+                next_dec = (self.decode.queue[0].arrival
+                            + self._dclock.offset
+                            if self.decode.queue else float("inf"))
+                if self.pending[0].arrival <= next_dec:
+                    self.base_clock.wait_until(self.pending[0].arrival)
+                    continue
+            alive = self.decode.step()
+            if not alive and not self.pending:
+                break
+        # fold prefill-side retries into the decode-side metrics rows
+        metrics = sorted(self.decode.finished + self.finished_prefill,
+                         key=lambda m: m.rid)
+        for m in metrics:
+            m.retries += self._pre_retries.pop(m.rid, 0)
+        # the §14 cross-pool identity: greedy decode is deterministic, so
+        # any divergence means the handed-off KV pages are not the pages
+        # the decode pool would have written itself
+        for m in metrics:
+            exp = self._expected_first.get(m.rid)
+            if exp is not None and m.tokens and m.tokens[0] != exp:
+                raise RuntimeError(
+                    f"cross-pool token divergence for rid {m.rid}: decode "
+                    f"pool streamed {m.tokens[0]}, prefill pool computed "
+                    f"{exp} — handed-off KV differs from native prefill")
+        dec = ServingReport(metrics=metrics, steps=self.decode.step_log,
+                            wall_time=self._dclock.now() - d0)
+        report = DisaggReport(decode=dec, handoffs=self.handoffs,
+                              wall_time=self.base_clock.now() - t0)
+        self.decode.finished, self.decode.step_log = [], []
+        self.decode._step_i = 0
+        self.decode._rids = set()
+        self.decode._last_sig, self.decode._idle_iters = None, 0
+        self.handoffs, self.finished_prefill = [], []
+        self._expected_first, self._pre_retries = {}, {}
+        self._rids = set()
+        return report

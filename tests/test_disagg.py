@@ -1,0 +1,394 @@
+"""Disaggregated prefill/decode pools with modeled KV handoff (ISSUE 10).
+
+1. Handoff units: ``commodel.kv_handoff_pages`` / ``kv_handoff_ops`` closed
+   forms, and the device-level ``export_page``/``import_page`` roundtrip
+   whose measured bytes ARE the closed form.
+2. Token identity: a mixed trace served disaggregated (prefill pool +
+   decode pool sharing one KVPool) produces token streams bitwise identical
+   to the colocated run and to undisturbed solo runs — including under
+   decode-pool preemption (warm recompute over handed-off pages) and
+   injected faults on either side of the pool boundary.
+3. Accounting: every handoff logs a phase="handoff" StepRecord whose
+   predicted wire bytes (pages × kv_page_bytes) equal the measured device
+   bytes exactly, and the shared pool drains to zero leaked pages.
+4. Analytics: ``slo.predict_slo(handoff_pages=...)`` prices the
+   interconnect term (bitwise unchanged at 0) and
+   ``planner.plan_disagg`` prefers disagg on prefill-heavy mixes and
+   colocated on short-chat traffic.
+5. Warm recompute (DESIGN.md §13 x §10): a preempted request's re-admission
+   takes a prefix-cache hit on its own prompt blocks instead of
+   recomputing cold.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import commodel as cm
+from repro.core.planner import TrafficClass, plan_disagg, recommend_disagg
+from repro.core.slo import predict_slo
+from repro.models.transformer import get_model
+from repro.runtime.backends import make_backend
+from repro.runtime.engine import InferenceEngine
+from repro.runtime.faults import Fault, FaultInjector
+from repro.runtime.request import Request
+from repro.runtime.scheduler import DisaggScheduler, Scheduler, VirtualClock
+
+needs_mesh = pytest.mark.skipif(len(jax.devices()) < 4,
+                                reason="needs 4 host-platform devices")
+
+MAX_LEN = 64
+PAGE = 4
+ROUTE = 2 * PAGE          # DisaggScheduler's default routing threshold
+
+# (prompt_len, max_new): rids 1 and 3 route to the prefill pool (>= ROUTE)
+LENS = [(7, 8), (13, 6), (5, 8), (11, 6), (6, 7), (17, 5)]
+
+POOL_LAYOUTS = [
+    pytest.param("gspmd", dict(), id="gspmd-gspmd"),
+    pytest.param("tp", dict(t=2), marks=needs_mesh, id="tp2-tp2"),
+]
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("llama32-3b").reduced(num_layers=2)
+    params = get_model(cfg).init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _requests(cfg, n=len(LENS)):
+    rng = np.random.default_rng(0)
+    return [Request(rid=i,
+                    prompt=rng.integers(2, cfg.vocab_size, s).astype(np.int32),
+                    max_new_tokens=m)
+            for i, (s, m) in enumerate(LENS[:n])]
+
+
+def _refs(cfg, params, reqs):
+    eng = InferenceEngine(cfg, params, max_len=MAX_LEN, decode_chunk=1)
+    return {r.rid: np.asarray(eng.generate(
+        jnp.asarray(r.prompt)[None, :],
+        max_new_tokens=r.max_new_tokens))[0].tolist() for r in reqs}
+
+
+def _pools(cfg, params, kind="gspmd", num_pages=None, dec_slots=3, **kw):
+    """A decode pool + a prefill pool sharing its KVPool."""
+    pages_per = -(-MAX_LEN // PAGE)
+    if num_pages is None:
+        num_pages = 1 + (dec_slots + 1) * pages_per
+    dec = make_backend(kind, cfg, params, num_slots=dec_slots,
+                       max_len=MAX_LEN, paged=True, page_size=PAGE,
+                       num_pages=num_pages, prefix_cache=True, **kw)
+    pre = make_backend(kind, cfg, params, num_slots=1, max_len=MAX_LEN,
+                       paged=True, page_size=PAGE, pool=dec.pool,
+                       owner_base=dec_slots, **kw)
+    return pre, dec
+
+
+# ---------------------------------------------------------------------------
+# 1. closed forms and the device roundtrip
+# ---------------------------------------------------------------------------
+
+
+def test_kv_handoff_closed_forms():
+    cfg = get_config("llama32-3b")
+    assert cm.kv_handoff_pages(0, 16) == 0
+    assert cm.kv_handoff_pages(15, 16) == 0
+    assert cm.kv_handoff_pages(16, 16) == 1
+    assert cm.kv_handoff_pages(33, 16) == 2      # partial tail never ships
+    with pytest.raises(ValueError):
+        cm.kv_handoff_pages(-1, 16)
+    with pytest.raises(ValueError):
+        cm.kv_handoff_pages(16, 0)
+    ops = cm.kv_handoff_ops(cfg, 5, 16, b=2)
+    assert [o.collective for o in ops] == ["send", "recv"]
+    assert all(o.phase == "handoff" and o.workers == 2 for o in ops)
+    # wire bytes: the send carries pages × page bytes, the recv is the
+    # same transfer's other end (factor 0 — never double-charged)
+    assert sum(o.wire_bytes for o in ops) == \
+        5 * cm.kv_page_bytes(cfg, 16, b=2)
+
+
+def test_export_import_roundtrip(setup):
+    """A page prefilled on the prefill pool lands bitwise on the decode
+    pool's device arrays, and the measured bytes are the closed form."""
+    cfg, params = setup
+    pre, dec = _pools(cfg, params)
+    req = _requests(cfg)[5]                       # 17 tokens = 4 full pages
+    pre.begin_prefill(0, req.prompt_len, 1)
+    pre.prefill_whole(0, req.prompt)
+    pages = [int(p) for p in pre.pool.block_table(pre._owner(0))]
+    n_full = cm.kv_handoff_pages(req.prompt_len, PAGE)
+    assert n_full == len(pages) - 1               # 17 = 4 full + 1 partial
+    b = jnp.dtype(cfg.dtype).itemsize
+    for pg in pages[:n_full]:
+        data = pre.export_page(pg)
+        got = dec.import_page(pg, data)
+        assert got == cm.kv_page_bytes(cfg, PAGE, b=b)
+        back = dec.export_page(pg)
+        for key in ("k", "v"):
+            np.testing.assert_array_equal(back[key], data[key])
+    pre.free_slots([0])
+
+
+# ---------------------------------------------------------------------------
+# 2. + 3. disaggregated serving: identity and accounting
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind,kw", POOL_LAYOUTS)
+def test_disagg_streams_bitwise_identical(setup, kind, kw):
+    """Solo == colocated == disaggregated, and every handoff's predicted
+    bytes equal the measured device bytes."""
+    cfg, params = setup
+    reqs = _requests(cfg)
+    refs = _refs(cfg, params, reqs)
+
+    colo = make_backend(kind, cfg, params, num_slots=3, max_len=MAX_LEN,
+                        paged=True, page_size=PAGE, prefix_cache=True, **kw)
+    rep_colo = Scheduler(colo, clock=VirtualClock(),
+                         chunk_size=8).run(_requests(cfg))
+
+    pre, dec = _pools(cfg, params, kind, **kw)
+    ds = DisaggScheduler(pre, dec, clock=VirtualClock(), chunk_size=8)
+    rep = ds.run(_requests(cfg))
+
+    got = rep.tokens_by_rid()
+    for r in reqs:
+        assert got[r.rid] == refs[r.rid], f"request {r.rid} diverged"
+    assert rep.tokens_by_rid() == rep_colo.tokens_by_rid()
+    assert all(m.finish_reason == "length" for m in rep.metrics)
+
+    # exactly the >= ROUTE prompts handed off, with closed-form page counts
+    long_rids = {r.rid for r in reqs if r.prompt_len >= ROUTE}
+    assert {h.rid for h in rep.handoffs} == long_rids
+    b = jnp.dtype(cfg.dtype).itemsize
+    for h in rep.handoffs:
+        want = cm.kv_handoff_pages(reqs[h.rid].prompt_len, PAGE)
+        assert h.pages == want
+        assert h.bytes == h.predicted_bytes == \
+            want * cm.kv_page_bytes(cfg, PAGE, b=b)
+
+    # one phase="handoff" StepRecord per handoff, predicted == measured
+    recs = [s for s in rep.decode.steps if s.phase == "handoff"]
+    assert {r.rid for r in recs} == long_rids
+    for rec in recs:
+        assert rec.collective_counts == {"send": 1, "recv": 1}
+        assert rec.predicted_wire_bytes == rec.measured_transfers["bytes"]
+        assert rec.measured_transfers["count"] == \
+            cm.kv_handoff_pages(reqs[rec.rid].prompt_len, PAGE)
+
+    # handed-off requests hit the index at decode-pool admission: their
+    # suffix prefill covers at most one page of positions
+    for m in rep.metrics:
+        if m.rid in long_rids:
+            assert m.cached_prefix_len is not None
+            assert m.prompt_len - m.cached_prefix_len <= PAGE
+
+    # zero-leak drain: only index pins (negative owners) survive the run
+    assert all(o < 0 for o in dec.pool.owners())
+    dec.prefix_index.clear()
+    assert dec.pool.free_pages == dec.pool.num_pages - 1
+
+
+def test_disagg_preemption_warm_recompute_across_boundary(setup):
+    """An injected pool OOM preempts a HANDED-OFF request mid-decode in
+    the decode pool; its re-admission takes a prefix-cache hit on its own
+    prompt blocks — pages the PREFILL pool wrote and shipped — and every
+    stream still equals the solo run.  (A scripted fault, not real
+    exhaustion: genuine pressure drains the index via ``_claim_guard``
+    before the preemption fires, so the warm path needs room to hit.)"""
+    cfg, params = setup
+    reqs = _requests(cfg)
+    refs = _refs(cfg, params, reqs)
+    pre, dec = _pools(cfg, params)
+    inj = FaultInjector.scripted({("pool", 6): Fault("pool", "oom")})
+    ds = DisaggScheduler(pre, dec, clock=VirtualClock(), faults=inj)
+    rep = ds.run(_requests(cfg))
+    got = rep.tokens_by_rid()
+    for r in reqs:
+        assert got[r.rid] == refs[r.rid], f"request {r.rid} diverged"
+    assert rep.decode.preemptions == 1
+    # warm recompute (DESIGN.md §13 x §10): the recompute pass adopted the
+    # preempted request's indexed prompt blocks — and the victim is a
+    # handed-off long request, so the adopted pages crossed the pool
+    # boundary before the preemption ever happened
+    recs = [s for s in rep.decode.steps if s.phase == "recompute"]
+    assert len(recs) == 1 and recs[0].cached_prefix_len
+    victim = reqs[recs[0].rid]
+    assert victim.prompt_len >= ROUTE, "victim should be a handed-off long"
+    assert recs[0].cached_prefix_len < recs[0].prefix_len
+    assert all(o < 0 for o in dec.pool.owners())
+
+
+def test_warm_recompute_single_pool(setup):
+    """Satellite: the same §13 x §10 interplay without disaggregation — a
+    preempted request on a prefix-cached colocated backend re-admits warm
+    (its prompt blocks are still indexed) and streams stay bitwise."""
+    cfg, params = setup
+    reqs = _requests(cfg)
+    refs = _refs(cfg, params, reqs)
+    backend = make_backend("gspmd", cfg, params, num_slots=3,
+                           max_len=MAX_LEN, paged=True, page_size=PAGE,
+                           prefix_cache=True)
+    inj = FaultInjector.scripted({("pool", 3): Fault("pool", "oom")})
+    rep = Scheduler(backend, clock=VirtualClock(),
+                    faults=inj).run(_requests(cfg))
+    got = rep.tokens_by_rid()
+    for r in reqs:
+        assert got[r.rid] == refs[r.rid], f"request {r.rid} diverged"
+    assert rep.preemptions == 1
+    recs = [s for s in rep.steps if s.phase == "recompute"]
+    warm = [r for r in recs if r.cached_prefix_len]
+    assert warm, "re-admission should have hit the index"
+    for rec in warm:
+        # the hit never covers the recomputed tail the §10 assertion
+        # checks: generated tokens are not indexed
+        assert rec.cached_prefix_len < rec.prefix_len
+
+
+def test_disagg_deadline_sheds_prefill_queue(setup):
+    """A hopeless TTFT deadline sheds the request out of the prefill-pool
+    queue; everyone else finishes normally."""
+    cfg, params = setup
+    reqs = _requests(cfg, 4)
+    # rid 1 routes long; its TTFT budget expires before the run starts
+    reqs[1].ttft_deadline = 0.5
+    pre, dec = _pools(cfg, params)
+    clock = VirtualClock()
+    sched = DisaggScheduler(pre, dec, clock=clock)
+    sched.submit(reqs)
+    clock.advance(1.0)
+    rep = sched.run()
+    by = {m.rid: m for m in rep.metrics}
+    assert by[1].finish_reason == "deadline" and not by[1].tokens
+    for rid in (0, 2, 3):
+        assert by[rid].finish_reason == "length"
+    assert not [h for h in rep.handoffs if h.rid == 1]
+
+
+def test_disagg_faults_across_pool_boundary(setup):
+    """Scripted faults on both sides of the boundary: transient prefill
+    faults retry (retries folded into the request's metrics), a permanent
+    handoff fault error-finishes ONLY its request, and surviving streams
+    stay bitwise identical."""
+    cfg, params = setup
+    reqs = _requests(cfg)
+    refs = _refs(cfg, params, reqs)
+
+    # transient at the prefill pool's first pass: retried, stream intact
+    pre, dec = _pools(cfg, params)
+    faults = FaultInjector.scripted(
+        {("prefill", 0): Fault("prefill", "transient")})
+    rep = DisaggScheduler(pre, dec, clock=VirtualClock(),
+                          faults=faults).run(_requests(cfg))
+    got = rep.tokens_by_rid()
+    for r in reqs:
+        assert got[r.rid] == refs[r.rid]
+    assert sum(m.retries for m in rep.metrics) >= 1
+
+    # permanent at the second handoff page ship: that long request errors,
+    # every other stream is untouched
+    pre, dec = _pools(cfg, params)
+    faults = FaultInjector.scripted(
+        {("handoff", 1): Fault("handoff", "permanent")})
+    rep = DisaggScheduler(pre, dec, clock=VirtualClock(),
+                          faults=faults).run(_requests(cfg))
+    by = {m.rid: m for m in rep.metrics}
+    first_long = min(r.rid for r in reqs if r.prompt_len >= ROUTE)
+    assert by[first_long].finish_reason == "error"
+    for r in reqs:
+        if r.rid != first_long:
+            assert rep.tokens_by_rid()[r.rid] == refs[r.rid]
+    assert all(o < 0 for o in dec.pool.owners())
+
+
+def test_disagg_constructor_validation(setup):
+    cfg, params = setup
+    dec = make_backend("gspmd", cfg, params, num_slots=2, max_len=MAX_LEN,
+                       paged=True, page_size=PAGE, prefix_cache=True)
+    lone = make_backend("gspmd", cfg, params, num_slots=1, max_len=MAX_LEN,
+                        paged=True, page_size=PAGE)
+    with pytest.raises(ValueError, match="share ONE KVPool"):
+        DisaggScheduler(lone, dec)
+    pre_overlap = make_backend("gspmd", cfg, params, num_slots=1,
+                               max_len=MAX_LEN, paged=True, page_size=PAGE,
+                               pool=dec.pool, owner_base=0)
+    with pytest.raises(ValueError, match="disjoint owner ranges"):
+        DisaggScheduler(pre_overlap, dec)
+    pre = make_backend("gspmd", cfg, params, num_slots=1, max_len=MAX_LEN,
+                       paged=True, page_size=PAGE, pool=dec.pool,
+                       owner_base=2)
+    nocache = make_backend("gspmd", cfg, params, num_slots=2,
+                           max_len=MAX_LEN, paged=True, page_size=PAGE)
+    with pytest.raises(ValueError, match="prefix index"):
+        DisaggScheduler(pre, nocache)
+    with pytest.raises(ValueError, match="route_prompt_len"):
+        DisaggScheduler(pre, dec, route_prompt_len=PAGE - 1)
+    with pytest.raises(ValueError, match="needs paged=True"):
+        make_backend("gspmd", cfg, params, num_slots=1, max_len=MAX_LEN,
+                     pool=dec.pool)
+    with pytest.raises(ValueError, match="owner_base"):
+        make_backend("gspmd", cfg, params, num_slots=1, max_len=MAX_LEN,
+                     paged=True, page_size=PAGE, owner_base=-1)
+
+
+# ---------------------------------------------------------------------------
+# 4. analytics: the SLO interconnect term and the planner's decision rule
+# ---------------------------------------------------------------------------
+
+
+def test_predict_slo_handoff_term():
+    cfg = get_config("llama32-3b")
+    base = predict_slo(cfg, 16, 64, 2, 1)
+    same = predict_slo(cfg, 16, 64, 2, 1, handoff_pages=0)
+    assert same.ttft == base.ttft and same.e2e == base.e2e
+    assert same.comm_volume == base.comm_volume
+    assert "handoff_s" not in same.breakdown
+
+    off = predict_slo(cfg, 16, 64, 2, 1, handoff_pages=16, page_size=16)
+    want_bytes = sum(o.wire_bytes
+                     for o in cm.kv_handoff_ops(cfg, 16, 16, b=2))
+    assert off.breakdown["handoff_bytes"] == want_bytes
+    assert off.comm_volume == base.comm_volume + want_bytes
+    assert off.ttft == pytest.approx(base.ttft + off.breakdown["handoff_s"])
+    # decode terms never move: the handoff happens before decode starts
+    assert off.tpot == base.tpot
+    with pytest.raises(ValueError):
+        predict_slo(cfg, 16, 64, 2, 1, handoff_pages=-1)
+    # rides through the hit_rate mix exactly once (linearity)
+    mixed = predict_slo(cfg, 16, 64, 2, 1, hit_rate=0.5, hit_len=8,
+                        handoff_pages=4)
+    plain = predict_slo(cfg, 16, 64, 2, 1, hit_rate=0.5, hit_len=8)
+    four = predict_slo(cfg, 16, 64, 2, 1, handoff_pages=4)
+    assert mixed.ttft == pytest.approx(
+        plain.ttft + (four.ttft - predict_slo(cfg, 16, 64, 2, 1).ttft))
+
+
+def test_planner_disagg_decision_rule():
+    """Prefill-heavy mixes rank a disagg split first; short-chat-only
+    traffic keeps colocated (splitting only removes decode chips)."""
+    cfg = get_config("llama32-3b")
+    mixed = [TrafficClass("chat", 24, 128, 4.0),
+             TrafficClass("summarize", 2048, 32, 0.6)]
+    chat = [TrafficClass("chat", 24, 128, 4.0)]
+    best_mixed = recommend_disagg(cfg, 8, mixed, objective="tpot")
+    best_chat = recommend_disagg(cfg, 8, chat, objective="tpot")
+    assert best_mixed.mode == "disagg"
+    assert best_chat.mode == "colocated"
+    # the disagg decode pool only ranks c == 1 layouts (§13 admission)
+    cands = plan_disagg(cfg, 8, mixed, objective="tpot")
+    assert all(c.decode_layout[1] == 1
+               for c in cands if c.mode == "disagg")
+    # every candidate's utilization is a feasible load
+    assert all(c.utilization < 1.0 or c.score == float("inf")
+               for c in cands)
+    with pytest.raises(ValueError):
+        plan_disagg(cfg, 8, [], objective="tpot")
+    with pytest.raises(ValueError):
+        TrafficClass("bad", 16, 16, 0.0)
+    with pytest.raises(ValueError):
+        plan_disagg(cfg, 8, chat, objective="bogus")

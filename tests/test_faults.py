@@ -139,7 +139,8 @@ def test_fault_validation():
         FaultInjector(rates={"bogus": 0.1})
     with pytest.raises(ValueError):
         FaultInjector.scripted({("decode", 0): Fault("prefill", "transient")})
-    assert set(SITES) == {"decode", "prefill", "pool", "pp_transfer"}
+    assert set(SITES) == {"decode", "prefill", "pool", "pp_transfer",
+                          "handoff"}
 
 
 # ---------------------------------------------------------------------------

@@ -1,8 +1,8 @@
 """KVPool block-allocator invariants (ISSUE 4 satellite; COW — ISSUE 9).
 
 Deterministic unit tests always run; hypothesis drives randomized
-alloc/extend/free/fork/adopt schedules against the same invariants when the
-optional dep is present:
+alloc/extend/free/fork/adopt/handoff schedules against the same invariants
+when the optional dep is present:
 
   * a page is never double-assigned (live tables are disjoint unless
     explicitly shared via ``fork`` / ``adopt``);
@@ -201,6 +201,79 @@ def test_adopt_builds_owner_from_live_pages():
     _assert_invariants(pool)
 
 
+def test_adopt_handoff_chain_refcounts():
+    """The §14 handoff lifecycle on a shared pool: a prefill-pool owner
+    allocates, the prefix index adopts (negative owner), the prefill slot
+    frees — pages stay live through the index — then a decode-pool slot
+    adopts the cached pages, the index evicts, and the decode free returns
+    everything.  Zero pages leak at every stage."""
+    pool = KVPool(num_pages=8, page_size=4)
+    t = pool.allocate(4, 16)                 # prefill-pool owner range
+    assert len(t) == 4 and pool.free_pages == 3
+    assert pool.adopt(-1, t, 16) == t        # index holds the blocks
+    pool.free(4)                             # prefill slot recycled
+    assert pool.free_pages == 3, "index hold must keep pages live"
+    assert all(pool.page_refcount(pg) == 1 for pg in t)
+    assert pool.adopt(0, t, 16) == t         # decode-pool cache hit
+    assert all(pool.page_refcount(pg) == 2 for pg in t)
+    pool.free(-1)                            # index eviction under a hit
+    assert pool.free_pages == 3, "held pages freed by eviction"
+    assert pool.block_table(0) == t
+    _assert_invariants(pool)
+    pool.free(0)
+    assert pool.free_pages == 7 and not pool.owners()
+    _assert_invariants(pool)
+
+
+def test_double_adopt_cow_isolates_siblings():
+    """Two decode slots adopting the SAME index pages (a popular prefix)
+    share them three ways; the first to decode past the partial tail
+    copy-on-writes a private page while the sibling and the index keep the
+    original table, and frees in any order keep live pages live."""
+    pool = KVPool(num_pages=8, page_size=4)
+    t = pool.allocate(4, 7)                  # 2 pages, partial tail
+    pool.adopt(-1, t, 7)
+    pool.free(4)
+    pool.adopt(0, t, 7)
+    pool.adopt(1, t, 7)                      # double adopt: refcount 3
+    assert pool.page_refcount(t[-1]) == 3
+    grown = pool.extend(0, 9)                # decode crosses the tail
+    events = pool.take_cow_events()
+    assert len(events) == 1 and events[0].src == t[-1]
+    assert grown[1] != t[1] and grown[0] == t[0]
+    assert pool.block_table(1) == t, "sibling table mutated by COW"
+    assert pool.page_refcount(t[-1]) == 2    # index + sibling
+    _assert_invariants(pool)
+    pool.free(1)
+    assert pool.page_refcount(t[-1]) == 1    # index alone
+    pool.free(-1)
+    pool.free(0)
+    assert pool.free_pages == 7 and not pool.owners()
+    _assert_invariants(pool)
+
+
+def test_adopt_then_evict_keeps_holder_alive():
+    """Index eviction (freeing the negative owner) while a decode slot
+    still reads the pages must not recycle them: the holder's table stays
+    intact and the pages only rejoin the free list on its own free."""
+    pool = KVPool(num_pages=6, page_size=2)
+    t = pool.allocate(3, 4)
+    pool.adopt(-5, t, 4)
+    pool.free(3)
+    pool.adopt(0, t, 4)
+    pool.free(-5)                            # evict under a live hit
+    assert pool.block_table(0) == t
+    assert all(pool.page_refcount(pg) == 1 for pg in t)
+    # the evicted pages are NOT free — a fresh allocate cannot steal them
+    fresh = pool.allocate(1, 6)
+    assert not set(fresh) & set(t)
+    _assert_invariants(pool)
+    pool.free(0)
+    pool.free(1)
+    assert pool.free_pages == 5
+    _assert_invariants(pool)
+
+
 def test_stats_fragmentation_accounting():
     pool = KVPool(num_pages=8, page_size=4)
     pool.allocate(0, 5)                      # 2 pages, 3 slack
@@ -258,7 +331,7 @@ except ImportError:                           # pragma: no cover
 
 if HAVE_HYP:
     op = st.tuples(st.sampled_from(["alloc", "extend", "free", "fork",
-                                    "adopt"]),
+                                    "adopt", "handoff"]),
                    st.integers(0, 5), st.integers(1, 24))
 
     @given(ops=st.lists(op, min_size=1, max_size=60),
@@ -277,6 +350,11 @@ if HAVE_HYP:
                 elif kind == "adopt":
                     pool.adopt(-(owner + 1), pool.block_table(owner),
                                pool.length(owner))
+                elif kind == "handoff":
+                    # §14 ship: a new owner adopts, the source slot frees
+                    pool.adopt(owner + 20, pool.block_table(owner),
+                               pool.length(owner))
+                    pool.free(owner)
                 else:
                     pool.free(owner)
             except (KeyError, ValueError, MemoryError):
@@ -336,6 +414,12 @@ if HAVE_HYP:
                     n = pool.length(owner)
                     pool.adopt(-(owner + 1), pool.block_table(owner), n)
                     expect[-(owner + 1)] = list(expect[owner])
+                elif kind == "handoff":
+                    n = pool.length(owner)
+                    pool.adopt(owner + 20, pool.block_table(owner), n)
+                    expect[owner + 20] = list(expect[owner])
+                    pool.free(owner)
+                    expect.pop(owner, None)
                 else:
                     pool.free(owner)
                     expect.pop(owner, None)

@@ -32,10 +32,13 @@ from repro.core.hlo_comm import parse_hlo_collectives, summarize
 from repro.kernels.quant_collective import (QUANT_DTYPES, QUANT_TOLERANCE,
                                             chunk_amax, chunk_dequantize,
                                             chunk_quantize, collective_qmax,
+                                            nibble_pack, nibble_unpack,
                                             scales_from_amax)
 from repro.kernels.quant_collective.ref import (chunk_amax_ref,
                                                 chunk_dequantize_ref,
-                                                chunk_quantize_ref)
+                                                chunk_quantize_ref,
+                                                nibble_pack_ref,
+                                                nibble_unpack_ref)
 from repro.models.transformer import get_model
 
 needs_mesh = pytest.mark.skipif(len(jax.devices()) < 4,
@@ -103,16 +106,47 @@ def test_zero_chunk_guard():
     np.testing.assert_array_equal(np.asarray(back)[:, :128], 0.0)
 
 
+def test_nibble_pack_unpack_roundtrip_every_value():
+    """Every int4 value pair survives pack -> unpack bitwise, in every
+    lane position, and the packed form is half the bytes."""
+    vals = np.arange(-8, 8, dtype=np.int8)           # full 4-bit range
+    q = jnp.asarray(np.stack(np.meshgrid(vals, vals), -1).reshape(16, 32))
+    packed = nibble_pack(q)
+    assert packed.dtype == jnp.uint8
+    assert packed.shape == (16, 16)
+    np.testing.assert_array_equal(np.asarray(nibble_unpack(packed)),
+                                  np.asarray(q))
+    with pytest.raises(ValueError):
+        nibble_pack(jnp.zeros((2, 3), jnp.int8))     # odd last axis
+
+
+def test_nibble_kernels_match_ref_bitwise(monkeypatch):
+    """Pallas pack/unpack (interpret mode) == the jnp oracle, bit for bit,
+    including ragged row counts that exercise the row padding."""
+    q = jnp.asarray(np.random.default_rng(0).integers(
+        -7, 8, size=(5, 38), dtype=np.int8))
+    want_packed = np.asarray(nibble_pack_ref(q))
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    got_packed = np.asarray(nibble_pack(q))
+    np.testing.assert_array_equal(got_packed, want_packed)
+    np.testing.assert_array_equal(
+        np.asarray(nibble_unpack(jnp.asarray(got_packed))),
+        np.asarray(nibble_unpack_ref(jnp.asarray(want_packed))))
+
+
 def test_collective_qmax_headroom_table():
     """qmax · t never exceeds the wire dtype's range — the property that
     makes the int8 reduce-scatter sum exact and the fp8 one unsaturated."""
     for t in (1, 2, 4, 8):
         assert collective_qmax("int8", t) * t <= 127
         assert collective_qmax("fp8", t) * t <= 448.0
+        # int4 keeps the full grid at every t: headroom comes from the
+        # packed path's exact int32 accumulation, not the qmax table
+        assert collective_qmax("int4", t) == 7.0
     assert collective_qmax("int8", 4) == 31.0
     assert collective_qmax("fp8", 4) == 112.0
     with pytest.raises(ValueError):
-        collective_qmax("int4", 2)
+        collective_qmax("int2", 2)
     with pytest.raises(ValueError):
         collective_qmax("int8", 0)
 
@@ -121,7 +155,8 @@ def test_quant_tolerance_contract_shape():
     """The numerics contract is explicit and single-homed: both wire modes
     carry a match floor and a drift ceiling, and fp8 (3 mantissa bits) is
     never promised tighter than int8."""
-    assert set(QUANT_TOLERANCE) == set(QUANT_DTYPES) == {"int8", "fp8"}
+    assert set(QUANT_TOLERANCE) == set(QUANT_DTYPES) == \
+        {"int8", "fp8", "int4"}
     for mode, tol in QUANT_TOLERANCE.items():
         assert set(tol) == {"token_match_floor", "logit_drift_ceiling"}
         assert 0.0 < tol["token_match_floor"] <= 1.0
@@ -130,6 +165,11 @@ def test_quant_tolerance_contract_shape():
         QUANT_TOLERANCE["int8"]["token_match_floor"]
     assert QUANT_TOLERANCE["fp8"]["logit_drift_ceiling"] >= \
         QUANT_TOLERANCE["int8"]["logit_drift_ceiling"]
+    # a 4-bit grid is never promised tighter than the 8-bit one
+    assert QUANT_TOLERANCE["int4"]["token_match_floor"] <= \
+        QUANT_TOLERANCE["fp8"]["token_match_floor"]
+    assert QUANT_TOLERANCE["int4"]["logit_drift_ceiling"] >= \
+        QUANT_TOLERANCE["fp8"]["logit_drift_ceiling"]
 
 
 # ---------------------------------------------------------------------------
@@ -173,6 +213,10 @@ def _simulate(x_ranks, t, quant, chunk):
     if quant == "int8":
         q = np.clip(np.rint(xp / scales[None, ..., None]), -127, 127)
         total = q.sum(0)                         # exact: |sum| ≤ t·qmax ≤ 127
+    elif quant == "int4":
+        q = np.rint(xp / scales[None, ..., None])    # |q| ≤ 7 by the scales
+        r = q.sum(0)                             # exact int32 block sum
+        total = np.clip(np.rint(r / t), -7, 7) * t   # requantize-by-t
     else:
         q = (xp / scales[None, ..., None]).astype(jnp.float8_e4m3fn)
         total = q[0].astype(np.float32)
@@ -203,6 +247,37 @@ def test_quantized_psum_matches_numpy_simulation_int8(h, chunk):
         return np.rint(np.pad(arr, pad).reshape(3, K, chunk)
                        / scales[..., None])
     np.testing.assert_array_equal(ints(got), ints(sim))
+
+
+@needs_pair
+@pytest.mark.parametrize("h,chunk", [(256, 128), (192, 64)])
+def test_quantized_psum_matches_numpy_simulation_int4(h, chunk):
+    """t=2 packed-nibble path: the compiled a2a two-step equals the numpy
+    oracle (quantize ±7 → exact block sum → requantize by t → dequant at
+    scales·t) — the requantized int payload recovered from the result is
+    bitwise the oracle's."""
+    t = 2
+    x = jax.random.normal(jax.random.PRNGKey(7), (t, 3, h), jnp.float32) * 2
+    got = _run_quantized_psum(x, t, "int4", chunk)
+    sim = _simulate(x, t, "int4", chunk)
+    np.testing.assert_allclose(got, sim, rtol=2e-6, atol=2e-6)
+    K = cm.quant_chunks(h, chunk)
+    pad = ((0, 0), (0, K * chunk - h))
+    scales = _sim_scales(x, t, "int4", chunk)
+
+    def ints(arr):
+        return np.rint(np.pad(arr, pad).reshape(3, K, chunk)
+                       / (t * scales[..., None]))
+    np.testing.assert_array_equal(ints(got), ints(sim))
+
+
+@needs_pair
+def test_quantized_psum_int4_rejects_unaligned_hidden():
+    """h must divide 2t — the packed a2a ships byte-aligned h/t blocks."""
+    t = 2
+    x = jnp.zeros((t, 2, 130), jnp.float32)      # 130 % 4 != 0
+    with pytest.raises(ValueError, match="2t"):
+        _run_quantized_psum(x, t, "int4", 64)
 
 
 @needs_pair
@@ -314,6 +389,48 @@ def test_tp_decode_hlo_counts_match_prediction_fp8():
 
 
 @needs_mesh
+@pytest.mark.parametrize("t", [2, 4])
+def test_tp_decode_hlo_counts_and_wire_bytes_match_prediction_int4(t):
+    """int4 (t,1): the compiled module shows the packed-nibble schedule —
+    2L u8 all-to-alls + 2L u8 all-gathers at HALF-byte wire width, 2L f32
+    amax ARs + the full-width embed AR — matching the commodel rows in
+    counts AND wire bytes (the u8 payload needs no upcast, so bytes check
+    exactly even on host CPU, unlike fp8)."""
+    cfg = get_config("llama32-3b").reduced(num_layers=2)
+    mesh = px.make_tp_mesh(t)
+    params = get_model(cfg).init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 2,
+                              cfg.vocab_size)
+    hlo = _decode_hlo(cfg, mesh, params, toks, t, True, "int4")
+    s = summarize(parse_hlo_collectives(hlo))
+    got_counts = {k: v["count"] for k, v in s.items()}
+    got_wires = {k: v["wire_bytes"] for k, v in s.items()}
+    want_counts, want_wires = _predicted_decode(cfg, t, 2, "int4")
+    assert got_counts == want_counts
+    for k in want_wires:
+        assert got_wires[k] == pytest.approx(want_wires[k]), k
+    L = cfg.num_layers
+    assert want_counts["alltoall"] == 2 * L
+    assert want_counts["allgather"] == 2 * L + 1
+    assert want_counts["allreduce"] == 2 * L + 1
+    assert "reducescatter" not in want_counts
+
+
+def test_closed_form_ratio_int4_flash_communication_target():
+    """Production configs at bf16: the packed 4-bit payload lands the
+    Flash-Communication ~0.28× headline — always < 0.35× and strictly
+    below the int8 two-step's ratio."""
+    for arch in ("llama32-3b", "llama31-8b", "llama2-13b"):
+        h = get_config(arch).d_model
+        for t in (2, 4, 8):
+            r4 = cm.quant_ar_wire_ratio(h, t, quant="int4", b=2)
+            assert r4 < 0.35, (arch, t, r4)
+            assert r4 < cm.quant_ar_wire_ratio(h, t, quant="int8", b=2)
+    assert cm.quant_ar_wire_ratio(3072, 2, quant="int4", b=2) == \
+        pytest.approx(0.265625)
+
+
+@needs_mesh
 @pytest.mark.parametrize("unroll", [True, False])
 def test_quant_hybrid_stage_hlo_matches_prediction(unroll):
     """(2,2) both unroll modes: every stage of the quantized hybrid engine
@@ -382,7 +499,7 @@ def test_backend_rejections():
                      quant_collectives="int8")
     with pytest.raises(ValueError, match="unknown quant"):
         make_backend("tp", cfg, params, num_slots=2, max_len=16, t=2,
-                     quant_collectives="int4")
+                     quant_collectives="int2")
 
 
 def test_slo_quant_lowers_volume_never_hurts_tpot():
